@@ -1,0 +1,44 @@
+"""Paper Fig. 1: geometry diagnostics of query token embeddings.
+
+(a) per-dimension marginal vs the theoretical uniform-sphere density
+    (1-x^2)^{(n-3)/2};
+(b) pairwise correlations between dimensions.
+
+Claim validated: encoder query embeddings are near-uniform enough on
+S^{n-1} that uniform MC sampling is a sound estimator basis.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.sampling import embedding_uniformity_report
+
+
+def run():
+    params = common.train_encoder(common.CFG_SPHERE)
+    c, d_emb, d_mask, q_emb, q_mask = common.encode_all(params,
+                                                        common.CFG_SPHERE)
+    vecs = q_emb.reshape(-1, q_emb.shape[-1])
+    rep = embedding_uniformity_report(vecs)
+    l1 = float(np.abs(np.asarray(rep["observed_density"])
+                      - np.asarray(rep["expected_density"])).mean())
+    return rep, l1
+
+
+def main():
+    rep, l1 = run()
+    common.csv_line(
+        "fig1/query_embedding_uniformity", 0.0,
+        f"marginal_l1_dist={l1:.4f};"
+        f"mean_abs_offdiag_corr={float(rep['mean_abs_off_corr']):.4f};"
+        f"max_abs_offdiag_corr={float(rep['max_abs_off_corr']):.4f}")
+    common.csv_line(
+        "fig1/CLAIM_weak_dim_correlations", 0.0,
+        f"holds={float(rep['mean_abs_off_corr']) < 0.25}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Fig. 3: degradation under aggressive pruning — VP vs LP-pruning
+vs random across remaining-token budgets down to ~6%.
+
+Claim validated: VP degrades gracefully at extreme budgets where
+LP-pruning (threshold-based dominance) collapses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import baselines, lp, metrics
+from repro.serve.retrieval import TokenIndex, maxsim_scores
+
+BUDGETS = (0.75, 0.5, 0.25, 0.12, 0.06)
+
+
+def run():
+    params = common.train_encoder(common.CFG_BALL, reg="sim", alpha=0.1)
+    c, d_emb, d_mask, q_emb, q_mask = common.encode_all(params,
+                                                        common.CFG_BALL)
+    index = TokenIndex.build(d_emb, d_mask)
+
+    def ndcg(keep):
+        s = maxsim_scores(index.with_keep(keep), q_emb, q_mask)
+        return float(metrics.ndcg_at_k(s, c.rel.astype(jnp.float32), 10))
+
+    # LP margins once; prune by threshold chosen per budget (the paper's
+    # theta sweeps the efficiency/effectiveness trade-off)
+    margins = jax.vmap(lambda d, m: lp.dominance_margin(d, m, n_iters=60))(
+        d_emb, d_mask)
+    flat = margins[d_mask]
+    out = []
+    for b in BUDGETS:
+        keep_vp = common.vp_keep(d_emb, d_mask, b)
+        theta = float(jnp.quantile(flat, 1 - b))
+        keep_lp = d_mask & (margins >= theta)
+        keep_lp = keep_lp | (jnp.cumsum(d_mask, -1) == 1)  # min 1 token
+        keep_rnd = baselines.random_prune(jax.random.PRNGKey(1), d_mask, b)
+        out.append((b, ndcg(keep_vp), ndcg(keep_lp), ndcg(keep_rnd)))
+    return out
+
+
+def main():
+    rows = run()
+    for b, vp, lpp, rnd in rows:
+        common.csv_line(f"fig3/remain_{int(b*100)}pct", 0.0,
+                        f"vp_ndcg={vp:.4f};lpp_ndcg={lpp:.4f};"
+                        f"random_ndcg={rnd:.4f}")
+    extreme = [r for r in rows if r[0] <= 0.12]
+    ok = all(vp >= lpp - 1e-6 for _, vp, lpp, _ in extreme)
+    gap = min(vp - lpp for _, vp, lpp, _ in extreme)
+    common.csv_line("fig3/CLAIM_vp_graceful_at_extreme", 0.0,
+                    f"holds={ok};min_gap_at_le12pct={gap:.4f}")
+
+
+if __name__ == "__main__":
+    main()

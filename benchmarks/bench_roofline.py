@@ -1,0 +1,57 @@
+"""Roofline summary benchmark: loads EXPERIMENTS/dryrun/*.json (produced
+by `python -m repro.launch.dryrun --all [--multi-pod]`) and prints the
+per-cell three-term roofline table as CSV.  This is the bench view of
+deliverable (g); EXPERIMENTS.md renders the same data as a table.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS",
+                          "dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        common.csv_line("roofline/NO_DATA", 0.0,
+                        "run python -m repro.launch.dryrun --all first")
+        return
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}/{r.get('variant')}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            common.csv_line(f"roofline/{cell}", 0.0, "status=skipped")
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            common.csv_line(f"roofline/{cell}", 0.0, "status=ERROR")
+            continue
+        n_ok += 1
+        a = r["analysis"]
+        common.csv_line(
+            f"roofline/{cell}", a["step_time_bound_s"] * 1e6,
+            f"compute_s={a['compute_s']:.3e};memory_s={a['memory_s']:.3e};"
+            f"collective_s={a['collective_s']:.3e};dominant={a['dominant']};"
+            f"roofline_frac={a['roofline_fraction']:.3f};"
+            f"useful_compute={a['useful_compute_fraction']:.3f}")
+    common.csv_line("roofline/SUMMARY", 0.0,
+                    f"ok={n_ok};skipped={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Shared benchmark setup: synthetic corpora + small trained ColBERT
+encoders (sphere & ball geometry), cached across benchmark modules.
+
+Sizes are CPU-scaled (DESIGN.md §6): the benchmarks validate the paper's
+claims as *invariants* (orderings, ratios, linearity), not absolute
+MS-MARCO numbers.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get as get_cfg
+from repro.core import voronoi
+from repro.core.sampling import sample_sphere
+from repro.data import synthetic
+from repro.models import colbert as colbert_lib
+from repro.train import checkpoint, optimizer, train_step
+
+CACHE = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache")
+
+import dataclasses
+
+SMOKE = get_cfg("colbert").smoke
+CFG_SPHERE = dataclasses.replace(SMOKE, name="bench-sphere", vocab=1024,
+                                 n_layers=2, d_model=48, n_heads=4,
+                                 d_ff=96, out_dim=24, query_len=8,
+                                 doc_len=32, norm="sphere")
+CFG_BALL = dataclasses.replace(CFG_SPHERE, name="bench-ball", norm="ball")
+
+N_DOCS, N_Q = 256, 64
+TRAIN_STEPS = 240
+BATCH = 16
+
+
+def corpus():
+    return synthetic.token_corpus(0, n_docs=N_DOCS, n_q=N_Q,
+                                  vocab=CFG_SPHERE.vocab,
+                                  m=CFG_SPHERE.doc_len,
+                                  l=CFG_SPHERE.query_len)
+
+
+def train_encoder(cfg, *, reg=None, alpha=0.0, steps=TRAIN_STEPS, seed=0):
+    """Train (or load cached) a small ColBERT encoder on the corpus."""
+    tag = f"{cfg.name}_{reg}_{alpha}_{steps}_{seed}"
+    ckpt_dir = os.path.join(CACHE, tag)
+    opt_cfg = optimizer.AdamWConfig(lr=2e-3, warmup_steps=20,
+                                    total_steps=steps)
+    state = train_step.make_train_state(
+        jax.random.PRNGKey(seed), lambda k: colbert_lib.init_params(k, cfg),
+        opt_cfg)
+    got, restored = checkpoint.restore_latest(ckpt_dir, state)
+    if restored is not None and got >= steps:
+        return restored["params"]
+    c = corpus()
+    step = jax.jit(train_step.colbert_train_step(cfg, opt_cfg, reg=reg,
+                                                 alpha=alpha),
+                   donate_argnums=(0,))
+    rel = np.asarray(c.rel)
+    pos = np.array([np.flatnonzero(rel[q])[0] if rel[q].any() else 0
+                    for q in range(N_Q)])
+    rng = np.random.default_rng(seed)
+    for s in range(steps):
+        qi = rng.integers(0, N_Q, BATCH)
+        batch = {"query_ids": c.q_ids[qi], "doc_ids": c.doc_ids[pos[qi]]}
+        state, m = step(state, batch)
+    checkpoint.save(ckpt_dir, steps, state)
+    return state["params"]
+
+
+def encode_all(params, cfg, c=None):
+    c = c or corpus()
+    d_emb, d_mask = colbert_lib.encode_docs(params, cfg, c.doc_ids)
+    q_emb, q_mask = colbert_lib.encode_queries(params, cfg, c.q_ids)
+    return c, jnp.asarray(d_emb, jnp.float32), d_mask, \
+        jnp.asarray(q_emb, jnp.float32), q_mask
+
+
+def vp_keep(d_emb, d_mask, keep_fraction, *, n_samples=2048, seed=1,
+            step_size=1):
+    samples = sample_sphere(jax.random.PRNGKey(seed), n_samples,
+                            d_emb.shape[-1])
+    ranks, errs, _ = voronoi.pruning_order_batch(d_emb, d_mask, samples,
+                                                 step_size=step_size)
+    return voronoi.global_keep_masks(ranks, errs, d_mask, keep_fraction)
+
+
+def timeit(fn, *args, repeat=3, warmup=1):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out
+
+
+def csv_line(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

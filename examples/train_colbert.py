@@ -1,0 +1,75 @@
+"""End-to-end training driver (deliverable b): train a ColBERT encoder
+from scratch on the planted-relevance token corpus with the paper's
+doc-sim regularizer, with checkpoint/restart fault tolerance.
+
+The default runs a CPU-scale encoder for a few hundred steps.  Pass
+--full to instantiate the paper's 12L/768 (~110M param) configuration —
+the same code path, sized for a real accelerator.
+
+Demonstrated:
+  * in-batch contrastive MaxSim loss + alpha * L^(sim) (paper Eq. 10),
+  * deterministic step-indexed pipeline with prefetch,
+  * checkpoint every N steps + automatic resume (kill & rerun to test),
+  * final eval: MRR@10 via two-stage retrieval, pre- vs post-pruning.
+
+Run:  PYTHONPATH=src python examples/train_colbert.py [--steps 300]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import metrics, voronoi
+from repro.core.sampling import sample_sphere
+from repro.data import synthetic
+from repro.launch import train as train_driver
+from repro.models import colbert as colbert_lib
+from repro.serve.retrieval import TokenIndex, maxsim_scores
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="use the paper-scale 12L/768 config")
+    ap.add_argument("--ckpt-dir", default="/tmp/colbert_example_ckpt")
+    args = ap.parse_args()
+
+    preset = "full" if args.full else "smoke"
+    out = train_driver.run("colbert", preset=preset, steps=args.steps,
+                           batch=8, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                           lr=2e-3)
+    print(f"trained to loss {out['final_loss']:.4f} in {out['wall_s']:.1f}s"
+          f" (resumed from step {out['start']})")
+
+    cfg = configs.get("colbert").smoke if not args.full else \
+        configs.get("colbert").config
+    params = out["state"]["params"]
+    corpus = synthetic.token_corpus(0, n_docs=256, n_q=64, vocab=cfg.vocab,
+                                    m=cfg.doc_len, l=cfg.query_len)
+    d_emb, d_mask = colbert_lib.encode_docs(params, cfg, corpus.doc_ids)
+    q_emb, q_mask = colbert_lib.encode_queries(params, cfg, corpus.q_ids)
+    index = TokenIndex.build(np.asarray(d_emb, np.float32), d_mask)
+
+    scores = maxsim_scores(index, q_emb, q_mask)
+    mrr = float(metrics.mrr_at_k(scores, corpus.rel, 10))
+    print(f"unpruned MRR@10 = {mrr:.4f}  ({index.storage()['tokens_kept']} "
+          f"token vectors)")
+
+    samples = sample_sphere(jax.random.PRNGKey(1), 2048, cfg.out_dim)
+    ranks, errs, _ = voronoi.pruning_order_batch(
+        jax.numpy.asarray(d_emb, jax.numpy.float32), d_mask, samples)
+    keep = voronoi.global_keep_masks(ranks, errs, d_mask, 0.5)
+    pruned = index.with_keep(keep)
+    scores_p = maxsim_scores(pruned, q_emb, q_mask)
+    mrr_p = float(metrics.mrr_at_k(scores_p, corpus.rel, 10))
+    st = pruned.storage()
+    print(f"VP @{st['remain_pct']:.0f}% MRR@10 = {mrr_p:.4f} "
+          f"({st['tokens_kept']} token vectors, "
+          f"{100 * mrr_p / max(mrr, 1e-9):.1f}% of unpruned)")
+
+
+if __name__ == "__main__":
+    main()

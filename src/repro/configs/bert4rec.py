@@ -1,0 +1,42 @@
+"""bert4rec [arXiv:1904.06690; paper]
+
+embed_dim=64 n_blocks=2 n_heads=2 seq_len=200 interaction=bidir-seq.
+Catalog: 1M items (matches retrieval_cand n_candidates).  Training uses
+sampled softmax (1024 negatives) — a full (B, S, 1M) logit tensor is not
+a real system's training path.
+
+BERT4Rec is the VP-applicable recsys arch (DESIGN.md §7): its sequence
+token embeddings are a late-interaction index over user histories.
+"""
+
+from repro.configs import base
+from repro.models.recsys import Bert4RecConfig
+
+CONFIG = Bert4RecConfig(name="bert4rec", n_items=1_000_000, embed_dim=64,
+                        n_blocks=2, n_heads=2, seq_len=200, d_ff=256)
+
+SMOKE = Bert4RecConfig(name="bert4rec-smoke", n_items=200, embed_dim=16,
+                       n_blocks=2, n_heads=2, seq_len=24, d_ff=32)
+
+SHAPES = {
+    "train_batch": base.ShapeSpec(
+        "train_batch", "train",
+        {"batch": 65_536, "seq_len": 200, "n_negatives": 1024,
+         "n_masked": 30}),
+    "serve_p99": base.ShapeSpec(
+        "serve_p99", "serve",
+        {"batch": 512, "seq_len": 200, "full_catalog": True}),
+    "serve_bulk": base.ShapeSpec(
+        "serve_bulk", "serve",
+        {"batch": 262_144, "seq_len": 200, "full_catalog": False}),
+    "retrieval_cand": base.ShapeSpec(
+        "retrieval_cand", "retrieval",
+        {"batch": 1, "seq_len": 200, "n_candidates": 1_000_000}),
+}
+
+base.register(base.ArchEntry(
+    arch_id="bert4rec", family="recsys", config=CONFIG, smoke=SMOKE,
+    shapes=SHAPES,
+    notes="encoder-only: serve_* are encoder inference (no decode); "
+          "serve_p99 ranks the full 1M catalog, serve_bulk scores given "
+          "(user, item) pairs offline"))

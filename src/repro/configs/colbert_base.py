@@ -1,0 +1,42 @@
+"""colbert — the paper's own architecture (ColBERTv2-style encoder).
+
+BERT-base backbone (12L/768/12H) + 128-d late-interaction projection.
+Not part of the assigned 10-arch pool; registered so the launcher,
+dry-run and training driver treat the paper's model uniformly.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.colbert import ColBERTConfig
+
+CONFIG = ColBERTConfig(name="colbert", vocab=30_522, n_layers=12,
+                       d_model=768, n_heads=12, d_ff=3072, out_dim=128,
+                       query_len=32, doc_len=180, norm="sphere",
+                       param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+
+SMOKE = ColBERTConfig(name="colbert-smoke", vocab=512, n_layers=2,
+                      d_model=64, n_heads=4, d_ff=128, out_dim=32,
+                      query_len=8, doc_len=24, norm="sphere")
+
+SHAPES = {
+    "train_contrastive": base.ShapeSpec(
+        "train_contrastive", "train",
+        {"batch": 2048, "query_len": 32, "doc_len": 180}),
+    "encode_corpus": base.ShapeSpec(
+        "encode_corpus", "serve", {"batch": 4096, "doc_len": 180}),
+    "prune_index": base.ShapeSpec(
+        "prune_index", "serve",
+        {"docs_per_block": 1024, "doc_len": 180, "n_samples": 10_000,
+         "out_dim": 128}),
+    "rerank": base.ShapeSpec(    # top-1024 (paper reranks top-1000;
+        "rerank", "serve",      # 1024 = shard-aligned over model=16)
+        {"n_queries": 128, "n_candidates": 1024, "query_len": 32,
+         "doc_len": 180}),
+}
+
+base.register(base.ArchEntry(
+    arch_id="colbert", family="retrieval", config=CONFIG, smoke=SMOKE,
+    shapes=SHAPES,
+    notes="the paper's model; prune_index is the Voronoi-pruning batch "
+          "job (the technique itself as a dry-run cell)"))

@@ -1,0 +1,35 @@
+"""granite-moe-3b-a800m [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+
+32L d_model=1536 24H (GQA kv=8) d_ff=512/expert vocab=49155,
+MoE 40 experts top-8 (assignment lists both "40e" and "32 experts";
+we follow the 40e/top-8 spec line and note the discrepancy here).
+~3.3B total / ~0.8B active params, tied embeddings.
+`long_500k` is served with a windowed-attention mode (window 8192) —
+documented deviation, granite's public config is full attention.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.transformer import LMConfig
+
+CONFIG = LMConfig(
+    name="granite-moe-3b-a800m",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab=49155, moe_experts=40, moe_top_k=8,
+    tie_embeddings=True, attn_window_serving=8192, attn_chunk=1024,
+)
+
+SMOKE = LMConfig(
+    name="granite-moe-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=32, vocab=128, moe_experts=8, moe_top_k=2, tie_embeddings=True,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32, remat=False,
+)
+
+SHAPES = base.lm_shapes(long_ok=True)  # windowed serving mode (see above)
+
+base.register(base.ArchEntry(
+    arch_id="granite-moe-3b-a800m", family="lm", config=CONFIG,
+    smoke=SMOKE, shapes=SHAPES,
+    notes="MoE 40e top-8; long_500k via attn_window_serving=8192"))

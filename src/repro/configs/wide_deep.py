@@ -1,0 +1,21 @@
+"""wide-deep [arXiv:1606.07792; paper]
+
+n_sparse=40 embed_dim=32 mlp=1024-512-256 interaction=concat.
+Tables: 40 x 1M x 32 (+ 40 x 1M wide scalar table).
+"""
+
+from repro.configs import base
+from repro.configs.dlrm_rm2 import RECSYS_SHAPES
+from repro.models.recsys import WideDeepConfig
+
+CONFIG = WideDeepConfig(name="wide-deep", n_sparse=40, embed_dim=32,
+                        table_rows=1_048_576, mlp=(1024, 512, 256))
+
+SMOKE = WideDeepConfig(name="wide-deep-smoke", n_sparse=40, embed_dim=8,
+                       table_rows=100, mlp=(32, 16))
+
+SHAPES = dict(RECSYS_SHAPES)
+
+base.register(base.ArchEntry(
+    arch_id="wide-deep", family="recsys", config=CONFIG, smoke=SMOKE,
+    shapes=SHAPES, notes="wide scalar table + deep concat MLP"))

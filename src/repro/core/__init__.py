@@ -1,0 +1,25 @@
+"""Core library: the paper's Voronoi Pruning contribution + baselines."""
+
+from repro.core import baselines, lp, metrics, regularizers, sampling, scoring
+from repro.core.voronoi import (
+    CellState,
+    assign_cells,
+    beam_pruning_order,
+    estimate_errors,
+    global_keep_masks,
+    keep_mask_from_order,
+    mean_error,
+    mean_error_batch,
+    prune_to_size,
+    pruning_order,
+    pruning_order_batch,
+    token_errors,
+)
+
+__all__ = [
+    "baselines", "lp", "metrics", "regularizers", "sampling", "scoring",
+    "CellState", "assign_cells", "beam_pruning_order", "estimate_errors",
+    "global_keep_masks", "keep_mask_from_order", "mean_error",
+    "mean_error_batch", "prune_to_size", "pruning_order",
+    "pruning_order_batch", "token_errors",
+]

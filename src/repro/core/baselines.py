@@ -1,0 +1,99 @@
+"""Pruning baselines reproduced from the paper's §5.3.
+
+Learning-free: first-k / positional, IDF, stopword, attention-score.
+Learned/optimization: Norm-Pruning (theta=0.5) and LP-Pruning (theta=0.7)
+from Zong & Piwowarski [27] (LP re-implemented in `repro.core.lp`).
+
+All baselines share the keep-mask contract of `repro.core.voronoi`:
+inputs are padded token batches + masks, output is a boolean keep mask
+with at least one surviving token per document.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lp import lp_prunable
+
+
+def _ensure_one(keep: jax.Array, d_mask: jax.Array) -> jax.Array:
+    """Never prune a document to zero tokens: resurrect its first real one."""
+    empty = ~jnp.any(keep & d_mask, axis=-1, keepdims=True)
+    first_real = jnp.cumsum(d_mask, axis=-1) == 1
+    return (keep | (empty & first_real)) & d_mask
+
+
+def first_k(d_mask: jax.Array, keep_fraction: float) -> jax.Array:
+    """Positional pruning: keep the first ceil(f * n_real) tokens [20]."""
+    n_real = jnp.sum(d_mask, axis=-1, keepdims=True)
+    k = jnp.ceil(keep_fraction * n_real)
+    pos = jnp.cumsum(d_mask, axis=-1)  # 1-based position among real tokens
+    return _ensure_one(d_mask & (pos <= k), d_mask)
+
+
+def idf_prune(token_ids: jax.Array, d_mask: jax.Array, idf: jax.Array,
+              keep_fraction: float) -> jax.Array:
+    """Keep the highest-IDF fraction of tokens per document [1, 20]."""
+    scores = jnp.where(d_mask, idf[token_ids], -jnp.inf)
+    return _keep_top_fraction(scores, d_mask, keep_fraction)
+
+
+def stopword_prune(token_ids: jax.Array, d_mask: jax.Array,
+                   is_stopword: jax.Array) -> jax.Array:
+    """Drop tokens whose vocabulary id is flagged as a stopword [1]."""
+    return _ensure_one(d_mask & ~is_stopword[token_ids], d_mask)
+
+
+def attention_prune(attn_received: jax.Array, d_mask: jax.Array,
+                    keep_fraction: float) -> jax.Array:
+    """Keep tokens receiving the most encoder attention mass [17, 20].
+
+    ``attn_received`` is the per-token mean attention column-sum exported
+    by the encoder (see models.colbert.encode_with_attention).
+    """
+    scores = jnp.where(d_mask, attn_received, -jnp.inf)
+    return _keep_top_fraction(scores, d_mask, keep_fraction)
+
+
+def norm_prune(d_embs: jax.Array, d_mask: jax.Array,
+               theta: float = 0.5) -> jax.Array:
+    """[27] Norm-Pruning: drop tokens with ||d||_2 < theta (requires the
+    non-unit-norm projection used when fine-tuning with the regularizers)."""
+    norms = jnp.linalg.norm(d_embs, axis=-1)
+    return _ensure_one(d_mask & (norms >= theta), d_mask)
+
+
+def lp_prune(d_embs: jax.Array, d_mask: jax.Array, theta: float = 0.7,
+             *, n_iters: int = 200, lr: float = 0.1) -> jax.Array:
+    """[27] LP-Pruning: drop token i if no query in the unit ball gives it
+    a dominant margin above ``theta`` (see repro.core.lp)."""
+    prunable = lp_prunable(d_embs, d_mask, theta, n_iters=n_iters, lr=lr)
+    return _ensure_one(d_mask & ~prunable, d_mask)
+
+
+def _keep_top_fraction(scores: jax.Array, d_mask: jax.Array,
+                       keep_fraction: float) -> jax.Array:
+    """Per-document top-fraction keep mask from arbitrary token scores."""
+    n_real = jnp.sum(d_mask, axis=-1, keepdims=True)
+    k = jnp.ceil(keep_fraction * n_real)
+    order = jnp.argsort(-scores, axis=-1)
+    rank = jnp.argsort(order, axis=-1)  # rank of each token by score desc
+    return _ensure_one(d_mask & (rank < k), d_mask)
+
+
+def random_prune(key: jax.Array, d_mask: jax.Array,
+                 keep_fraction: float) -> jax.Array:
+    """Uniform-random keep mask — the sanity floor used in tests."""
+    scores = jax.random.uniform(key, d_mask.shape)
+    return _keep_top_fraction(scores, d_mask, keep_fraction)
+
+
+def build_idf(token_ids: jax.Array, d_mask: jax.Array, vocab: int) -> jax.Array:
+    """Corpus IDF table: log(n_docs / (1 + df))."""
+    n_docs = token_ids.shape[0]
+    present = jnp.zeros((n_docs, vocab), bool).at[
+        jnp.arange(n_docs)[:, None], jnp.where(d_mask, token_ids, 0)
+    ].set(d_mask)
+    df = present.sum(0)
+    return jnp.log(n_docs / (1.0 + df))

@@ -1,0 +1,58 @@
+"""Retrieval metrics (MRR@k, nDCG@k, Recall@k) + the Mean-Error/metric
+linear-fit analysis of paper §6.4 (Fig. 6)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rank_of_relevant(scores: jnp.ndarray, rel: jnp.ndarray) -> jnp.ndarray:
+    """1-based rank of each query's best-ranked relevant doc.
+
+    scores: (n_q, n_docs); rel: bool (n_q, n_docs).
+    """
+    order = jnp.argsort(-scores, axis=-1)
+    rel_sorted = jnp.take_along_axis(rel, order, axis=-1)
+    pos = jnp.argmax(rel_sorted, axis=-1) + 1
+    has_rel = jnp.any(rel, axis=-1)
+    return jnp.where(has_rel, pos, jnp.iinfo(jnp.int32).max)
+
+
+def mrr_at_k(scores: jnp.ndarray, rel: jnp.ndarray, k: int = 10) -> jnp.ndarray:
+    r = rank_of_relevant(scores, rel)
+    return jnp.mean(jnp.where(r <= k, 1.0 / r, 0.0))
+
+
+def ndcg_at_k(scores: jnp.ndarray, gains: jnp.ndarray, k: int = 10) -> jnp.ndarray:
+    """gains: graded relevance (n_q, n_docs) (binary works too)."""
+    k = min(k, scores.shape[-1])
+    order = jnp.argsort(-scores, axis=-1)[:, :k]
+    g = jnp.take_along_axis(gains, order, axis=-1)
+    disc = 1.0 / jnp.log2(jnp.arange(2, k + 2, dtype=jnp.float32))
+    dcg = (g * disc[None, :]).sum(-1)
+    ideal = jnp.sort(gains, axis=-1)[:, ::-1][:, :k]
+    idcg = (ideal * disc[None, :]).sum(-1)
+    return jnp.mean(jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-9), 0.0))
+
+
+def recall_at_k(scores: jnp.ndarray, rel: jnp.ndarray, k: int = 10) -> jnp.ndarray:
+    order = jnp.argsort(-scores, axis=-1)[:, :k]
+    hit = jnp.take_along_axis(rel, order, axis=-1).any(-1)
+    has = rel.any(-1)
+    return jnp.where(has.sum() > 0,
+                     hit.sum() / jnp.maximum(has.sum(), 1), 0.0)
+
+
+def linear_fit(x, y) -> dict:
+    """Least-squares fit + R^2 for the ME vs nDCG@10 analysis (§6.4)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    (slope, intercept), res, *_ = np.linalg.lstsq(A, y, rcond=None)
+    pred = slope * x + intercept
+    ss_res = float(np.sum((y - pred) ** 2))
+    ss_tot = float(np.sum((y - np.mean(y)) ** 2))
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    return {"slope": float(slope), "intercept": float(intercept), "r2": r2}

@@ -1,0 +1,46 @@
+"""Fine-tuning regularizers from [27], used by the paper (§5.1, Eq. 9-10).
+
+Both operate on the padded document token embeddings of one document and
+average over the batch.  They are added to the contrastive ColBERT loss
+as ``loss + alpha * reg`` with the paper's alpha grid {0.01, 0.1, 0.8}.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l1_reg(d_embs: jnp.ndarray, d_mask: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 9: L^(L1) = (1/n) sum_d ||d||_1 per document, batch-averaged."""
+    l1 = jnp.where(d_mask, jnp.abs(d_embs).sum(-1), 0.0)
+    n = jnp.maximum(d_mask.sum(-1), 1)
+    return jnp.mean(l1.sum(-1) / n)
+
+
+def doc_sim_reg(d_embs: jnp.ndarray, d_mask: jnp.ndarray,
+                eps: float = 0.01) -> jnp.ndarray:
+    """Eq. 10: L^(sim) = -1/(n(n-1)) sum_d (1-||d||_2)
+                          sum_{d' != d} [d.d']_+ / (||d||_2 + eps).
+
+    Pushes redundant tokens (high positive similarity to siblings) toward
+    the center of the ball so Norm/LP pruning can discard them.
+    """
+    norms = jnp.linalg.norm(d_embs, axis=-1)               # (B, m)
+    dots = jnp.einsum("bid,bjd->bij", d_embs, d_embs)      # (B, m, m)
+    pos = jnp.maximum(dots, 0.0)
+    pair_mask = (d_mask[:, :, None] & d_mask[:, None, :] &
+                 ~jnp.eye(d_mask.shape[-1], dtype=bool)[None])
+    sim_sum = jnp.where(pair_mask, pos, 0.0).sum(-1)       # (B, m)
+    per_tok = (1.0 - norms) * sim_sum / (norms + eps)
+    per_tok = jnp.where(d_mask, per_tok, 0.0)
+    n = jnp.maximum(d_mask.sum(-1), 2)
+    return -jnp.mean(per_tok.sum(-1) / (n * (n - 1)))
+
+
+def ball_projection(raw: jnp.ndarray) -> jnp.ndarray:
+    """[27]'s projection controlling ||d|| in (0, 1): instead of the usual
+    L2 normalization *onto* the sphere, map embeddings *into* the ball via
+    x -> x * sigmoid(||x||) / ||x||  (norm becomes sigmoid(||x||) < 1)."""
+    n = jnp.linalg.norm(raw, axis=-1, keepdims=True)
+    scale = jnp.tanh(n) * (1.0 - 1e-3)   # strictly inside the unit ball
+    return raw * jnp.where(n > 0, scale / jnp.maximum(n, 1e-9), 0.0)

@@ -1,0 +1,101 @@
+"""Monte-Carlo query samplers over the unit sphere / ball (paper §4.2).
+
+The pruning error (Eq. 6) is an expectation over queries uniform in the
+unit ball B^n.  Eq. 7 reduces it to (1/2) x the same expectation over the
+unit sphere S^{n-1}, so the estimator samples unit-norm queries only.
+Both samplers are provided (the ball sampler backs tests of the radial
+identity), together with the theoretical marginal densities used for the
+Fig. 1 distribution diagnostics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def sample_sphere(key: jax.Array, n: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    """n i.i.d. samples uniform on the unit sphere S^{dim-1}."""
+    x = jax.random.normal(key, (n, dim), dtype=jnp.float32)
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def sample_ball(key: jax.Array, n: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    """n i.i.d. samples uniform in the unit ball B^dim.
+
+    Radius CDF is r^dim, so r = u^{1/dim} with u ~ U(0,1).
+    """
+    kd, kr = jax.random.split(key)
+    d = sample_sphere(kd, n, dim, jnp.float32)
+    u = jax.random.uniform(kr, (n, 1), dtype=jnp.float32)
+    r = u ** (1.0 / dim)
+    return (d * r).astype(dtype)
+
+
+def sphere_marginal_logpdf(x: jax.Array, dim: int) -> jax.Array:
+    r"""Log marginal density of one coordinate of a uniform S^{dim-1} sample.
+
+    p(x) \propto (1 - x^2)^{(dim-3)/2}  on [-1, 1].
+    For dim = 128 the exponent is 62.5 — the curve shown in paper Fig. 1a.
+    """
+    from jax.scipy.special import gammaln
+
+    k = (dim - 3.0) / 2.0
+    log_norm = (
+        gammaln(dim / 2.0) - gammaln((dim - 1.0) / 2.0) - 0.5 * jnp.log(jnp.pi)
+    )
+    return log_norm + k * jnp.log1p(-jnp.clip(x, -1.0, 1.0) ** 2)
+
+
+def ball_marginal_logpdf(x: jax.Array, dim: int) -> jax.Array:
+    r"""Log marginal density of one coordinate of a uniform B^dim sample.
+
+    p(x) \propto (1 - x^2)^{(dim-1)/2} on [-1, 1].
+    """
+    from jax.scipy.special import gammaln
+
+    k = (dim - 1.0) / 2.0
+    log_norm = (
+        gammaln(dim / 2.0 + 1.0)
+        - gammaln((dim + 1.0) / 2.0)
+        - 0.5 * jnp.log(jnp.pi)
+    )
+    return log_norm + k * jnp.log1p(-jnp.clip(x, -1.0, 1.0) ** 2)
+
+
+def embedding_uniformity_report(vectors: jax.Array, n_bins: int = 41) -> dict:
+    """Fig. 1 diagnostics: per-dimension histogram vs theoretical marginal,
+    and binned pairwise correlations between embedding dimensions.
+
+    Returns a dict of numpy-friendly arrays (histograms, expected density,
+    correlation-magnitude histogram) used by the benchmark harness.
+    """
+    v = jnp.asarray(vectors, jnp.float32)
+    n, dim = v.shape
+    edges = jnp.linspace(-1.0, 1.0, n_bins + 1)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    # Histogram of an arbitrary dimension (paper uses dim 104).
+    probe = v[:, min(104, dim - 1)]
+    hist, _ = jnp.histogram(probe, bins=edges, density=True)
+    expected = jnp.exp(sphere_marginal_logpdf(centers, dim))
+    # Pairwise correlations.
+    vc = v - v.mean(0, keepdims=True)
+    cov = (vc.T @ vc) / (n - 1)
+    sd = jnp.sqrt(jnp.clip(jnp.diag(cov), 1e-12))
+    corr = cov / (sd[:, None] * sd[None, :])
+    off = corr[~jnp.eye(dim, dtype=bool)]
+    corr_hist, corr_edges = jnp.histogram(off, bins=jnp.linspace(-1.0, 1.0, 81))
+    return {
+        "bin_centers": centers,
+        "observed_density": hist,
+        "expected_density": expected,
+        "corr_hist": corr_hist,
+        "corr_edges": corr_edges,
+        "max_abs_off_corr": jnp.max(jnp.abs(off)),
+        "mean_abs_off_corr": jnp.mean(jnp.abs(off)),
+    }

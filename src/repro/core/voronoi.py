@@ -1,0 +1,435 @@
+"""Voronoi Pruning — the paper's core contribution (§4, Alg. 1).
+
+Casting token pruning as Voronoi-cell mass estimation:
+
+  *  ``V_i = {q : d_i = argmax_d q.d}``  (Eq. 5) — the cell of token i;
+  *  ``Error(d_i) = E_{q in V_i}[q.d_i - second_best(q)]``  (Eq. 6–7);
+  *  Monte-Carlo estimate over N unit-sphere samples (Eq. 8);
+  *  iterative greedy removal with incremental cell reassignment (Alg. 1);
+  *  corpus-level ("global") pruning by merging per-document orders;
+  *  optional step-size > 1 and beam-search variants (ablations, §6.2).
+
+Reference semantics live here in pure jnp (fixed shapes, jit/vmap/scan
+friendly).  The production TPU path fuses the (best, second) reduction
+with the sample x token matmul in ``repro.kernels.maxsim_top2`` so the
+(N, m) score matrix never leaves VMEM; this module is its oracle and the
+algorithmic layer above it.
+
+Shape conventions: one document is (m, dim) + bool mask (m,); samples
+(N, dim).  Batch versions vmap over the leading doc axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import NEG_INF, top2_scores
+
+__all__ = [
+    "CellState",
+    "assign_cells",
+    "token_errors",
+    "estimate_errors",
+    "pruning_order",
+    "pruning_order_batch",
+    "beam_pruning_order",
+    "keep_mask_from_order",
+    "prune_to_size",
+    "global_keep_masks",
+    "mean_error",
+    "mean_error_batch",
+]
+
+
+class CellState(NamedTuple):
+    """Per-sample Voronoi bookkeeping under the current alive-token set."""
+
+    best: jax.Array      # (N,)  best dot product
+    second: jax.Array    # (N,)  second-best dot product
+    bi: jax.Array        # (N,)  index of best token  (cell membership)
+    si: jax.Array        # (N,)  index of second-best token
+
+
+def _top2_from_scores(scores: jax.Array, alive: jax.Array) -> CellState:
+    """(best, second, argbest, argsecond) over alive tokens; scores (N, m)."""
+    s = jnp.where(alive[None, :], scores, NEG_INF)
+    bi = jnp.argmax(s, axis=-1)
+    best = jnp.take_along_axis(s, bi[:, None], axis=-1)[:, 0]
+    s2 = s.at[jnp.arange(s.shape[0]), bi].set(NEG_INF)
+    si = jnp.argmax(s2, axis=-1)
+    second = jnp.take_along_axis(s2, si[:, None], axis=-1)[:, 0]
+    return CellState(best, second, bi, si)
+
+
+def _top2_single_pass(scores: jax.Array, alive: jax.Array) -> CellState:
+    """Single-pass top-2 via a variadic ``lax.reduce`` (§Perf iteration).
+
+    The reference path reads the (N, m) score matrix ~4x per pruning step
+    (mask materialization, argmax, masked-set, second argmax).  A custom
+    top-2 reduction monoid does it in ONE pass, and — unlike
+    ``jax.lax.top_k``, whose TopK custom-call makes GSPMD all-gather the
+    batch axis — ``lax.reduce`` partitions over the doc/sample dims.
+    Tie-breaking differs from jnp.argmax only on exactly-equal scores.
+    """
+    n, m = scores.shape
+    s = jnp.where(alive[None, :], scores, NEG_INF).astype(jnp.float32)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    neg = jnp.full((n, m), NEG_INF, jnp.float32)
+    none = jnp.full((n, m), -1, jnp.int32)
+
+    def comb(a, b):
+        a1, ai1, a2, ai2 = a
+        b1, bi1, b2, bi2 = b
+        a_wins = a1 >= b1
+        m1 = jnp.where(a_wins, a1, b1)
+        i1 = jnp.where(a_wins, ai1, bi1)
+        # runner-up: loser of the firsts vs winner's own second
+        lose1 = jnp.where(a_wins, b1, a1)
+        lose1_i = jnp.where(a_wins, bi1, ai1)
+        own2 = jnp.where(a_wins, a2, b2)
+        own2_i = jnp.where(a_wins, ai2, bi2)
+        take_lose = lose1 >= own2
+        m2 = jnp.where(take_lose, lose1, own2)
+        i2 = jnp.where(take_lose, lose1_i, own2_i)
+        return m1, i1, m2, i2
+
+    init = (jnp.float32(NEG_INF), jnp.int32(-1), jnp.float32(NEG_INF),
+            jnp.int32(-1))
+    b1, i1, b2, i2 = jax.lax.reduce((s, idx, neg, none), init, comb,
+                                    dimensions=(1,))
+    return CellState(b1, b2, i1, i2)
+
+
+def assign_cells(d_emb: jax.Array, d_mask: jax.Array,
+                 samples: jax.Array) -> CellState:
+    """Initial cell assignment for all samples (Eq. 5)."""
+    best, second, bi, si = top2_scores(samples, d_emb, d_mask)
+    return CellState(best, second, bi, si)
+
+
+def token_errors(state: CellState, alive: jax.Array, n_samples: int) -> jax.Array:
+    """Eq. 8: per-token expected pruning error from the current cell state.
+
+    err[i] = (1/N) * sum_{q : bi(q) = i} (best(q) - second(q)).
+    Dead tokens get +inf (never selectable).  Tokens with empty cells get
+    exactly 0 — removing them is free *right now*, matching Eq. 8.
+    """
+    m = alive.shape[0]
+    gap = state.best - state.second
+    err = jnp.zeros((m,), state.best.dtype).at[state.bi].add(gap) / n_samples
+    return jnp.where(alive, err, jnp.inf)
+
+
+def estimate_errors(d_emb: jax.Array, d_mask: jax.Array,
+                    samples: jax.Array) -> jax.Array:
+    """One-shot (non-iterative) Monte-Carlo error estimate per token."""
+    state = assign_cells(d_emb, d_mask, samples)
+    return token_errors(state, d_mask, samples.shape[0])
+
+
+@functools.partial(jax.jit, static_argnames=("step_size", "materialize",
+                                              "single_pass", "bf16_scores"))
+def pruning_order(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
+                  *, step_size: int = 1, materialize: bool = True,
+                  single_pass: bool = False, bf16_scores: bool = False
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Iterative Voronoi pruning (Alg. 1) producing a full removal order.
+
+    Returns ``(rank, err_at_removal, order)`` where
+
+      * ``rank[i]``  — removal step of token i (0 = pruned first); the final
+        surviving token and padded slots get rank m-1 / m and err ``inf``;
+      * ``err_at_removal[i]`` — Eq. 8 error of token i at the step it was
+        removed (the quantity merged across docs for global pruning);
+      * ``order[s]`` — token removed at step s (-1 for invalid steps).
+
+    ``step_size > 1`` removes the ``step_size`` lowest-error tokens per
+    iteration between recomputations (§6.2 "Effect of Step Size").
+    ``materialize`` keeps the (N, m) score matrix resident (reference
+    path); the TPU path recomputes tiles via the Pallas kernel instead.
+    """
+    del materialize  # reference path always materializes
+    n, m = samples.shape[0], d_emb.shape[0]
+    scores = samples @ d_emb.T
+    scores = jnp.where(d_mask[None, :], scores, NEG_INF)
+    if bf16_scores:
+        scores = scores.astype(jnp.bfloat16)
+    top2 = _top2_single_pass if single_pass else _top2_from_scores
+
+    state0 = top2(scores, d_mask)
+    n_steps = -(-(m - 1) // step_size)  # ceil: leave >= 1 token alive
+
+    def body(carry, step):
+        alive, st = carry
+        n_alive = jnp.sum(alive)
+        err = token_errors(st, alive, n)
+        # Select up to `step_size` cheapest alive tokens, but never the
+        # last survivor.  neg-top_k over err with +inf on dead tokens.
+        k_want = jnp.minimum(step_size, jnp.maximum(n_alive - 1, 0))
+        neg = -err
+        vals, idxs = jax.lax.top_k(neg, step_size)         # cheapest first
+        take = jnp.arange(step_size) < k_want
+        sel_idx = jnp.where(take, idxs, -1)
+        sel_err = jnp.where(take, -vals, jnp.inf)
+        new_alive = alive
+        for j in range(step_size):
+            new_alive = jnp.where(
+                sel_idx[j] >= 0, new_alive.at[sel_idx[j]].set(False), new_alive)
+        removed_any = k_want > 0
+        # Incremental reassignment: only samples whose best or second died
+        # need new top-2; everyone else keeps their triple (Alg.1 + §4.2
+        # "only the queries previously assigned to its Voronoi cell need to
+        # be reassigned").  Fixed shapes -> recompute vectorized, select.
+        died_b = ~new_alive[st.bi]
+        died_s = ~new_alive[st.si]
+        affected = (died_b | died_s) & removed_any
+        fresh = top2(scores, new_alive)
+        st2 = CellState(
+            best=jnp.where(affected, fresh.best, st.best),
+            second=jnp.where(affected, fresh.second, st.second),
+            bi=jnp.where(affected, fresh.bi, st.bi),
+            si=jnp.where(affected, fresh.si, st.si),
+        )
+        return (new_alive, st2), (sel_idx, sel_err)
+
+    (_, _), (order_steps, err_steps) = jax.lax.scan(
+        body, (d_mask, state0), jnp.arange(n_steps))
+    order = order_steps.reshape(-1)                        # (n_steps*step,)
+    errs = err_steps.reshape(-1)
+
+    # rank[i]: position of token i in the flattened removal sequence.
+    rank = jnp.full((m,), m, jnp.int32)
+    err_at_removal = jnp.full((m,), jnp.inf, errs.dtype)
+    pos = jnp.arange(order.shape[0], dtype=jnp.int32)
+    valid = order >= 0
+    safe_order = jnp.where(valid, order, m)  # scatter pad -> dropped row
+    rank = rank.at[safe_order].min(jnp.where(valid, pos, m),
+                                   mode="drop")
+    err_at_removal = err_at_removal.at[safe_order].min(
+        jnp.where(valid, errs, jnp.inf), mode="drop")
+    # Final survivor: rank m-1 equivalent (last), err inf (never prune).
+    return rank, err_at_removal, order
+
+
+@functools.partial(jax.jit, static_argnames=("shortlist", "rescan_every",
+                                              "bf16_scores"))
+def pruning_order_shortlist(d_emb: jax.Array, d_mask: jax.Array,
+                            samples: jax.Array, *, shortlist: int = 16,
+                            rescan_every: int = 8,
+                            bf16_scores: bool = False
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """EXACT fast path for :func:`pruning_order` (§Perf iteration).
+
+    The reference recomputes a masked top-2 over all m tokens for every
+    sample at every removal step — O(N*m) HBM traffic per step.  Here
+    each sample instead keeps its top-`shortlist` candidate tokens; the
+    per-step reduction touches only (N, K).  A full (N, m) rescan runs
+    once per `rescan_every` steps as the *outer* level of a nested scan
+    (no data-dependent control flow).
+
+    Exactness: between rescans at most `rescan_every - 1` tokens die, so
+    the true top-2 of the alive set is always contained in the last
+    rescan's top-(2 + rescan_every - 1) <= K entries.  With the defaults
+    (K=16, R=8) the result is bit-identical to the reference (tested).
+
+    This is the algorithmic twin of the fused Pallas kernel: on TPU the
+    rescan is the `maxsim_top2` kernel pass and the shortlist lives in
+    VMEM across steps.
+    """
+    if rescan_every > shortlist - 1:
+        raise ValueError("need shortlist >= rescan_every + 1 for exactness")
+    n, m = samples.shape[0], d_emb.shape[0]
+    K = min(shortlist, m)
+    R = rescan_every
+    scores = samples @ d_emb.T
+    scores = jnp.where(d_mask[None, :], scores, NEG_INF)
+    if bf16_scores:
+        scores = scores.astype(jnp.bfloat16)
+    n_steps = m - 1
+    n_outer = -(-n_steps // R)
+
+    def outer(carry, _):
+        alive, rank, err_at, next_pos = carry
+        # full rescan: per-sample top-K of alive tokens
+        s = jnp.where(alive[None, :], scores, NEG_INF).astype(jnp.float32)
+        vals, idxs = jax.lax.top_k(s, K)                    # (N, K)
+
+        def inner(icarry, _):
+            alive, rank, err_at, pos = icarry
+            valid = alive[idxs]                             # (N, K) gather
+            v = jnp.where(valid, vals, NEG_INF)
+            b1 = jnp.max(v, axis=1)
+            a1 = jnp.argmax(v, axis=1)
+            bi = jnp.take_along_axis(idxs, a1[:, None], 1)[:, 0]
+            v2 = v.at[jnp.arange(n), a1].set(NEG_INF)
+            b2 = jnp.max(v2, axis=1)
+            gap = b1 - b2
+            e = jnp.zeros((m,), jnp.float32).at[bi].add(gap) / n
+            e = jnp.where(alive, e, jnp.inf)
+            n_alive = jnp.sum(alive)
+            j = jnp.argmin(e)
+            do = (n_alive > 1) & (pos < n_steps)
+            alive2 = jnp.where(do, alive.at[j].set(False), alive)
+            rank2 = jnp.where(do, rank.at[j].set(pos), rank)
+            err2 = jnp.where(do, err_at.at[j].set(e[j]), err_at)
+            order_j = jnp.where(do, j, -1)
+            return (alive2, rank2, err2, pos + 1), order_j
+
+        (alive, rank, err_at, next_pos), orders = jax.lax.scan(
+            inner, (alive, rank, err_at, next_pos), None, length=R)
+        return (alive, rank, err_at, next_pos), orders
+
+    rank0 = jnp.full((m,), m, jnp.int32)
+    err0 = jnp.full((m,), jnp.inf, jnp.float32)
+    (_, rank, err_at, _), orders = jax.lax.scan(
+        outer, (d_mask, rank0, err0, jnp.int32(0)), None, length=n_outer)
+    order = orders.reshape(-1)[:n_steps]
+    return rank, err_at, order
+
+
+def pruning_order_batch(d_embs: jax.Array, d_masks: jax.Array,
+                        samples: jax.Array, *, step_size: int = 1,
+                        fast: bool = False, bf16_scores: bool = False,
+                        shortlist: bool = False):
+    """vmap of :func:`pruning_order` over a document batch (global pruning
+    precomputation; embarrassingly parallel across the `data` mesh axis).
+
+    ``fast=True`` uses the single-pass top-2 reduction (§Perf) — exact up
+    to ties; ``bf16_scores`` halves the cached score-matrix bytes;
+    ``shortlist`` selects the top-K shortlist path (exact, fastest on a
+    single host, but its lax.top_k rescan de-partitions under GSPMD —
+    kept for single-host pruning jobs, see EXPERIMENTS.md §Perf).
+    """
+    if shortlist and step_size == 1:
+        fn = lambda e, k: pruning_order_shortlist(
+            e, k, samples, bf16_scores=bf16_scores)
+    else:
+        fn = lambda e, k: pruning_order(e, k, samples, step_size=step_size,
+                                        single_pass=fast,
+                                        bf16_scores=bf16_scores)
+    return jax.vmap(fn)(d_embs, d_masks)
+
+
+def keep_mask_from_order(rank: jax.Array, d_mask: jax.Array,
+                         n_keep: jax.Array | int) -> jax.Array:
+    """Keep the `n_keep` *last-removed* real tokens of one document."""
+    n_real = jnp.sum(d_mask)
+    n_prune = jnp.maximum(n_real - n_keep, 0)
+    # Tokens with rank >= n_prune survive.
+    return d_mask & (rank >= n_prune)
+
+
+@functools.partial(jax.jit, static_argnames=("step_size",))
+def prune_to_size(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
+                  target: int, *, step_size: int = 1) -> jax.Array:
+    """Alg. 1 entry point: keep-mask with exactly min(target, n_real) tokens."""
+    rank, _, _ = pruning_order(d_emb, d_mask, samples, step_size=step_size)
+    return keep_mask_from_order(rank, d_mask, target)
+
+
+def global_keep_masks(ranks: jax.Array, errs: jax.Array, d_masks: jax.Array,
+                      keep_fraction: float) -> jax.Array:
+    """Corpus-level pruning (§4.2 "Global Pruning").
+
+    Per-document orders are merged by the error each removal introduces;
+    the cheapest removals corpus-wide are applied until the global token
+    budget is met.  To keep every document's own order admissible we
+    monotonize each doc's error sequence with a running max before the
+    merge (a later-removed token never merges before an earlier one).
+    Every document always retains >= 1 token (err inf on the survivor).
+
+    ranks/errs/d_masks: (n_docs, m).  Returns keep masks (n_docs, m).
+    """
+    n_docs, m = ranks.shape
+    # err in doc-removal order, running-max, scattered back per token.
+    step_err = jnp.full((n_docs, m + 1), jnp.inf, errs.dtype)
+    doc_ix = jnp.arange(n_docs)[:, None]
+    safe_rank = jnp.minimum(ranks, m)
+    step_err = step_err.at[doc_ix, safe_rank].set(
+        jnp.where(jnp.isfinite(errs), errs, jnp.inf))
+    # monotone threshold along the removal order
+    step_err = jax.lax.associative_scan(jnp.maximum, step_err, axis=1)
+    mono_err = jnp.take_along_axis(step_err, safe_rank, axis=1)
+    mono_err = jnp.where(d_masks & jnp.isfinite(errs), mono_err, jnp.inf)
+
+    n_total = jnp.sum(d_masks)
+    n_keep = jnp.ceil(keep_fraction * n_total).astype(jnp.int32)
+    n_prune = jnp.maximum(n_total - n_keep, 0)
+    flat = mono_err.reshape(-1)
+    # Threshold = n_prune-th smallest finite error; prune strictly below,
+    # then break ties by rank to hit the budget exactly.
+    sort_ix = jnp.argsort(flat)
+    cut = jnp.where(jnp.arange(flat.shape[0]) < n_prune, True, False)
+    pruned_flat = jnp.zeros_like(flat, bool).at[sort_ix].set(cut)
+    keep = d_masks & ~pruned_flat.reshape(n_docs, m)
+    return keep
+
+
+def mean_error(d_emb: jax.Array, d_mask: jax.Array, keep_mask: jax.Array,
+               samples: jax.Array, *, ball_normalized: bool = False) -> jax.Array:
+    """ME of a pruned document: E_q[max_D q.d - max_keep q.d] over the
+    sphere sample set (Eq. 8 aggregated over the pruned set).  With
+    ``ball_normalized`` the Eq. 7 factor 1/2 converts to the ball measure.
+    """
+    s = samples @ d_emb.T
+    s_all = jnp.where(d_mask[None, :], s, NEG_INF)
+    s_keep = jnp.where((d_mask & keep_mask)[None, :], s, NEG_INF)
+    me = jnp.mean(s_all.max(-1) - s_keep.max(-1))
+    return 0.5 * me if ball_normalized else me
+
+
+def mean_error_batch(d_embs, d_masks, keep_masks, samples, **kw):
+    fn = lambda e, m, k: mean_error(e, m, k, samples, **kw)
+    return jax.vmap(fn)(d_embs, d_masks, keep_masks)
+
+
+# ----------------------------------------------------------------------
+# Beam-search variant (§6.2 "Effect of Beam Size") — ablation only.
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("beam", "target"))
+def beam_pruning_order(d_emb: jax.Array, d_mask: jax.Array,
+                       samples: jax.Array, *, beam: int = 3,
+                       target: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Beam search over removal sequences; returns (keep_mask, total_err)
+    of the best beam at |D'| = target.  Exponential state is avoided by
+    keeping only `beam` alive-masks + cumulative errors; candidate
+    expansion scores each beam's per-token Eq. 8 error.
+    """
+    n, m = samples.shape[0], d_emb.shape[0]
+    scores = jnp.where(d_mask[None, :], samples @ d_emb.T, NEG_INF)
+
+    def beam_errors(alive):
+        st = _top2_from_scores(scores, alive)
+        return token_errors(st, alive, n)
+
+    alive0 = jnp.tile(d_mask[None, :], (beam, 1))
+    cum0 = jnp.full((beam,), jnp.inf).at[0].set(0.0)  # only beam 0 live at t=0
+    n_real = jnp.sum(d_mask)
+    n_steps = int(m - max(target, 1))
+
+    def body(carry, _):
+        alive, cum = carry
+        errs = jax.vmap(beam_errors)(alive)               # (beam, m)
+        n_alive = jnp.sum(alive, axis=1)
+        cand = jnp.where((n_alive[:, None] > target) & alive, errs, jnp.inf)
+        total = cum[:, None] + cand                       # (beam, m)
+        flat = total.reshape(-1)
+        vals, flat_ix = jax.lax.top_k(-flat, beam)
+        b_ix, t_ix = flat_ix // m, flat_ix % m
+        new_alive = alive[b_ix].at[jnp.arange(beam), t_ix].set(False)
+        new_cum = -vals
+        # If no candidate was finite (already at target), keep old beams.
+        any_live = jnp.isfinite(new_cum)
+        new_alive = jnp.where(any_live[:, None], new_alive, alive)
+        new_cum = jnp.where(any_live, new_cum, cum)
+        return (new_alive, new_cum), None
+
+    (alive, cum), _ = jax.lax.scan(body, (alive0, cum0), None, length=n_steps)
+    best = jnp.argmin(cum)
+    del n_real
+    return alive[best], cum[best]

@@ -1,0 +1,3 @@
+from repro.data import graph_sampler, pipeline, synthetic
+
+__all__ = ["graph_sampler", "pipeline", "synthetic"]

@@ -1,0 +1,215 @@
+"""Synthetic datasets with planted relevance (DESIGN.md §6).
+
+Two levels:
+
+  * **embedding-level** (`embedding_corpus`) — documents are bags of
+    token *vectors* built from topic directions + per-token noise +
+    shared "stopword" directions that carry no topic signal.  Queries are
+    noisy topic probes; relevance = topic match.  This drives every
+    pruning benchmark without requiring encoder training and makes the
+    planted structure explicit: stopword-ish tokens have small Voronoi
+    mass w.r.t. the query distribution, topical tokens have large mass.
+
+  * **token-level** (`token_corpus`) — Zipfian vocabulary, topic-clustered
+    content tokens + high-frequency stopwords; paired with a
+    from-scratch ColBERT encoder in examples/train_colbert.py to
+    reproduce the full pipeline (train -> index -> prune -> evaluate).
+
+Everything is deterministic in (seed,) and sized for CPU execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbCorpus:
+    d_embs: jnp.ndarray      # (n_docs, m, dim)
+    d_masks: jnp.ndarray     # (n_docs, m) bool
+    q_embs: jnp.ndarray      # (n_q, l, dim)
+    q_topics: jnp.ndarray    # (n_q,)
+    d_topics: jnp.ndarray    # (n_docs,)
+    rel: jnp.ndarray         # (n_q, n_docs) bool
+    gains: jnp.ndarray       # (n_q, n_docs) float
+    stop_frac: float
+
+
+def embedding_corpus(seed: int = 0, *, n_docs: int = 256, n_q: int = 64,
+                     n_topics: int = 16, dim: int = 32, m: int = 48,
+                     l: int = 8, stop_frac: float = 0.4,
+                     noise: float = 0.35, n_stop_dirs: int = 8,
+                     jitter: float = 0.12,
+                     norm: str = "sphere") -> EmbCorpus:
+    """Planted-topic embedding corpus with REDUNDANCY — the structure the
+    paper's pruning premise rests on: documents repeat low-information
+    tokens (stopword directions appear many times, slightly jittered,
+    like repeated "the"/"of" in contextual embeddings) while topical
+    content lives in low-multiplicity subtopic directions.  Voronoi
+    pruning should discover that duplicates are free to remove and that
+    singleton topical tokens are not; position-/random-based pruning
+    cannot."""
+    rng = np.random.default_rng(seed)
+    topics = rng.normal(size=(n_topics, dim))
+    topics /= np.linalg.norm(topics, axis=-1, keepdims=True)
+    stops = rng.normal(size=(n_stop_dirs, dim))
+    stops /= np.linalg.norm(stops, axis=-1, keepdims=True)
+
+    d_topics = rng.integers(0, n_topics, size=n_docs)
+    tok = np.zeros((n_docs, m, dim))
+    tok_is_stop = np.zeros((n_docs, m), bool)
+    n_stop_tok = int(round(stop_frac * m))
+    n_content_tok = m - n_stop_tok
+    # each doc's content = few unique subtopic directions, multiplicity 1-2
+    n_sub = max(2, int(np.ceil(n_content_tok / 1.5)))
+    for i in range(n_docs):
+        subdirs = topics[d_topics[i]][None, :] + noise * rng.normal(
+            size=(n_sub, dim))
+        subdirs /= np.linalg.norm(subdirs, axis=-1, keepdims=True)
+        content_pick = subdirs[np.arange(n_content_tok) % n_sub]
+        # stop tokens: 2-3 shared directions, repeated many times
+        doc_stop_dirs = stops[rng.choice(n_stop_dirs,
+                                         size=max(1, n_stop_dirs // 3),
+                                         replace=False)]
+        stop_pick = doc_stop_dirs[rng.integers(0, len(doc_stop_dirs),
+                                               size=n_stop_tok)]
+        toks = np.concatenate([content_pick, stop_pick], axis=0)
+        is_stop = np.concatenate([np.zeros(n_content_tok, bool),
+                                  np.ones(n_stop_tok, bool)])
+        perm = rng.permutation(m)
+        tok[i] = toks[perm]
+        tok_is_stop[i] = is_stop[perm]
+    tok = tok + jitter * rng.normal(size=(n_docs, m, dim))
+    nrm = np.linalg.norm(tok, axis=-1, keepdims=True)
+    if norm == "sphere":
+        tok = tok / nrm
+    else:  # ball: scale into (0,1) radius, topical tokens longer
+        r = 0.35 + 0.6 * (~tok_is_stop[..., None])
+        tok = tok / nrm * r
+    # ragged doc lengths
+    lens = rng.integers(int(0.6 * m), m + 1, size=n_docs)
+    d_masks = np.arange(m)[None, :] < lens[:, None]
+
+    q_topics = rng.integers(0, n_topics, size=n_q)
+    q = topics[q_topics][:, None, :] + noise * rng.normal(size=(n_q, l, dim))
+    q = q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+    rel = q_topics[:, None] == d_topics[None, :]
+    gains = rel.astype(np.float32)
+    return EmbCorpus(
+        d_embs=jnp.asarray(tok, jnp.float32),
+        d_masks=jnp.asarray(d_masks),
+        q_embs=jnp.asarray(q, jnp.float32),
+        q_topics=jnp.asarray(q_topics), d_topics=jnp.asarray(d_topics),
+        rel=jnp.asarray(rel), gains=jnp.asarray(gains),
+        stop_frac=stop_frac)
+
+
+def domain_shifted(corpus_seed: int, shift_seed: int, **kw) -> EmbCorpus:
+    """BEIR-style zero-shot domain: new topics/stopword geometry drawn with
+    a different seed + heavier noise (out-of-domain evaluation)."""
+    kw.setdefault("noise", 0.5)
+    kw.setdefault("stop_frac", 0.55)
+    return embedding_corpus(seed=shift_seed * 7919 + corpus_seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Token-level corpus (for end-to-end encoder training)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TokenCorpus:
+    doc_ids: jnp.ndarray     # (n_docs, m) int32, 0 = pad
+    q_ids: jnp.ndarray       # (n_q, l)  int32
+    q_topics: jnp.ndarray
+    d_topics: jnp.ndarray
+    rel: jnp.ndarray
+    stopword_set: jnp.ndarray  # (vocab,) bool
+    idf: jnp.ndarray           # (vocab,) float
+    vocab: int
+
+
+def token_corpus(seed: int = 0, *, n_docs: int = 512, n_q: int = 128,
+                 n_topics: int = 16, vocab: int = 2048, m: int = 48,
+                 l: int = 8, n_stop: int = 32,
+                 stop_rate: float = 0.35) -> TokenCorpus:
+    rng = np.random.default_rng(seed)
+    reserved = 4  # 0=pad 1=[Q] 2=[D] 3=[MASK]
+    n_content = vocab - reserved - n_stop
+    stop_ids = np.arange(reserved, reserved + n_stop)
+    content_ids = np.arange(reserved + n_stop, vocab)
+    # each topic owns a Zipf-weighted slice of content tokens
+    per_topic = n_content // n_topics
+    topic_tokens = [content_ids[t * per_topic:(t + 1) * per_topic]
+                    for t in range(n_topics)]
+    zipf = 1.0 / np.arange(1, per_topic + 1) ** 1.1
+    zipf /= zipf.sum()
+
+    d_topics = rng.integers(0, n_topics, size=n_docs)
+    docs = np.zeros((n_docs, m), np.int32)
+    lens = rng.integers(int(0.6 * m), m + 1, size=n_docs)
+    for i in range(n_docs):
+        t = d_topics[i]
+        n_tok = lens[i]
+        is_stop = rng.random(n_tok) < stop_rate
+        content = rng.choice(topic_tokens[t], size=n_tok, p=zipf)
+        stop = rng.choice(stop_ids, size=n_tok)
+        docs[i, :n_tok] = np.where(is_stop, stop, content)
+        docs[i, 0] = 2  # [D] marker
+
+    q_topics = rng.integers(0, n_topics, size=n_q)
+    qs = np.zeros((n_q, l), np.int32)
+    for i in range(n_q):
+        qs[i] = rng.choice(topic_tokens[q_topics[i]], size=l, p=zipf)
+        qs[i, 0] = 1  # [Q] marker
+
+    rel = q_topics[:, None] == d_topics[None, :]
+    stop_set = np.zeros((vocab,), bool)
+    stop_set[stop_ids] = True
+    # corpus IDF
+    df = np.zeros((vocab,), np.int64)
+    for i in range(n_docs):
+        df[np.unique(docs[i][docs[i] > 0])] += 1
+    idf = np.log(n_docs / (1.0 + df))
+    return TokenCorpus(
+        doc_ids=jnp.asarray(docs), q_ids=jnp.asarray(qs),
+        q_topics=jnp.asarray(q_topics), d_topics=jnp.asarray(d_topics),
+        rel=jnp.asarray(rel), stopword_set=jnp.asarray(stop_set),
+        idf=jnp.asarray(idf, jnp.float32), vocab=vocab)
+
+
+# ---------------------------------------------------------------------------
+# Batch generators for the assigned-architecture train paths
+# ---------------------------------------------------------------------------
+
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return {"tokens": jax.random.randint(key, (batch, seq), 0, vocab,
+                                         dtype=jnp.int32)}
+
+
+def ctr_batch(seed: int, step: int, batch: int, n_dense: int, n_sparse: int,
+              table_rows: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "dense": jax.random.normal(k1, (batch, n_dense), jnp.float32),
+        "sparse_ids": jax.random.randint(k2, (batch, n_sparse), 0,
+                                         table_rows, dtype=jnp.int32),
+        "labels": jax.random.bernoulli(k3, 0.3, (batch,)).astype(jnp.float32),
+    }
+
+
+def bert4rec_batch(seed: int, step: int, batch: int, seq: int, n_items: int,
+                   mask_rate: float = 0.15):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2 = jax.random.split(key)
+    items = jax.random.randint(k1, (batch, seq), 4, n_items, dtype=jnp.int32)
+    maskpos = jax.random.bernoulli(k2, mask_rate, (batch, seq))
+    inputs = jnp.where(maskpos, 3, items)   # 3 = [MASK]
+    return {"items": inputs, "labels": items, "mask_positions": maskpos,
+            "attn_mask": jnp.ones((batch, seq), bool)}

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's compute hot spots:
+#   maxsim_top2    — fused top-2-of-matmul (Voronoi pruning estimator)
+#   colbert_maxsim — batched late-interaction scoring (rerank/serve)
+#   embedding_bag  — fused recsys table lookup + reduce
+#   flash_attention— online-softmax attention forward (memory-bound LM fix)
+# Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper w/ interpret fallback off-TPU), ref.py (pure-jnp oracle).

@@ -1,0 +1,65 @@
+"""Batched ColBERT MaxSim scoring Pallas kernel (serving/rerank hot spot).
+
+Scores one query (l token vectors) against a block of candidate
+documents per grid step.  Documents are short (m <= ~256) so a whole
+(DB, m, dim) doc tile fits VMEM; the (DB, m, l) score tensor stays in
+VREGs, is masked, max-reduced over document tokens and sum-reduced over
+query tokens on-chip — only (DB,) scalars reach HBM.  This is the padded
+block-diagonal batching described in DESIGN.md §3: the MXU sees one
+dense (DB*m, dim) x (dim, l) matmul per tile.
+
+VMEM per step (DB=8, m=256, dim=128, l=32, f32):
+  docs 8*256*128*4 = 1.0 MB, scores 8*256*32*4 = 0.25 MB — comfortable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, d_ref, mask_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)            # (l, dim)
+    d = d_ref[...].astype(jnp.float32)            # (DB, m, dim)
+    msk = mask_ref[...]                           # (DB, m) int32
+    db, m, dim = d.shape
+    l = q.shape[0]
+    d2 = d.reshape(db * m, dim)
+    s = jax.lax.dot_general(d2, q, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s.reshape(db, m, l)
+    s = jnp.where((msk > 0)[:, :, None], s, NEG)
+    best = jnp.max(s, axis=1)                     # (DB, l)
+    out_ref[...] = jnp.sum(best, axis=1, keepdims=True)  # (DB, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def colbert_maxsim(q_emb: jax.Array, d_embs: jax.Array, d_masks: jax.Array,
+                   *, block_d: int = 8, interpret: bool = True) -> jax.Array:
+    """q_emb (l, dim) x d_embs (n_docs, m, dim) -> (n_docs,) scores."""
+    n_docs, m, dim = d_embs.shape
+    db = min(block_d, n_docs)
+    pad = (-n_docs) % db
+    if pad:
+        d_embs = jnp.pad(d_embs, ((0, pad), (0, 0), (0, 0)))
+        d_masks = jnp.pad(d_masks, ((0, pad), (0, 0)))
+    np_ = d_embs.shape[0]
+    mask_i = d_masks.astype(jnp.int32)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(np_ // db,),
+        in_specs=[
+            pl.BlockSpec((q_emb.shape[0], dim), lambda i: (0, 0)),
+            pl.BlockSpec((db, m, dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((db, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((db, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        interpret=interpret,
+    )(q_emb, d_embs, mask_i)
+    return out[:n_docs, 0]

@@ -1,0 +1,27 @@
+"""jit'd wrapper: Pallas on TPU, interpret elsewhere; vmap over queries."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.colbert_maxsim.colbert_maxsim import colbert_maxsim
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def colbert_maxsim_op(q_emb, d_embs, d_masks, *, block_d: int = 8):
+    return colbert_maxsim(q_emb, d_embs, d_masks, block_d=block_d,
+                          interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def colbert_maxsim_batch_op(q_embs, d_embs, d_masks, *, block_d: int = 8):
+    """(n_q, l, dim) x (n_docs, m, dim) -> (n_q, n_docs)."""
+    fn = lambda q: colbert_maxsim(q, d_embs, d_masks, block_d=block_d,
+                                  interpret=not _on_tpu())
+    return jax.vmap(fn)(q_embs)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the batched ColBERT MaxSim scoring kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def colbert_maxsim_ref(q_emb, d_embs, d_masks, q_mask=None):
+    """q_emb: (l, dim); d_embs: (n_docs, m, dim); d_masks: (n_docs, m).
+    Returns (n_docs,) ColBERT scores (Eq. 1)."""
+    s = jnp.einsum("ld,nmd->nlm", q_emb.astype(jnp.float32),
+                   d_embs.astype(jnp.float32))
+    s = jnp.where(d_masks[:, None, :], s, NEG)
+    best = s.max(-1)                    # (n_docs, l)
+    if q_mask is not None:
+        best = jnp.where(q_mask[None, :], best, 0.0)
+    return best.sum(-1)

@@ -1,0 +1,60 @@
+"""Fused EmbeddingBag Pallas TPU kernel (recsys lookup hot path).
+
+TPU adaptation: the table (10^6+ rows) lives in HBM; per grid step the
+BlockSpec index_map — driven by **scalar-prefetched ids** via
+``pltpu.PrefetchScalarGridSpec`` — DMAs exactly one (1, D) table row
+into VMEM and accumulates it into the output bag row.  The id stream is
+known before the kernel runs, so the DMA pipeline prefetches rows ahead
+of compute: this is the TPU equivalent of nn.EmbeddingBag's fused
+gather+reduce (no (nnz, D) intermediate in HBM).
+
+Grid = (n_bags, nnz): bag-major so each output row is revisited nnz
+consecutive steps (zero-init on the first, accumulate after).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, row_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += row_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(table: jax.Array, ids: jax.Array, *, mode: str = "sum",
+                  interpret: bool = True) -> jax.Array:
+    """table: (V, D); ids: (n_bags, nnz) int32 -> (n_bags, D) f32."""
+    n_bags, nnz = ids.shape
+    V, D = table.shape
+    flat_ids = ids.reshape(-1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_bags, nnz),
+        in_specs=[
+            # one table row per step, selected by the prefetched id
+            pl.BlockSpec((1, D), lambda i, j, ids_pf: (ids_pf[i * nnz + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda i, j, ids_pf: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, D), jnp.float32),
+        interpret=interpret,
+    )(flat_ids, table)
+    if mode == "mean":
+        out = out / nnz
+    return out

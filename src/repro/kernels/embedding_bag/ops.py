@@ -1,0 +1,18 @@
+"""jit'd wrapper: Pallas on TPU, interpret elsewhere."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def embedding_bag_op(table, ids, *, mode: str = "sum"):
+    return embedding_bag(table, ids, mode=mode, interpret=not _on_tpu())

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused EmbeddingBag kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, mode: str = "sum"):
+    """table: (V, D); ids: (n_bags, nnz) -> (n_bags, D)."""
+    rows = jnp.take(table, ids, axis=0)         # (n_bags, nnz, D)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        out = out / ids.shape[1]
+    return out

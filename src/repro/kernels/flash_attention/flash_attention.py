@@ -1,0 +1,123 @@
+"""Flash-attention forward Pallas TPU kernel (online softmax).
+
+The §Perf analysis shows the memory-dominant LM cells spend most of their
+HBM time streaming (chunk, S)-shaped f32 score tensors through the
+mask→softmax→PV chain (~5 passes).  This kernel keeps the score tile in
+VREGs: grid = (H, Sq/bq, Sk/bk) with the K axis minor (sequential), a
+running (row-max m, row-sum l, accumulator acc) triple carried in the
+output blocks across K tiles — the standard online-softmax recurrence:
+
+  m'   = max(m, rowmax(s))
+  l'   = l * exp(m - m') + rowsum(exp(s - m'))
+  acc' = acc * exp(m - m') + exp(s - m') @ V_tile
+
+and a final normalization acc/l on the last K tile.  Only (bq, d) tiles
+ever hit HBM.  Causal/window masking is applied per tile from global
+indices.  Forward only: prefill/serving use it directly; training needs
+the backward kernel (documented in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal,
+            window, bq, bk, sk):
+    j = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                 # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    vis = cols < sk                     # padded key columns are invisible
+    if causal:
+        vis &= cols <= rows
+    if window is not None:
+        vis &= cols > rows - window
+    s = jnp.where(vis, s, NEG)
+
+    m_tile = jnp.max(s, axis=1, keepdims=True)       # (bq, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        p = jnp.exp(s - m_tile)
+        l_new = jnp.sum(p, axis=1, keepdims=True)
+        o_ref[0] = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_tile
+        l_ref[...] = l_new
+
+    @pl.when(j > 0)
+    def _accum():
+        m_old = m_ref[...]
+        l_old = l_ref[...]
+        m_new = jnp.maximum(m_old, m_tile)
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_old * alpha + jnp.sum(p, axis=1, keepdims=True)
+        o_ref[0] = o_ref[0] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (H, Sq, d); k, v: (H, Sk, d) -> (H, Sq, d)."""
+    H, Sq, d = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Sqp, Skp = q.shape[1], k.shape[1]
+    kern = functools.partial(_kernel, scale=1.0 / (d ** 0.5), causal=causal,
+                             window=window, bq=bq, bk=bk, sk=Sk)
+    out, m, l = pl.pallas_call(
+        kern,
+        grid=(H, Sqp // bq, Skp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((bq, 1), lambda h, i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda h, i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, Sqp, d), jnp.float32),
+            jax.ShapeDtypeStruct((Sqp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Sqp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq].astype(q.dtype)

@@ -1,0 +1,27 @@
+"""jit'd wrapper: Pallas on TPU, interpret elsewhere; GQA-aware front."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention_op(q, k, v, *, causal: bool = False,
+                       window: int | None = None):
+    """q: (H, Sq, d); k, v: (KV, Sk, d) with H % KV == 0 (GQA broadcast)."""
+    H, KV = q.shape[0], k.shape[0]
+    if H != KV:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=0)
+        v = jnp.repeat(v, rep, axis=0)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=not _on_tpu())

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention forward kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = False,
+                        window: int | None = None):
+    """q: (H, Sq, d); k, v: (H, Sk, d) -> (H, Sq, d).  Softmax in f32."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    ii = jnp.arange(q.shape[1])[:, None]
+    jj = jnp.arange(k.shape[1])[None, :]
+    vis = jnp.ones(s.shape[1:], bool)
+    if causal:
+        vis &= jj <= ii
+    if window is not None:
+        vis &= jj > ii - window
+    s = jnp.where(vis[None], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,39 @@
+"""jit'd public wrapper for the fused MaxSim top-2 kernel.
+
+Selects the Pallas TPU kernel on TPU backends and the interpret-mode
+kernel elsewhere (bit-identical semantics; interpret executes the same
+kernel body in Python).  `voronoi_errors_fused` is the drop-in
+replacement for `repro.core.voronoi.estimate_errors` on the hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxsim_top2.maxsim_top2 import maxsim_top2
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_t"))
+def maxsim_top2_op(samples, tokens, alive, *, block_s: int = 256,
+                   block_t: int = 128):
+    return maxsim_top2(samples, tokens, alive, block_s=block_s,
+                       block_t=block_t, interpret=not _on_tpu())
+
+
+def voronoi_errors_fused(samples, tokens, alive, *, block_s: int = 256,
+                         block_t: int = 128):
+    """Eq. 8 per-token errors via the fused kernel (never materializes
+    the (N, m) score matrix)."""
+    best, second, bi = maxsim_top2_op(samples, tokens, alive,
+                                      block_s=block_s, block_t=block_t)
+    m = tokens.shape[0]
+    gap = best - second
+    err = jnp.zeros((m,), jnp.float32).at[bi].add(gap) / samples.shape[0]
+    return jnp.where(alive, err, jnp.inf)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused MaxSim top-2 kernel.
+
+Given samples S (N, dim), tokens D (m, dim) and an alive mask (m,),
+return per-sample (best, second, argbest) of S @ D.T over alive tokens.
+This is exactly what the Voronoi estimator needs (Eq. 8): best - second
+is the pruning-error integrand; argbest is the cell id.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def maxsim_top2_ref(samples, tokens, alive):
+    scores = samples.astype(jnp.float32) @ tokens.astype(jnp.float32).T
+    scores = jnp.where(alive[None, :], scores, NEG)
+    bi = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    best = jnp.max(scores, axis=-1)
+    masked = scores.at[jnp.arange(scores.shape[0]), bi].set(NEG)
+    second = jnp.max(masked, axis=-1)
+    return best, second, bi

@@ -1,0 +1,25 @@
+"""Production mesh construction (multi-pod dry-run target).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run driver sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; everything else sees the real device count).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever the current host offers, as a (data, model) mesh — used by
+    smoke tests and CPU examples (usually 1x1)."""
+    n = len(jax.devices())
+    data = max(1, n // 1)
+    return jax.make_mesh((data, 1), ("data", "model"))

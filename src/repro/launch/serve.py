@@ -1,0 +1,88 @@
+"""Serving driver.
+
+  --arch colbert : end-to-end late-interaction retrieval service
+                   (encode corpus -> Voronoi-prune index -> batched queries)
+  --arch <lm>    : KV-cache decode loop on the smoke config
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import voronoi
+from repro.core.sampling import sample_sphere
+from repro.data import synthetic
+from repro.models import colbert as colbert_lib
+from repro.models import transformer as tfm
+from repro.serve.retrieval import RetrievalServer, TokenIndex
+from repro.train import checkpoint
+
+
+def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
+                    ckpt_dir: str | None = None, seed: int = 0):
+    cfg = configs.get("colbert").smoke
+    params = colbert_lib.init_params(jax.random.PRNGKey(seed), cfg)
+    if ckpt_dir:
+        _, restored = checkpoint.restore_latest(
+            ckpt_dir, {"params": params, "opt": None, "step": None})
+        if restored is not None:
+            params = restored["params"]
+    corpus = synthetic.token_corpus(seed, n_docs=256, n_q=n_queries,
+                                    vocab=cfg.vocab, m=cfg.doc_len,
+                                    l=cfg.query_len)
+    d_emb, d_mask = colbert_lib.encode_docs(params, cfg, corpus.doc_ids)
+    index = TokenIndex.build(d_emb, d_mask)
+    samples = sample_sphere(jax.random.PRNGKey(1), 2048, cfg.out_dim)
+    ranks, errs, _ = voronoi.pruning_order_batch(d_emb, d_mask, samples)
+    keep = voronoi.global_keep_masks(ranks, errs, d_mask, keep_fraction)
+    pruned = index.with_keep(keep)
+    print(f"[serve] index: {index.storage()}")
+    print(f"[serve] pruned: {pruned.storage()}")
+    server = RetrievalServer(pruned, k=10)
+    q_emb, _ = colbert_lib.encode_queries(params, cfg, corpus.q_ids)
+    t0 = time.time()
+    idx, scores = server.query_batch(q_emb)
+    dt = time.time() - t0
+    print(f"[serve] {n_queries} queries in {dt*1e3:.1f} ms "
+          f"({dt/n_queries*1e3:.2f} ms/q)")
+    return idx, scores
+
+
+def serve_lm(arch: str, n_tokens: int = 32, batch: int = 2):
+    cfg = configs.get(arch).smoke
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    cache = tfm.init_cache(cfg, batch, n_tokens)
+    step = jax.jit(lambda p, c, t, s: tfm.decode_step(p, c, t, s, cfg))
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    t0 = time.time()
+    outs = []
+    for s in range(n_tokens):
+        logits, cache = step(params, cache, tok, jnp.int32(s))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(tok[:, 0])
+    dt = time.time() - t0
+    print(f"[serve] decoded {n_tokens} tokens x {batch} seqs "
+          f"in {dt:.2f}s ({dt/n_tokens*1e3:.1f} ms/token)")
+    return jnp.stack(outs, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="colbert")
+    ap.add_argument("--keep", type=float, default=0.5)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+    if args.arch == "colbert":
+        serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir)
+    else:
+        serve_lm(args.arch, n_tokens=args.tokens)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models import (attention, colbert, common, gnn, moe, recsys,
+                          transformer)
+
+__all__ = ["attention", "colbert", "common", "gnn", "moe", "recsys",
+           "transformer"]

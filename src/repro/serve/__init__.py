@@ -1,0 +1,3 @@
+from repro.serve import retrieval
+
+__all__ = ["retrieval"]

@@ -1,0 +1,173 @@
+"""Logical-axis sharding rules (MaxText-style) decoupling models from meshes.
+
+Models annotate tensors with *logical* axis names ("batch", "embed",
+"heads", "expert", "table_rows", ...).  A launcher activates a rule set
+mapping logical names -> mesh axis names; `constrain` then applies
+`with_sharding_constraint` with the resulting PartitionSpec.  With no
+active rules (unit tests on CPU) every annotation is a no-op, so model
+code never needs a mesh to run.
+
+Rule values may be a mesh axis name, a tuple of mesh axes (e.g.
+("pod", "data") for the flattened DP axis in the multi-pod mesh), or
+None (replicated).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def axis_rules(rules: dict[str, str | tuple | None]):
+    """Activate logical->mesh axis rules for the enclosed region."""
+    prev = current_rules()
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_to_spec(logical_axes: tuple[str | None, ...],
+                    rules: dict | None = None) -> P:
+    rules = rules if rules is not None else (current_rules() or {})
+    resolved = []
+    used: set[str] = set()
+    for name in logical_axes:
+        axes = rules.get(name) if name is not None else None
+        # A mesh axis may appear at most once in a PartitionSpec; later
+        # logical axes that map onto an already-used mesh axis replicate.
+        if axes is None:
+            resolved.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        free = tuple(a for a in axes if a not in used)
+        used.update(free)
+        resolved.append(free if len(free) > 1 else (free[0] if free else None))
+    return P(*resolved)
+
+
+def spec_for(*logical_axes: str | None) -> P:
+    return logical_to_spec(tuple(logical_axes))
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (no-op w/o rules)."""
+    rules = current_rules()
+    if not rules:
+        return x
+    spec = logical_to_spec(tuple(logical_axes), rules)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        # Outside a mesh context (e.g. pure CPU eval) constraints are moot.
+        return x
+
+
+# Canonical rule sets -------------------------------------------------------
+#
+# Baseline posture (DESIGN.md §8): training batches shard over every
+# available device (ZeRO-3-like), params FSDP over `data` on the embed
+# axis + tensor-parallel over `model` on heads/ffn/vocab/expert axes;
+# XLA overlaps the per-scanned-layer weight all-gathers with compute.
+
+_LM_COMMON = {
+    "fsdp": ("data",),
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "expert": None,            # TP-MoE baseline; EP variant flips this
+    "vocab": ("model",),
+    "kv_len": None,
+    "table_axis": None,
+    "table_rows": None,
+    "candidates": ("model",),
+}
+
+
+def lm_train_rules(multi_pod: bool) -> dict:
+    r = dict(_LM_COMMON)
+    if multi_pod:
+        # global batch (256) < devices (512): DP over (pod, data), stored
+        # activations sequence-sharded over `model` (Megatron-SP style).
+        r |= {"batch": ("pod", "data"), "seq": ("model",)}
+    else:
+        r |= {"batch": ("data", "model"), "seq": None}
+    return r
+
+
+def lm_prefill_rules(multi_pod: bool) -> dict:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return dict(_LM_COMMON) | {"batch": dp, "seq": None}
+
+
+def lm_decode_rules(multi_pod: bool, *, batch: int = 0) -> dict:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    # kv_heads (8) does not divide the 16-way model axis -> the KV cache
+    # shards its LENGTH over `model` instead (32768/16 or window/16).
+    r = dict(_LM_COMMON) | {"batch": dp, "seq": None,
+                            "kv_heads": None, "kv_len": ("model",)}
+    if batch == 1:
+        # long_500k: nothing to shard on batch; shard the ring cache length
+        # over both axes (window is a multiple of 256).
+        r |= {"batch": None,
+              "kv_len": ("data", "model") if not multi_pod
+              else ("pod", "data", "model")}
+    return r
+
+
+def lm_rules_ep_moe(rules: dict) -> dict:
+    """Hillclimb variant: experts sharded over `model` (all-to-all MoE)."""
+    return rules | {"expert": ("model",), "ffn": None}
+
+
+def gnn_rules(multi_pod: bool) -> dict:
+    dp = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "edges": dp,                # edge list fully sharded
+        "nodes": None,              # node features replicated (psum combine)
+        "feat": None,
+        "batch": dp,
+        "hidden": None,
+    }
+
+
+def recsys_rules(multi_pod: bool) -> dict:
+    dp = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "batch": dp,
+        "table_axis": ("model",),   # table-wise sharding (baseline)
+        "table_rows": None,         # hillclimb variant: row-wise sharding
+        "embed": None,
+        "mlp_in": None,
+        "mlp_out": ("model",),
+        "heads": ("model",),
+        "ffn": ("model",),
+        "seq": None,
+        "candidates": ("model",),
+        "vocab": ("model",),
+        "fsdp": ("data",),
+        "expert": None,
+        "kv_heads": ("model",),
+        "kv_len": None,
+    }
+
+
+def recsys_rules_rowsharded(multi_pod: bool) -> dict:
+    """Hillclimb variant: row-wise table sharding (EP-style lookups)."""
+    r = recsys_rules(multi_pod)
+    r["table_axis"] = None
+    r["table_rows"] = ("model",)
+    return r

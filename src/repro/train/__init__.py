@@ -1,0 +1,5 @@
+from repro.train import (checkpoint, compress, elastic, losses, optimizer,
+                         train_step)
+
+__all__ = ["checkpoint", "compress", "elastic", "losses", "optimizer",
+           "train_step"]

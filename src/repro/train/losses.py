@@ -1,0 +1,54 @@
+"""Per-family training losses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import regularizers
+from repro.core.scoring import maxsim_matrix
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array | None = None) -> jax.Array:
+    """Token-level cross entropy; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(logits, tokens, loss_mask=None):
+    """Next-token CE: logits (B,S,V) predicts tokens shifted by one."""
+    lg = logits[:, :-1]
+    tgt = tokens[:, 1:]
+    m = None if loss_mask is None else loss_mask[:, 1:]
+    return softmax_xent(lg, tgt, m)
+
+
+def bce_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lg = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lg, 0) - lg * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+
+
+def colbert_contrastive(q_embs, d_embs, d_masks, q_masks=None,
+                        *, reg: str | None = None, alpha: float = 0.0):
+    """In-batch contrastive: query i's positive is doc i; all-pairs MaxSim
+    scores -> softmax CE.  Optional [27] regularizer (Eq. 9/10)."""
+    scores = maxsim_matrix(q_embs, d_embs, d_masks, q_masks)   # (B, B)
+    labels = jnp.arange(scores.shape[0])
+    loss = softmax_xent(scores, labels)
+    if reg == "l1":
+        loss = loss + alpha * regularizers.l1_reg(d_embs, d_masks)
+    elif reg == "sim":
+        loss = loss + alpha * regularizers.doc_sim_reg(d_embs, d_masks)
+    return loss, scores
+
+
+def masked_item_loss(logits, labels, mask_positions):
+    """BERT4Rec: CE at masked positions only."""
+    return softmax_xent(logits, labels, mask_positions.astype(jnp.float32))

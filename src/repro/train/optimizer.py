@@ -1,0 +1,98 @@
+"""AdamW + schedules + clipping, built from scratch (optax unavailable).
+
+State is a pytree mirroring params: {m, v} in f32 regardless of param
+dtype (bf16 training keeps f32 first/second moments + f32 master copy is
+implicit because updates are computed in f32 and cast on apply).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # "cosine" | "linear" | "constant"
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    return cfg.lr * warm * decay
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree_util.tree_map(zeros, params),
+                      v=jax.tree_util.tree_map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply(cfg: AdamWConfig, params, grads, state: AdamWState,
+          *, decay_mask: Callable[[jax.Array], bool] | None = None):
+    """One AdamW update. Returns (new_params, new_state, stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/bias
+        new_p = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), stats

@@ -1,0 +1,187 @@
+"""Train/serve step builders for every architecture family.
+
+Each builder returns a pure ``step(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with in/out shardings, plus an ``init_state``.
+TrainState is a plain dict pytree so the checkpointer handles it as-is.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import colbert as colbert_lib
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tfm
+from repro.train import losses, optimizer
+
+
+def make_train_state(key, init_fn, opt_cfg: optimizer.AdamWConfig):
+    params = init_fn(key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def constrain_grads(grads, grad_shardings):
+    """Pin gradients to the parameter sharding right where they are
+    produced, so XLA's ReduceScatterCreator can replace the backward
+    all-reduce + slice with a reduce-scatter (§Perf: halves gradient
+    collective bytes on FSDP-sharded params)."""
+    if grad_shardings is None:
+        return grads
+    return jax.tree_util.tree_map(
+        lambda g, s: jax.lax.with_sharding_constraint(g, s) if s is not None
+        else g, grads, grad_shardings)
+
+
+def _apply_opt(opt_cfg, state, grads, loss, extra=None):
+    params, opt, stats = optimizer.apply(opt_cfg, state["params"], grads,
+                                         state["opt"])
+    metrics = {"loss": loss, **stats}
+    if extra:
+        metrics.update(extra)
+    return ({"params": params, "opt": opt, "step": state["step"] + 1},
+            metrics)
+
+
+# ------------------------------ LM family ---------------------------------
+
+def lm_train_step(cfg: tfm.LMConfig, opt_cfg: optimizer.AdamWConfig,
+                  *, aux_weight: float = 0.01, accum: int = 1,
+                  grad_shardings=None):
+    """Causal-LM step; MoE aux losses folded in; optional microbatch accum."""
+
+    def loss_fn(params, tokens):
+        logits, aux = tfm.forward(params, tokens, cfg)
+        loss = losses.lm_loss(logits, tokens)
+        total = loss + aux_weight * (aux["load_balance"] + aux["router_z"])
+        return total, (loss, aux)
+
+    def step(state, batch):
+        tokens = batch["tokens"]
+        if accum == 1:
+            (total, (loss, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], tokens)
+            grads = constrain_grads(grads, grad_shardings)
+        else:
+            mb = tokens.reshape(accum, tokens.shape[0] // accum,
+                                tokens.shape[1])
+
+            def acc_body(carry, tb):
+                g_sum, l_sum = carry
+                (t, (l, _)), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], tb)
+                g_sum = jax.tree_util.tree_map(jnp.add, g_sum, g)
+                return (g_sum, l_sum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros(())), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            total = loss
+        return _apply_opt(opt_cfg, state, grads, loss)
+
+    return step
+
+
+def lm_serve_step(cfg: tfm.LMConfig, *, window: int | None = "cfg"):
+    """One-token decode with a KV cache (decode_* / long_* shapes)."""
+
+    def step(params, cache, tokens, pos):
+        return tfm.decode_step(params, cache, tokens, pos, cfg,
+                               window=window)
+
+    return step
+
+
+# ------------------------------ ColBERT -----------------------------------
+
+def colbert_train_step(cfg: colbert_lib.ColBERTConfig,
+                       opt_cfg: optimizer.AdamWConfig,
+                       *, reg: str | None = None, alpha: float = 0.0):
+    def loss_fn(params, batch):
+        q_emb, q_mask = colbert_lib.encode_queries(params, cfg,
+                                                   batch["query_ids"])
+        d_emb, d_mask = colbert_lib.encode_docs(params, cfg, batch["doc_ids"])
+        loss, scores = losses.colbert_contrastive(
+            q_emb, d_emb, d_mask, q_mask, reg=reg, alpha=alpha)
+        acc = jnp.mean(jnp.argmax(scores, -1) == jnp.arange(scores.shape[0]))
+        return loss, acc
+
+    def step(state, batch):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        return _apply_opt(None or opt_cfg, state, grads, loss,
+                          {"in_batch_acc": acc})
+
+    return step
+
+
+# ------------------------------ GNN ---------------------------------------
+
+def gin_train_step(cfg: gnn_lib.GINConfig, opt_cfg: optimizer.AdamWConfig,
+                   *, task: str = "node"):
+    def loss_fn(params, batch):
+        if task == "graph":
+            logits = gnn_lib.forward(params, cfg, batch["x"],
+                                     batch["edge_index"],
+                                     edge_mask=batch.get("edge_mask"),
+                                     graph_ids=batch["graph_ids"],
+                                     n_graphs=batch["labels"].shape[0])
+        else:
+            logits = gnn_lib.forward(params, cfg, batch["x"],
+                                     batch["edge_index"],
+                                     edge_mask=batch.get("edge_mask"))
+        return losses.softmax_xent(logits, batch["labels"],
+                                   batch.get("label_mask"))
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        return _apply_opt(opt_cfg, state, grads, loss)
+
+    return step
+
+
+# ------------------------------ RecSys ------------------------------------
+
+def ctr_train_step(forward_fn: Callable, opt_cfg: optimizer.AdamWConfig,
+                   *, grad_shardings=None):
+    """DLRM / DCN-v2 / Wide&Deep: binary CTR loss."""
+
+    def loss_fn(params, batch):
+        logit = forward_fn(params, batch)
+        return losses.bce_logits(logit, batch["labels"])
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        grads = constrain_grads(grads, grad_shardings)
+        return _apply_opt(opt_cfg, state, grads, loss)
+
+    return step
+
+
+def ctr_serve_step(forward_fn: Callable):
+    def step(params, batch):
+        return jax.nn.sigmoid(forward_fn(params, batch))
+    return step
+
+
+def bert4rec_train_step(cfg: recsys_lib.Bert4RecConfig,
+                        opt_cfg: optimizer.AdamWConfig):
+    def loss_fn(params, batch):
+        logits = recsys_lib.bert4rec_forward(params, cfg, batch["items"],
+                                             batch["attn_mask"])
+        return losses.masked_item_loss(logits, batch["labels"],
+                                       batch["mask_positions"])
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        return _apply_opt(opt_cfg, state, grads, loss)
+
+    return step

@@ -1,0 +1,39 @@
+"""Minimal property-based sweep harness (hypothesis is not installed
+offline — this emulates its usage pattern: randomized case generation
+over shapes/dtypes/seeds, with the failing case's parameters printed so
+any failure replays deterministically)."""
+
+from __future__ import annotations
+
+import functools
+import itertools
+import random
+
+
+def sweep(n_cases: int = 25, seed: int = 0, **space):
+    """Decorator: run the test once per sampled point of the cartesian
+    space.  Each kwarg is a list of candidate values; `n_cases` points are
+    sampled without replacement (or the full grid if smaller)."""
+    keys = sorted(space)
+    grid = list(itertools.product(*(space[k] for k in keys)))
+    rng = random.Random(seed)
+    if len(grid) > n_cases:
+        grid = rng.sample(grid, n_cases)
+
+    def deco(fn):
+        def wrapper(self=None):
+            for point in grid:
+                params = dict(zip(keys, point))
+                try:
+                    if self is None:
+                        fn(**params)
+                    else:
+                        fn(self, **params)
+                except Exception:
+                    print(f"\n[proptest] FAILING CASE for {fn.__name__}: "
+                          f"{params}")
+                    raise
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

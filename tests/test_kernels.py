@@ -1,0 +1,172 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _proptest import sweep
+from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_batch_op,
+                                              colbert_maxsim_op)
+from repro.kernels.colbert_maxsim.ref import colbert_maxsim_ref
+from repro.kernels.embedding_bag.ops import embedding_bag_op
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.maxsim_top2.ops import maxsim_top2_op, voronoi_errors_fused
+from repro.kernels.maxsim_top2.ref import maxsim_top2_ref
+from repro.core import voronoi, sampling
+
+
+class TestMaxSimTop2:
+    @sweep(n_cases=12, seed=0,
+           N=[16, 100, 256, 513], m=[8, 37, 128, 200],
+           dim=[8, 32, 128], dtype=["float32", "bfloat16"])
+    def test_matches_oracle(self, N, m, dim, dtype):
+        k = jax.random.PRNGKey(N * m + dim)
+        k1, k2, k3 = jax.random.split(k, 3)
+        dt = jnp.dtype(dtype)
+        S = jax.random.normal(k1, (N, dim)).astype(dt)
+        D = jax.random.normal(k2, (m, dim)).astype(dt)
+        alive = jax.random.bernoulli(k3, 0.8, (m,))
+        alive = alive.at[0].set(True).at[m // 2].set(True)
+        b, s, bi = maxsim_top2_op(S, D, alive)
+        rb, rs, rbi = maxsim_top2_ref(S, D, alive)
+        tol = 1e-4 if dtype == "float32" else 5e-2
+        np.testing.assert_allclose(np.asarray(b), np.asarray(rb), atol=tol,
+                                   rtol=tol)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=tol,
+                                   rtol=tol)
+        if dtype == "float32":
+            assert bool((bi == rbi).all())
+
+    @sweep(n_cases=4, seed=3, block_s=[32, 256], block_t=[32, 128])
+    def test_block_shape_invariance(self, block_s, block_t):
+        k = jax.random.PRNGKey(0)
+        S = jax.random.normal(k, (200, 16))
+        D = jax.random.normal(jax.random.fold_in(k, 1), (100, 16))
+        alive = jnp.ones((100,), bool)
+        b, s, bi = maxsim_top2_op(S, D, alive, block_s=block_s,
+                                  block_t=block_t)
+        rb, rs, rbi = maxsim_top2_ref(S, D, alive)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(rb), atol=1e-4)
+        assert bool((bi == rbi).all())
+
+    def test_fused_errors_match_reference_estimator(self):
+        k = jax.random.PRNGKey(5)
+        D = jax.random.normal(k, (24, 16))
+        D = D / jnp.linalg.norm(D, axis=-1, keepdims=True)
+        mask = jnp.arange(24) < 20
+        S = sampling.sample_sphere(jax.random.PRNGKey(6), 2000, 16)
+        fused = voronoi_errors_fused(S, D, mask)
+        ref = voronoi.estimate_errors(D, mask, S)
+        np.testing.assert_allclose(np.asarray(fused[:20]),
+                                   np.asarray(ref[:20]), atol=1e-5)
+        assert bool(jnp.all(jnp.isinf(fused[20:])))
+
+    def test_single_alive_token(self):
+        S = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+        D = jax.random.normal(jax.random.PRNGKey(1), (5, 8))
+        alive = jnp.zeros((5,), bool).at[2].set(True)
+        b, s, bi = maxsim_top2_op(S, D, alive)
+        assert bool((bi == 2).all())
+        assert bool((s <= -1e29).all())  # no second-best exists
+
+
+class TestColbertMaxsim:
+    @sweep(n_cases=8, seed=1, n_docs=[3, 10, 33], m=[8, 24, 48],
+           l=[4, 16], dim=[16, 128])
+    def test_matches_oracle(self, n_docs, m, l, dim):
+        k = jax.random.PRNGKey(n_docs * m + l)
+        k1, k2, k3 = jax.random.split(k, 3)
+        q = jax.random.normal(k1, (l, dim))
+        d = jax.random.normal(k2, (n_docs, m, dim))
+        msk = jax.random.bernoulli(k3, 0.85, (n_docs, m)).at[:, 0].set(True)
+        out = colbert_maxsim_op(q, d, msk)
+        ref = colbert_maxsim_ref(q, d, msk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_batch_op(self):
+        k = jax.random.PRNGKey(9)
+        q = jax.random.normal(k, (5, 8, 32))
+        d = jax.random.normal(jax.random.fold_in(k, 1), (12, 16, 32))
+        msk = jnp.ones((12, 16), bool)
+        out = colbert_maxsim_batch_op(q, d, msk)
+        ref = jnp.stack([colbert_maxsim_ref(q[i], d, msk) for i in range(5)])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_fully_masked_tokens_ignored(self):
+        q = jnp.ones((2, 4))
+        d = jnp.stack([jnp.ones((3, 4)), 100 * jnp.ones((3, 4))])
+        msk = jnp.array([[True, True, True], [False, False, True]])
+        out = colbert_maxsim_op(q, d, msk)
+        # doc 1's visible token scores 400 per query token
+        np.testing.assert_allclose(np.asarray(out), [8.0, 800.0], rtol=1e-5)
+
+
+class TestEmbeddingBag:
+    @sweep(n_cases=8, seed=2, V=[32, 500], D=[8, 64, 128],
+           n_bags=[4, 32], nnz=[1, 3, 7])
+    def test_matches_oracle(self, V, D, n_bags, nnz):
+        k = jax.random.PRNGKey(V + D)
+        k1, k2 = jax.random.split(k)
+        table = jax.random.normal(k1, (V, D))
+        ids = jax.random.randint(k2, (n_bags, nnz), 0, V)
+        for mode in ("sum", "mean"):
+            out = embedding_bag_op(table, ids, mode=mode)
+            ref = embedding_bag_ref(table, ids, mode)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_repeated_ids(self):
+        table = jnp.eye(4)
+        ids = jnp.array([[2, 2, 2]])
+        out = embedding_bag_op(table, ids)
+        np.testing.assert_allclose(np.asarray(out),
+                                   [[0.0, 0.0, 3.0, 0.0]], atol=1e-6)
+
+
+class TestFlashAttention:
+    @sweep(n_cases=8, seed=4, H=[2, 4], S=[48, 100], d=[16, 32],
+           causal=[False, True], window=[None, 24])
+    def test_matches_oracle(self, H, S, d, causal, window):
+        from repro.kernels.flash_attention.ops import flash_attention_op
+        from repro.kernels.flash_attention.ref import flash_attention_ref
+        k0 = jax.random.PRNGKey(H * S + d)
+        kq, kk, kv = jax.random.split(k0, 3)
+        q = jax.random.normal(kq, (H, S, d))
+        k = jax.random.normal(kk, (H, S, d))
+        v = jax.random.normal(kv, (H, S, d))
+        out = flash_attention_op(q, k, v, causal=causal, window=window)
+        ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_gqa_broadcast(self):
+        from repro.kernels.flash_attention.ops import flash_attention_op
+        from repro.kernels.flash_attention.ref import flash_attention_ref
+        k0 = jax.random.PRNGKey(0)
+        q = jax.random.normal(k0, (4, 32, 16))
+        k = jax.random.normal(jax.random.fold_in(k0, 1), (2, 32, 16))
+        v = jax.random.normal(jax.random.fold_in(k0, 2), (2, 32, 16))
+        out = flash_attention_op(q, k, v, causal=True)
+        ref = flash_attention_ref(q, jnp.repeat(k, 2, 0),
+                                  jnp.repeat(v, 2, 0), causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_matches_model_attention_numerics(self):
+        """The kernel reproduces the jnp attention path used by the LM
+        (softmax in f32, same masking semantics)."""
+        from repro.kernels.flash_attention.ops import flash_attention_op
+        k0 = jax.random.PRNGKey(3)
+        H, S, d = 2, 40, 16
+        q = jax.random.normal(k0, (H, S, d))
+        k = jax.random.normal(jax.random.fold_in(k0, 1), (H, S, d))
+        v = jax.random.normal(jax.random.fold_in(k0, 2), (H, S, d))
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(d)
+        ii, jj = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+        s = jnp.where((jj <= ii)[None], s, -1e30)
+        ref = jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, -1), v)
+        out = flash_attention_op(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-4, rtol=2e-4)

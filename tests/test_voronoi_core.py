@@ -1,0 +1,303 @@
+"""Core Voronoi-pruning invariants + paper-claim unit checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _proptest import sweep
+from repro.core import baselines, lp, metrics, regularizers, sampling, voronoi
+from repro.core.scoring import maxsim, top2_scores
+
+
+def _doc(seed, m, dim, n_real=None, radius=0.9):
+    k = jax.random.PRNGKey(seed)
+    d = jax.random.normal(k, (m, dim))
+    d = d / jnp.linalg.norm(d, axis=-1, keepdims=True) * radius
+    n_real = n_real or m
+    return d, jnp.arange(m) < n_real
+
+
+class TestSampling:
+    def test_sphere_norms(self):
+        s = sampling.sample_sphere(jax.random.PRNGKey(0), 1000, 16)
+        np.testing.assert_allclose(np.linalg.norm(s, axis=-1), 1.0, atol=1e-5)
+
+    def test_ball_radii(self):
+        s = sampling.sample_ball(jax.random.PRNGKey(0), 5000, 8)
+        r = np.linalg.norm(s, axis=-1)
+        assert r.max() <= 1.0 + 1e-6
+        # E[r] for uniform ball = dim/(dim+1)
+        assert abs(r.mean() - 8 / 9) < 0.02
+
+    def test_marginal_density_integrates_to_one(self):
+        xs = jnp.linspace(-1, 1, 20001)
+        for dim in (8, 64, 128):
+            p = jnp.exp(sampling.sphere_marginal_logpdf(xs, dim))
+            integral = float(jnp.trapezoid(p, xs))
+            assert abs(integral - 1.0) < 1e-3, (dim, integral)
+
+    def test_uniformity_report(self):
+        s = sampling.sample_sphere(jax.random.PRNGKey(1), 20000, 128)
+        rep = sampling.embedding_uniformity_report(s)
+        # observed density should track the theoretical marginal
+        obs, exp = np.asarray(rep["observed_density"]), np.asarray(
+            rep["expected_density"])
+        assert np.abs(obs - exp).max() < 0.5
+        assert float(rep["mean_abs_off_corr"]) < 0.05
+
+
+class TestErrorEstimator:
+    def test_errors_nonnegative_and_pad_inf(self):
+        d, mask = _doc(0, 12, 8, n_real=9)
+        S = sampling.sample_sphere(jax.random.PRNGKey(1), 4000, 8)
+        errs = voronoi.estimate_errors(d, mask, S)
+        assert bool(jnp.all(errs[:9] >= 0))
+        assert bool(jnp.all(jnp.isinf(errs[9:])))
+
+    def test_error_matches_bruteforce_removal(self):
+        """Eq. 8 estimate == direct E[max_D - max_{D\\d_i}] on the sample."""
+        d, mask = _doc(2, 8, 4)
+        S = sampling.sample_sphere(jax.random.PRNGKey(3), 3000, 4)
+        errs = voronoi.estimate_errors(d, mask, S)
+        scores = S @ d.T
+        full = scores.max(-1)
+        for i in range(8):
+            sub = jnp.where((jnp.arange(8) != i)[None, :], scores, -1e30)
+            direct = jnp.mean(full - sub.max(-1))
+            np.testing.assert_allclose(float(errs[i]), float(direct),
+                                       rtol=1e-5, atol=1e-7)
+
+    def test_duplicate_token_error_zero(self):
+        d, mask = _doc(4, 6, 8)
+        d = d.at[3].set(d[0])  # exact duplicate -> pruning one is free
+        S = sampling.sample_sphere(jax.random.PRNGKey(5), 2000, 8)
+        errs = voronoi.estimate_errors(d, mask, S)
+        assert float(jnp.minimum(errs[0], errs[3])) < 1e-6
+
+    def test_ball_vs_sphere_factor(self):
+        """Eq. 7: ball-measure error = 1/2 sphere-measure error (radial
+        integration identity), up to MC noise."""
+        d, mask = _doc(6, 6, 4)
+        Ss = sampling.sample_sphere(jax.random.PRNGKey(6), 60000, 4)
+        Sb = sampling.sample_ball(jax.random.PRNGKey(7), 60000, 4)
+        keep = jnp.arange(6) < 3
+        me_sphere = voronoi.mean_error(d, mask, keep, Ss)
+        me_ball = voronoi.mean_error(d, mask, keep, Sb)
+        # E_ball[gap] = E_sphere[alpha * gap] with alpha ~ r ~ Beta(4,1):
+        # E[alpha] = dim/(dim+1) = 0.8 for dim=4
+        ratio = float(me_ball / me_sphere)
+        assert abs(ratio - 4 / 5) < 0.05, ratio
+
+
+class TestIterativePruning:
+    def test_keep_counts(self):
+        d, mask = _doc(8, 16, 8, n_real=13)
+        S = sampling.sample_sphere(jax.random.PRNGKey(9), 2000, 8)
+        rank, err, order = voronoi.pruning_order(d, mask, S)
+        for t in (1, 5, 13, 20):
+            keep = voronoi.keep_mask_from_order(rank, mask, t)
+            assert int(keep.sum()) == min(t, 13)
+
+    def test_me_monotone_in_budget(self):
+        d, mask = _doc(10, 14, 8)
+        S = sampling.sample_sphere(jax.random.PRNGKey(11), 3000, 8)
+        rank, _, _ = voronoi.pruning_order(d, mask, S)
+        mes = [float(voronoi.mean_error(
+            d, mask, voronoi.keep_mask_from_order(rank, mask, t), S))
+            for t in range(1, 15)]
+        assert all(a >= b - 1e-6 for a, b in zip(mes, mes[1:]))
+        assert mes[-1] <= 1e-9  # keeping everything costs nothing
+
+    def test_iterative_beats_oneshot(self):
+        """Paper §6.2: iterative pruning must not lose to non-iterative
+        (averaged over docs to kill MC noise)."""
+        S = sampling.sample_sphere(jax.random.PRNGKey(13), 3000, 8)
+        it_me, os_me = [], []
+        for seed in range(8):
+            d, mask = _doc(100 + seed, 16, 8)
+            t = 4
+            keep_it = voronoi.prune_to_size(d, mask, S, t)
+            errs = voronoi.estimate_errors(d, mask, S)
+            order = jnp.argsort(-jnp.where(mask, errs, jnp.inf))
+            keep_os = jnp.zeros_like(mask).at[order[:t]].set(True) & mask
+            it_me.append(float(voronoi.mean_error(d, mask, keep_it, S)))
+            os_me.append(float(voronoi.mean_error(d, mask, keep_os, S)))
+        assert np.mean(it_me) <= np.mean(os_me) + 1e-6
+
+    @sweep(n_cases=8, seed=1, m=[6, 12, 17], dim=[4, 8, 16],
+           step=[1, 2, 3])
+    def test_step_size_consistency(self, m, dim, step):
+        d, mask = _doc(m * dim + step, m, dim)
+        S = sampling.sample_sphere(jax.random.PRNGKey(0), 1500, dim)
+        rank, err, order = voronoi.pruning_order(d, mask, S, step_size=step)
+        keep = voronoi.keep_mask_from_order(rank, mask, m // 2)
+        assert int(keep.sum()) == m // 2
+        # error at removal is finite for all removed tokens
+        removed = mask & ~voronoi.keep_mask_from_order(rank, mask, m - 1)
+        assert bool(jnp.all(jnp.isfinite(err[removed])))
+
+    def test_beam_at_least_greedy(self):
+        d, mask = _doc(20, 10, 4)
+        S = sampling.sample_sphere(jax.random.PRNGKey(21), 2000, 4)
+        greedy = voronoi.prune_to_size(d, mask, S, 4)
+        beam_keep, beam_err = voronoi.beam_pruning_order(d, mask, S, beam=3,
+                                                         target=4)
+        me_g = float(voronoi.mean_error(d, mask, greedy, S))
+        me_b = float(voronoi.mean_error(d, mask, beam_keep, S))
+        assert me_b <= me_g + 1e-4  # paper: beam does not help (nor hurt)
+
+
+class TestGlobalPruning:
+    def test_budget_and_min_one(self):
+        S = sampling.sample_sphere(jax.random.PRNGKey(31), 2000, 8)
+        docs, masks = [], []
+        for s in range(6):
+            d, m = _doc(40 + s, 12, 8, n_real=8 + s % 4)
+            docs.append(d), masks.append(m)
+        d_embs, d_masks = jnp.stack(docs), jnp.stack(masks)
+        ranks, errs, _ = voronoi.pruning_order_batch(d_embs, d_masks, S)
+        for frac in (0.1, 0.3, 0.5, 0.9):
+            keep = voronoi.global_keep_masks(ranks, errs, d_masks, frac)
+            total = int(d_masks.sum())
+            target = int(np.ceil(frac * total))
+            assert int(keep.sum()) >= max(target, 6)
+            assert bool(jnp.all(keep.sum(1) >= 1))
+            # budget respected within per-doc min-1 slack
+            assert int(keep.sum()) <= target + 6
+
+    def test_global_not_worse_than_local(self):
+        """Paper §6.2: corpus-level pruning >= document-level pruning."""
+        S = sampling.sample_sphere(jax.random.PRNGKey(33), 3000, 8)
+        # heterogeneous docs: some redundant, some information-dense
+        docs, masks = [], []
+        for s in range(8):
+            radius = 0.5 if s % 2 else 0.95
+            d, m = _doc(60 + s, 12, 8, radius=radius)
+            docs.append(d), masks.append(m)
+        d_embs, d_masks = jnp.stack(docs), jnp.stack(masks)
+        ranks, errs, _ = voronoi.pruning_order_batch(d_embs, d_masks, S)
+        frac = 0.5
+        keep_g = voronoi.global_keep_masks(ranks, errs, d_masks, frac)
+        # local: same fraction per doc
+        n_keep = jnp.ceil(frac * d_masks.sum(1)).astype(jnp.int32)
+        keep_l = jax.vmap(voronoi.keep_mask_from_order)(ranks, d_masks,
+                                                        n_keep)
+        me_g = float(voronoi.mean_error_batch(d_embs, d_masks, keep_g, S).mean())
+        me_l = float(voronoi.mean_error_batch(d_embs, d_masks, keep_l, S).mean())
+        assert me_g <= me_l + 1e-5
+
+
+class TestScoring:
+    @sweep(n_cases=6, seed=2, l=[4, 8], m=[6, 20], dim=[4, 16])
+    def test_maxsim_pruning_upper_bound(self, l, m, dim):
+        """MaxSim after pruning never exceeds unpruned MaxSim."""
+        k = jax.random.PRNGKey(l * m + dim)
+        q = jax.random.normal(k, (l, dim))
+        d, mask = _doc(m, m, dim)
+        keep = mask & (jax.random.uniform(k, (m,)) < 0.6)
+        keep = keep.at[0].set(True)
+        full = maxsim(q, d, mask)
+        pruned = maxsim(q, d, keep & mask)
+        assert float(pruned) <= float(full) + 1e-5
+
+    def test_top2(self):
+        d, mask = _doc(3, 10, 8, n_real=7)
+        S = sampling.sample_sphere(jax.random.PRNGKey(2), 500, 8)
+        best, second, bi, si = top2_scores(S, d, mask)
+        assert bool(jnp.all(best >= second))
+        assert bool(jnp.all(bi < 7)) and bool(jnp.all(si < 7))
+        assert bool(jnp.all(bi != si))
+
+
+class TestLP:
+    def test_margin_close_to_bruteforce_2d(self):
+        k = jax.random.PRNGKey(7)
+        d = jax.random.normal(k, (5, 2))
+        d = d / jnp.linalg.norm(d, axis=-1, keepdims=True) * 0.8
+        mask = jnp.ones((5,), bool)
+        marg = lp.dominance_margin(d, mask, n_iters=500, lr=0.2)
+        bf = lp.brute_force_margin(d, mask, n_probe=200000)
+        np.testing.assert_allclose(np.asarray(marg), np.asarray(bf),
+                                   atol=0.02)
+
+    def test_dominated_token_pruned(self):
+        # token 2 = 0.5 * token 0.  NOTE the max-dot-product geometry:
+        # in the negative half-space SHORT vectors win (their dot is
+        # least negative), so token 2's true margin is positive (~0.318
+        # at q = -(1,1)/sqrt2) — smaller than either real token's margin
+        # but not zero.  theta separates it from tokens 0 (0.45) and
+        # 1 (~1.0).
+        d = jnp.array([[0.9, 0.0], [0.0, 0.9], [0.45, 0.0]])
+        mask = jnp.ones((3,), bool)
+        pr = lp.lp_prunable(d, mask, theta=0.4, n_iters=400)
+        assert bool(pr[2])
+        assert not bool(pr[0]) and not bool(pr[1])
+
+
+class TestBaselines:
+    def test_first_k(self):
+        mask = jnp.array([[True] * 8 + [False] * 2])
+        keep = baselines.first_k(mask, 0.5)
+        assert keep.tolist()[0] == [True] * 4 + [False] * 6
+
+    def test_norm_prune(self):
+        d = jnp.stack([jnp.ones((4,)) * 0.9, jnp.ones((4,)) * 0.1])[None]
+        mask = jnp.ones((1, 2), bool)
+        keep = baselines.norm_prune(d, mask, theta=0.5)
+        assert keep.tolist() == [[True, False]]
+
+    def test_keep_top_fraction_never_empty(self):
+        k = jax.random.PRNGKey(0)
+        mask = jnp.ones((3, 10), bool)
+        keep = baselines.random_prune(k, mask, 0.01)
+        assert bool(jnp.all(keep.sum(1) >= 1))
+
+    def test_idf_and_stopwords(self):
+        ids = jnp.array([[4, 4, 4, 7, 8], [4, 9, 9, 9, 5]])
+        mask = jnp.ones((2, 5), bool)
+        idf = baselines.build_idf(ids, mask, vocab=16)
+        # token 4 appears in both docs -> lowest idf
+        assert float(idf[4]) == float(idf.min())
+        stop = jnp.zeros((16,), bool).at[4].set(True)
+        keep = baselines.stopword_prune(ids, mask, stop)
+        assert keep.tolist()[0] == [False, False, False, True, True]
+
+
+class TestRegularizers:
+    def test_ball_projection_range(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 16)) * 10
+        y = regularizers.ball_projection(x)
+        n = jnp.linalg.norm(y, axis=-1)
+        assert float(n.max()) < 1.0 and float(n.min()) > 0.0
+
+    def test_l1_decreases_norms_gradient(self):
+        d = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 8))
+        mask = jnp.ones((2, 4), bool)
+        g = jax.grad(lambda e: regularizers.l1_reg(e, mask))(d)
+        # gradient direction = sign -> step against it shrinks |d|
+        d2 = d - 0.01 * g
+        assert float(jnp.abs(d2).sum()) < float(jnp.abs(d).sum())
+
+    def test_docsim_finite(self):
+        d = regularizers.ball_projection(
+            jax.random.normal(jax.random.PRNGKey(2), (3, 6, 8)))
+        mask = jnp.ones((3, 6), bool).at[1, 4:].set(False)
+        v = regularizers.doc_sim_reg(d, mask)
+        assert bool(jnp.isfinite(v))
+
+
+class TestMetrics:
+    def test_mrr_ndcg(self):
+        scores = jnp.array([[3.0, 2.0, 1.0], [1.0, 3.0, 2.0]])
+        rel = jnp.array([[False, True, False], [True, False, False]])
+        assert abs(float(metrics.mrr_at_k(scores, rel, 10)) -
+                   (0.5 + 1 / 3) / 2) < 1e-6
+        nd = float(metrics.ndcg_at_k(scores, rel.astype(jnp.float32), 10))
+        assert 0 < nd < 1
+
+    def test_linear_fit(self):
+        x = np.linspace(0, 1, 20)
+        y = -2.0 * x + 0.5
+        fit = metrics.linear_fit(x, y)
+        assert abs(fit["slope"] + 2.0) < 1e-9 and fit["r2"] > 0.999

@@ -1,0 +1,189 @@
+"""Regenerate EXPERIMENTS.md §Dry-run + §Roofline from
+EXPERIMENTS/dryrun/*.json; §Perf is included from EXPERIMENTS/perf_log.md
+(hand-written hillclimb log) and §Claims from EXPERIMENTS/claims.md.
+
+Run:  PYTHONPATH=src python tools/build_experiments.py
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRY = os.path.join(ROOT, "EXPERIMENTS", "dryrun")
+
+LEVERS = {
+    "compute_s": "compute-bound: raise MXU utilization (larger per-chip "
+                 "tiles, fewer remat recomputes, bf16 end-to-end)",
+    "memory_s": "memory-bound: cut HBM traffic (fuse score/softmax chains, "
+                "smaller attention chunks, bf16 intermediates, Pallas "
+                "fusion of the hot reduction)",
+    "collective_s": "collective-bound: cut link bytes (resident/TP weights "
+                    "instead of per-step all-gathers, overlap, int8 "
+                    "gradient compression, topology-aware sharding)",
+}
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_section(recs):
+    lines = [
+        "## §Dry-run",
+        "",
+        "`python -m repro.launch.dryrun --all [--multi-pod]` lowers+compiles "
+        "every (architecture x input-shape) cell under "
+        "`XLA_FLAGS=--xla_force_host_platform_device_count=512` for the "
+        "production meshes `(data=16, model=16)` and "
+        "`(pod=2, data=16, model=16)`.  Per-cell JSON + zstd-compressed "
+        "optimized HLO live in `EXPERIMENTS/dryrun/`.",
+        "",
+        "Memory caveat: `memory_analysis()` comes from the XLA:CPU "
+        "executable, which keeps many bf16 buffers as f32 — real-TPU "
+        "temp usage is roughly half the reported temp bytes; arguments are "
+        "exact.  Train cells donate their state buffers (outputs reuse "
+        "argument memory).",
+        "",
+        "| arch | shape | mesh | variant | status | compile_s | "
+        "args/chip | temps/chip (CPU-f32) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        v = r.get("variant", "baseline")
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {v} | "
+                f"SKIPPED ({r['skip_reason'][:60]}...) | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{v} | ERROR | - | - | - |")
+            continue
+        mem = r["analysis"]["memory_analysis"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {v} | ok | "
+            f"{r.get('compile_s', 0):.0f} | "
+            f"{fmt_bytes(mem.get('argument_bytes'))} | "
+            f"{fmt_bytes(mem.get('temp_bytes'))} |")
+    n_ok = sum(1 for r in recs if r["status"] == "ok")
+    n_skip = sum(1 for r in recs if r["status"] == "skipped")
+    n_err = len(recs) - n_ok - n_skip
+    lines += ["", f"**Totals: {n_ok} compiled OK, {n_skip} documented "
+              f"skips, {n_err} errors.**", ""]
+    return "\n".join(lines)
+
+
+def roofline_section(recs):
+    lines = [
+        "## §Roofline",
+        "",
+        "Terms per chip (TPU v5e model: 197 TFLOP/s bf16, 819 GB/s HBM, "
+        "50 GB/s/link ICI):",
+        "`compute = HLO_FLOPs/peak`, `memory = HLO_bytes/HBM_bw`, "
+        "`collective = ring-model link bytes/link_bw`.  FLOPs/bytes/"
+        "collectives are re-derived from the optimized HLO with while-loop "
+        "trip-count multipliers (XLA's cost_analysis counts scan bodies "
+        "once — see repro/launch/roofline.py).  `useful` = MODEL_FLOPS "
+        "(6·N·D or family analogue) / (HLO_FLOPs x chips); values < 1 "
+        "reflect remat recompute, attention quadratic terms and dispatch "
+        "overhead.  `frac` = compute / max(term) — the roofline fraction "
+        "scored in §Perf.",
+        "",
+        "| arch | shape | mesh | variant | compute_s | memory_s | "
+        "collective_s | dominant | frac | useful | lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    variant_rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        a = r["analysis"]
+        v = r.get("variant", "baseline")
+        row = (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {v} | "
+            f"{a['compute_s']:.2e} | {a['memory_s']:.2e} | "
+            f"{a['collective_s']:.2e} | {a['dominant'].replace('_s','')} | "
+            f"{a['roofline_fraction']:.3f} | "
+            f"{a['useful_compute_fraction']:.2f} | "
+            f"{LEVERS[a['dominant']][:52]}... |")
+        (lines if v == "baseline" else variant_rows).append(row)
+    if variant_rows:
+        lines += ["", "§Perf variant measurements (see §Perf for the "
+                  "hypothesis log):", "",
+                  "| arch | shape | mesh | variant | compute_s | memory_s | "
+                  "collective_s | dominant | frac | useful | lever |",
+                  "|---|---|---|---|---|---|---|---|---|---|---|"]
+        lines += variant_rows
+    lines.append("")
+    return "\n".join(lines)
+
+
+def claims_section() -> str | None:
+    """Machine-checked paper-claim rows from the latest benchmark run."""
+    bench = os.path.join(ROOT, "bench_output.txt")
+    if not os.path.exists(bench):
+        return None
+    lines = [
+        "## §Claims — paper-claim validation (from `bench_output.txt`)",
+        "",
+        "Every paper table/figure has a benchmark analogue (benchmarks/);"
+        " each emits machine-checked CLAIM_* rows.  Latest run:",
+        "",
+        "| claim | result |",
+        "|---|---|",
+    ]
+    rows = 0
+    for line in open(bench):
+        if "/CLAIM_" in line:
+            name, _, derived = line.strip().split(",", 2)
+            lines.append(f"| {name} | {derived} |")
+            rows += 1
+    if not rows:
+        return None
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    head_path = os.path.join(ROOT, "EXPERIMENTS", "header.md")
+    perf_path = os.path.join(ROOT, "EXPERIMENTS", "perf_log.md")
+    claims_path = os.path.join(ROOT, "EXPERIMENTS", "claims.md")
+    claims = claims_section()
+    if claims is not None:
+        with open(claims_path, "w") as f:
+            f.write(claims)
+    parts = []
+    for p in (head_path,):
+        if os.path.exists(p):
+            parts.append(open(p).read())
+    parts.append(dryrun_section(recs))
+    parts.append(roofline_section(recs))
+    for p in (perf_path, claims_path):
+        if os.path.exists(p):
+            parts.append(open(p).read())
+    out = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {out} ({len(recs)} dry-run records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Rank ops in a saved dry-run HLO by loop-multiplied HBM traffic /
+collective bytes — the 'profile' view for §Perf iterations.
+
+Usage: PYTHONPATH=src python tools/hlo_top_offenders.py \
+           EXPERIMENTS/dryrun/<cell>.hlo.zst [n]
+"""
+
+import re
+import sys
+
+import zstandard
+
+from repro.launch import roofline
+
+
+def main():
+    path = sys.argv[1]
+    topn = int(sys.argv[2]) if len(sys.argv) > 2 else 25
+    text = zstandard.ZstdDecompressor().decompress(
+        open(path, "rb").read()).decode()
+    mod = roofline._HloModule(text)
+    rows = []
+    for line, mult in mod.walk():
+        m = roofline._OP_LINE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(2), m.group(3)
+        if any(s in rhs for s in roofline._SKIP_OPS):
+            continue
+        paren = rhs.find("(")
+        if paren < 0:
+            continue
+        out_b = sum(roofline._shape_bytes(d, s)
+                    for d, s in roofline._SHAPE_RE.findall(rhs[:paren]))
+        stop = rhs.find("),")
+        op_args = re.findall(r"%([\w.\-]+)",
+                             rhs[paren:stop + 1 if stop > 0 else None])
+        in_b = sum(mod._op_bytes(o) for o in op_args)
+        if re.search(r"\b(dynamic-slice|gather)\(", rhs):
+            traffic = 2.0 * out_b
+        elif re.search(r"\bdynamic-update-slice\(", rhs):
+            traffic = 2.0 * (mod._op_bytes(op_args[1])
+                             if len(op_args) > 1 else out_b)
+        elif re.search(r"\bscatter\(", rhs):
+            traffic = 2.0 * (mod._op_bytes(op_args[-1]) if op_args else out_b)
+        else:
+            traffic = out_b + in_b
+        opk = rhs[:paren].split()[-1] if " " in rhs[:paren] else "?"
+        coll = any(re.search(rf"\b{c}(-start)?\(", rhs)
+                   for c in roofline._COLLECTIVES)
+        meta = re.search(r'op_name="([^"]+)"', rhs)
+        rows.append((mult * traffic, mult, opk, name, coll,
+                     (meta.group(1)[-70:] if meta else "")))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total traffic (loop-mult): {total:.3e} B")
+    for t, mult, opk, name, coll, meta in rows[:topn]:
+        tag = "COLL" if coll else "    "
+        print(f"{t:.3e}  x{mult:<5.0f} {tag} {opk:<28} {name:<26} {meta}")
+
+
+if __name__ == "__main__":
+    main()
