@@ -1,0 +1,101 @@
+"""Backend-dispatch perf record: reference vs fused/chunked hot paths.
+
+Measures the two hot paths the dispatch seam (repro.core.backend)
+routes — iterative Voronoi pruning and MaxSim serving — on both
+backends, prints the harness CSV lines, and writes
+``BENCH_kernel_backends.json`` at the repo root so the perf trajectory
+of the kernel-backed paths is recorded PR over PR.
+
+Shapes are CPU-scaled but chosen so the *serving* comparison is
+meaningful off-TPU too: at the rerank shape the reference einsum's 4-D
+(n_q, n_docs, l, m) tensor exceeds LLC and the chunked kernel path wins
+outright even through the Pallas interpreter.  The pruning comparison
+off-TPU prices the interpreter per scan step, so the fused docs/sec is
+a lower bound (the TPU number is the one that matters); the reference
+and shortlist figures are real either way.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.bench_speedup import run_pruning_backends
+from repro.serve.retrieval import TokenIndex, maxsim_scores
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_kernel_backends.json")
+
+# Rerank benchmark shape: 4-D reference tensor = 32*256*32*128 f32
+# = 134 MB — large enough that materializing it is the bottleneck.
+RERANK = dict(n_q=32, n_docs=256, m=128, l=32, dim=128, block_docs=64)
+
+
+def run_rerank_backends(n_q=32, n_docs=256, m=128, l=32, dim=128,
+                        block_docs=64):
+    """Rerank latency (queries/sec) for reference einsum vs chunked
+    kernel serving at the benchmark shape.  Returns {backend: q_per_s}."""
+    k = jax.random.PRNGKey(0)
+    d = jax.random.normal(k, (n_docs, m, dim))
+    masks = jnp.ones((n_docs, m), bool)
+    q = jax.random.normal(jax.random.fold_in(k, 1), (n_q, l, dim))
+    index = TokenIndex.build(d, masks)
+
+    f_ref = jax.jit(lambda qq: maxsim_scores(index, qq,
+                                             backend="reference"))
+    f_fus = jax.jit(lambda qq: maxsim_scores(index, qq, backend="fused",
+                                             block_docs=block_docs,
+                                             block_q=n_q))
+    t_ref, _ = common.timeit(lambda: f_ref(q), repeat=2)
+    t_fus, _ = common.timeit(lambda: f_fus(q), repeat=2)
+    return {
+        "reference": n_q / t_ref,
+        "fused": n_q / t_fus,
+        "speedup_fused_over_reference": t_ref / t_fus,
+        "shape": dict(n_q=n_q, n_docs=n_docs, m=m, l=l, dim=dim,
+                      block_docs=block_docs),
+    }
+
+
+def main():
+    pruning = run_pruning_backends()
+    rerank = run_rerank_backends(**RERANK)
+
+    for name in ("reference", "fused", "shortlist"):
+        common.csv_line(f"kernel_backends/pruning_{name}",
+                        1e6 / pruning[name],
+                        f"docs_per_s={pruning[name]:.2f}")
+    for name in ("reference", "fused"):
+        common.csv_line(f"kernel_backends/rerank_{name}",
+                        1e6 / rerank[name],
+                        f"q_per_s={rerank[name]:.2f}")
+    wins = rerank["speedup_fused_over_reference"] > 1.0
+    common.csv_line(
+        "kernel_backends/CLAIM_chunked_serving_beats_reference", 0.0,
+        f"holds={wins};"
+        f"speedup={rerank['speedup_fused_over_reference']:.2f}x at "
+        f"{rerank['shape']['n_q']}q x {rerank['shape']['n_docs']}docs")
+
+    record = {
+        "jax_backend": jax.default_backend(),
+        "interpret_mode_kernels": jax.default_backend() != "tpu",
+        "pruning_docs_per_s": {k: v for k, v in pruning.items()
+                               if k != "shape"},
+        "pruning_shape": pruning["shape"],
+        "rerank_q_per_s": {k: rerank[k] for k in ("reference", "fused")},
+        "rerank_speedup_fused_over_reference":
+            rerank["speedup_fused_over_reference"],
+        "rerank_shape": rerank["shape"],
+        "claim_chunked_serving_beats_reference": bool(wins),
+    }
+    with open(os.path.abspath(OUT_PATH), "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

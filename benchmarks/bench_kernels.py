@@ -13,8 +13,10 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core.scoring import top2_scores
-from repro.kernels.colbert_maxsim.ops import colbert_maxsim_op
-from repro.kernels.colbert_maxsim.ref import colbert_maxsim_ref
+from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_multi_op,
+                                              colbert_maxsim_op)
+from repro.kernels.colbert_maxsim.ref import (colbert_maxsim_multi_ref,
+                                              colbert_maxsim_ref)
 from repro.kernels.embedding_bag.ops import embedding_bag_op
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.maxsim_top2.ops import maxsim_top2_op
@@ -47,6 +49,17 @@ def main():
                     f"ref_us={t_r*1e6:.1f};"
                     f"hbm_bytes_avoided={nd*md*l*4}")
 
+    # colbert_maxsim_multi at a query-batch serving shape
+    nq = 8
+    qb = jax.random.normal(jax.random.fold_in(key, 6), (nq, l, dim))
+    t_k, _ = common.timeit(
+        lambda: colbert_maxsim_multi_op(qb, docs, msk, block_d=16), repeat=3)
+    t_r, _ = common.timeit(
+        lambda: jax.jit(colbert_maxsim_multi_ref)(qb, docs, msk), repeat=3)
+    common.csv_line("kernels/colbert_maxsim_multi_fused", t_k * 1e6,
+                    f"ref_us={t_r*1e6:.1f};"
+                    f"hbm_bytes_avoided={nq*nd*md*l*4}")
+
     # embedding_bag at recsys lookup shape
     V, Dd, nb, nnz = 5000, 64, 256, 4
     table = jax.random.normal(key, (V, Dd))
@@ -75,9 +88,10 @@ def main():
                     f"hbm_bytes_avoided={Hf*Sf*Sf*4}")
 
     # top2 oracle parity at scale (interpret-mode correctness proof)
-    b, s, bi = maxsim_top2_op(S, D, alive)
-    rb, rs, rbi = maxsim_top2_ref(S, D, alive)
-    ok = (jnp.allclose(b, rb, atol=1e-4) and bool((bi == rbi).all()))
+    b, s, bi, si = maxsim_top2_op(S, D, alive)
+    rb, rs, rbi, rsi = maxsim_top2_ref(S, D, alive)
+    ok = (jnp.allclose(b, rb, atol=1e-4) and bool((bi == rbi).all())
+          and bool((si == rsi).all()))
     common.csv_line("kernels/CLAIM_fused_matches_oracle", 0.0, f"holds={ok}")
 
 

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV per harness contract.  Modules:
   fig6    — ME vs nDCG linearity (paper Fig. 6)
   speedup — VP vs LP-pruning wall-clock (the ~120x claim, §6.1.1)
   kernels — Pallas kernel micro-benches (fused vs materialized oracle)
+  kernel_backends — reference vs fused/chunked hot paths; writes
+            BENCH_kernel_backends.json (perf trajectory record)
   roofline— dry-run roofline table (deliverable g summary)
 """
 
@@ -20,12 +22,14 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_fig1_geometry, bench_fig3_aggressive,
                             bench_fig45_positions, bench_fig6_me_ndcg,
-                            bench_kernels, bench_roofline, bench_speedup,
+                            bench_kernel_backends, bench_kernels,
+                            bench_roofline, bench_speedup,
                             bench_table1_indomain, bench_table2_ablation,
                             bench_table3_beir)
     only = set(sys.argv[1:])
     mods = [
         ("kernels", bench_kernels),
+        ("kernel_backends", bench_kernel_backends),
         ("fig1", bench_fig1_geometry),
         ("table1", bench_table1_indomain),
         ("table2", bench_table2_ablation),

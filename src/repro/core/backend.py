@@ -1,0 +1,125 @@
+"""Backend dispatch for the two serving/pruning hot paths (DESIGN §Backends).
+
+This module is the single seam through which the algorithmic layer
+(`repro.core.voronoi`, `repro.serve.retrieval`) reaches the fused Pallas
+kernels (`repro.kernels.maxsim_top2`, `repro.kernels.colbert_maxsim`).
+Every later scaling PR (sharded serving, multi-host pruning) plugs into
+this seam rather than into the call sites.
+
+Path matrix
+-----------
+
+======================  ==========================  =======================
+path                    what it does                when it wins
+======================  ==========================  =======================
+``reference``           pure-jnp oracle; caches     small problems; oracle
+                        the full (N, m) score       for parity tests; only
+                        matrix (pruning) or the     path with exact jnp
+                        4-D (n_q, n_docs, l, m)     tie-breaking *defined*
+                        einsum tensor (serving)     by construction
+``fused``               Pallas kernels; score       TPU, and any shape where
+                        *tiles* live in VMEM, the   the resident score
+                        big intermediates never     matrix/tensor is HBM-
+                        reach HBM; per-step FLOPs   or memory-bound (long
+                        are higher (tiles are       docs, large corpora,
+                        recomputed), bytes are      big sample sets)
+                        much lower
+``shortlist``           exact top-K shortlist       single-host pruning
+(pruning only)          cache; per-step work is     jobs; fastest wall-
+                        O(N*K) instead of O(N*m)    clock, but its
+                        with a periodic rescan      ``lax.top_k`` rescan
+                                                    de-partitions under
+                                                    GSPMD
+======================  ==========================  =======================
+
+``resolve_backend(None)`` picks ``fused`` on TPU and ``reference``
+elsewhere; the ``REPRO_BACKEND`` environment variable overrides (useful
+to force the fused path through the Pallas interpreter off-TPU for
+parity debugging).
+
+``default_interpret(None)`` is the companion policy for the raw kernel
+entry points: Pallas ``interpret`` mode everywhere except on real TPU
+backends, so direct kernel callers get compiled Mosaic kernels on TPU
+and the (bit-identical) interpreter elsewhere — previously the raw
+wrappers hardcoded ``interpret=True`` and silently ran the interpreter
+even on TPU.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = [
+    "BACKENDS",
+    "REFERENCE",
+    "FUSED",
+    "SERVING",
+    "SHORTLIST",
+    "default_interpret",
+    "on_tpu",
+    "resolve_backend",
+]
+
+REFERENCE = "reference"
+FUSED = "fused"
+SHORTLIST = "shortlist"
+BACKENDS = (REFERENCE, FUSED, SHORTLIST)
+# Per-path allow sets: serving has no shortlist analogue.
+SERVING = (REFERENCE, FUSED)
+
+_ENV_VAR = "REPRO_BACKEND"
+
+
+def on_tpu() -> bool:
+    """True when the default jax backend is a real TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Resolve a kernel entry point's ``interpret`` argument.
+
+    ``None`` (the default everywhere) means "compiled Mosaic kernel on
+    TPU, Pallas interpreter elsewhere".  An explicit bool wins.
+    """
+    if interpret is None:
+        return not on_tpu()
+    return interpret
+
+
+def resolve_backend(backend: str | None = None,
+                    *, allow: tuple[str, ...] = BACKENDS) -> str:
+    """Resolve a user-facing ``backend=`` argument to a concrete path.
+
+    Precedence: explicit argument > ``REPRO_BACKEND`` env var > platform
+    default (``fused`` on TPU, ``reference`` elsewhere).  ``allow``
+    restricts the valid set for entry points that support fewer paths
+    (serving has no shortlist).  An explicit argument outside ``allow``
+    raises; an env-var value that is a *valid* backend but outside this
+    path's ``allow`` falls back to the platform default (a global
+    override must not crash paths it cannot apply to), while an env-var
+    value that is no backend at all raises everywhere (typo safety).
+
+    Call this OUTSIDE jit: it reads the environment, and a jitted
+    caller would pin the first-seen value into its trace cache.
+    """
+    source = "backend argument"
+    if backend is None:
+        env = os.environ.get(_ENV_VAR)
+        if env:
+            if env not in BACKENDS:     # typo'd env var: fail loudly
+                raise ValueError(
+                    f"backend={env!r} (from {_ENV_VAR} env var) is not a "
+                    f"known backend; choose one of {list(BACKENDS)}")
+            if env not in allow:
+                # valid backend that doesn't exist for this path (e.g.
+                # shortlist on serving): fall back to platform default
+                # rather than crash paths the override can't apply to.
+                env = None
+        backend = env or (FUSED if on_tpu() else REFERENCE)
+    if backend not in allow:
+        raise ValueError(
+            f"backend={backend!r} (from {source}) not supported here; "
+            f"choose one of {list(allow)}")
+    return backend

@@ -12,8 +12,10 @@ Casting token pruning as Voronoi-cell mass estimation:
 Reference semantics live here in pure jnp (fixed shapes, jit/vmap/scan
 friendly).  The production TPU path fuses the (best, second) reduction
 with the sample x token matmul in ``repro.kernels.maxsim_top2`` so the
-(N, m) score matrix never leaves VMEM; this module is its oracle and the
-algorithmic layer above it.
+(N, m) score matrix never leaves VMEM; :func:`pruning_order` routes
+through it with ``backend="fused"`` (dispatch policy in
+``repro.core.backend`` — see its path matrix for reference vs fused vs
+shortlist trade-offs).
 
 Shape conventions: one document is (m, dim) + bool mask (m,); samples
 (N, dim).  Batch versions vmap over the leading doc axis.
@@ -27,7 +29,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_lib
 from repro.core.scoring import NEG_INF, top2_scores
+from repro.kernels.maxsim_top2.ops import (maxsim_top2_op,
+                                           maxsim_top2_update_op)
 
 __all__ = [
     "CellState",
@@ -131,11 +136,137 @@ def estimate_errors(d_emb: jax.Array, d_mask: jax.Array,
     return token_errors(state, d_mask, samples.shape[0])
 
 
-@functools.partial(jax.jit, static_argnames=("step_size", "materialize",
-                                              "single_pass", "bf16_scores"))
+def _select_removals(err: jax.Array, alive: jax.Array, step_size: int):
+    """One Alg. 1 removal step: pick up to ``step_size`` cheapest alive
+    tokens (never the last survivor) and kill them.
+
+    Returns (new_alive, sel_idx, sel_err, removed_any).  Shared verbatim
+    by the reference and fused scan bodies so selection tie-breaking
+    (lax.top_k: lowest index wins) is identical across backends.
+    """
+    n_alive = jnp.sum(alive)
+    k_want = jnp.minimum(step_size, jnp.maximum(n_alive - 1, 0))
+    vals, idxs = jax.lax.top_k(-err, step_size)            # cheapest first
+    take = jnp.arange(step_size) < k_want
+    sel_idx = jnp.where(take, idxs, -1)
+    sel_err = jnp.where(take, -vals, jnp.inf)
+    new_alive = alive
+    for j in range(step_size):
+        new_alive = jnp.where(
+            sel_idx[j] >= 0, new_alive.at[sel_idx[j]].set(False), new_alive)
+    return new_alive, sel_idx, sel_err, k_want > 0
+
+
+def _order_to_rank(order_steps, err_steps, m: int):
+    """Flatten per-step removal records into (rank, err_at_removal, order)."""
+    order = order_steps.reshape(-1)                        # (n_steps*step,)
+    errs = err_steps.reshape(-1)
+    rank = jnp.full((m,), m, jnp.int32)
+    err_at_removal = jnp.full((m,), jnp.inf, errs.dtype)
+    pos = jnp.arange(order.shape[0], dtype=jnp.int32)
+    valid = order >= 0
+    safe_order = jnp.where(valid, order, m)  # scatter pad -> dropped row
+    rank = rank.at[safe_order].min(jnp.where(valid, pos, m), mode="drop")
+    err_at_removal = err_at_removal.at[safe_order].min(
+        jnp.where(valid, errs, jnp.inf), mode="drop")
+    # Final survivor: rank m-1 equivalent (last), err inf (never prune).
+    return rank, err_at_removal, order
+
+
+@functools.partial(jax.jit, static_argnames=("step_size", "single_pass",
+                                              "bf16_scores"))
+def _pruning_order_reference(d_emb, d_mask, samples, *, step_size,
+                             single_pass, bf16_scores):
+    """Materializing path: the (N, m) score matrix is computed once and
+    stays resident; each step re-reduces the masked matrix."""
+    n, m = samples.shape[0], d_emb.shape[0]
+    scores = samples @ d_emb.T
+    scores = jnp.where(d_mask[None, :], scores, NEG_INF)
+    if bf16_scores:
+        scores = scores.astype(jnp.bfloat16)
+    top2 = _top2_single_pass if single_pass else _top2_from_scores
+
+    state0 = top2(scores, d_mask)
+    n_steps = -(-(m - 1) // step_size)  # ceil: leave >= 1 token alive
+
+    def body(carry, step):
+        alive, st = carry
+        err = token_errors(st, alive, n)
+        new_alive, sel_idx, sel_err, removed_any = _select_removals(
+            err, alive, step_size)
+        # Incremental reassignment: only samples whose best or second died
+        # need new top-2; everyone else keeps their triple (Alg.1 + §4.2
+        # "only the queries previously assigned to its Voronoi cell need to
+        # be reassigned").  Fixed shapes make a per-sample gather
+        # impossible, so the recompute is all-or-nothing: lax.cond skips
+        # the O(N*m) reduction entirely on steps where the removed tokens
+        # were nobody's best or second (free removals — duplicate or
+        # empty-cell tokens).  Under vmap (pruning_order_batch) the cond
+        # lowers to a select and both branches run — the batch path
+        # should use backend="fused" or shortlist=True instead.
+        died_b = ~new_alive[st.bi]
+        died_s = ~new_alive[st.si]
+        affected = (died_b | died_s) & removed_any
+
+        def recompute(st):
+            fresh = top2(scores, new_alive)
+            return CellState(
+                best=jnp.where(affected, fresh.best, st.best),
+                second=jnp.where(affected, fresh.second, st.second),
+                bi=jnp.where(affected, fresh.bi, st.bi),
+                si=jnp.where(affected, fresh.si, st.si),
+            )
+
+        st2 = jax.lax.cond(jnp.any(affected), recompute, lambda st: st, st)
+        return (new_alive, st2), (sel_idx, sel_err)
+
+    (_, _), (order_steps, err_steps) = jax.lax.scan(
+        body, (d_mask, state0), jnp.arange(n_steps))
+    return _order_to_rank(order_steps, err_steps, m)
+
+
+@functools.partial(jax.jit, static_argnames=("step_size", "block_s",
+                                              "block_t", "skip_unaffected"))
+def _pruning_order_fused(d_emb, d_mask, samples, *, step_size,
+                         block_s, block_t, skip_unaffected=True):
+    """Kernel-backed path: no (N, m) score matrix is ever resident.
+
+    Each step's top-2 + incremental reassignment runs through the fused
+    ``maxsim_top2`` Pallas kernel on score *tiles* (VMEM-resident, one
+    (BS, BT) block at a time).  Per-step FLOPs are higher than the
+    materializing path (tiles are recomputed from the embeddings every
+    rescan) but HBM traffic per step drops from O(N*m) score reads to
+    O((N + m) * dim) embedding reads — the regime where pruning is
+    memory-bound (long documents, large sample sets) is exactly where
+    the paper's footprint argument applies at compute time too.
+    """
+    n, m = samples.shape[0], d_emb.shape[0]
+    kern = functools.partial(maxsim_top2_op, block_s=block_s,
+                             block_t=block_t)
+    upd = functools.partial(maxsim_top2_update_op, block_s=block_s,
+                            block_t=block_t,
+                            skip_unaffected=skip_unaffected)
+    state0 = kern(samples, d_emb, d_mask)       # (best, second, bi, si)
+    n_steps = -(-(m - 1) // step_size)
+
+    def body(carry, step):
+        alive, st = carry
+        err = token_errors(CellState(*st), alive, n)
+        new_alive, sel_idx, sel_err, _ = _select_removals(
+            err, alive, step_size)
+        st2, _ = upd(samples, d_emb, new_alive, st)
+        return (new_alive, st2), (sel_idx, sel_err)
+
+    (_, _), (order_steps, err_steps) = jax.lax.scan(
+        body, (d_mask, state0), jnp.arange(n_steps))
+    return _order_to_rank(order_steps, err_steps, m)
+
+
 def pruning_order(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
                   *, step_size: int = 1, materialize: bool = True,
-                  single_pass: bool = False, bf16_scores: bool = False
+                  single_pass: bool = False, bf16_scores: bool = False,
+                  backend: str | None = None, block_s: int = 256,
+                  block_t: int = 128, skip_unaffected: bool = True
                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Iterative Voronoi pruning (Alg. 1) producing a full removal order.
 
@@ -149,70 +280,51 @@ def pruning_order(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
 
     ``step_size > 1`` removes the ``step_size`` lowest-error tokens per
     iteration between recomputations (§6.2 "Effect of Step Size").
-    ``materialize`` keeps the (N, m) score matrix resident (reference
-    path); the TPU path recomputes tiles via the Pallas kernel instead.
+
+    ``backend`` selects the execution path (``repro.core.backend``):
+    ``"reference"`` keeps the (N, m) score matrix resident;
+    ``"fused"`` recomputes score tiles through the ``maxsim_top2``
+    Pallas kernel so the matrix never exists (``materialize=False`` is
+    an alias); ``None`` resolves to fused on TPU, reference elsewhere
+    (``REPRO_BACKEND`` env var overrides).  Both paths share selection
+    and reassignment semantics — orders are identical up to float
+    tie-breaking (see tests/test_backend_dispatch.py).
+
+    This wrapper is deliberately NOT jitted: backend resolution (env
+    var, platform, flag interplay) happens eagerly at call time; only
+    the per-backend implementations carry jit caches.
+
+    ``skip_unaffected`` (fused path) wraps each step's kernel rescan in
+    a ``lax.cond`` that skips free removals; leave it True for single-
+    document calls — :func:`pruning_order_batch` turns it off because
+    under vmap the cond degenerates to a select that costs throughput.
     """
-    del materialize  # reference path always materializes
-    n, m = samples.shape[0], d_emb.shape[0]
-    scores = samples @ d_emb.T
-    scores = jnp.where(d_mask[None, :], scores, NEG_INF)
-    if bf16_scores:
-        scores = scores.astype(jnp.bfloat16)
-    top2 = _top2_single_pass if single_pass else _top2_from_scores
-
-    state0 = top2(scores, d_mask)
-    n_steps = -(-(m - 1) // step_size)  # ceil: leave >= 1 token alive
-
-    def body(carry, step):
-        alive, st = carry
-        n_alive = jnp.sum(alive)
-        err = token_errors(st, alive, n)
-        # Select up to `step_size` cheapest alive tokens, but never the
-        # last survivor.  neg-top_k over err with +inf on dead tokens.
-        k_want = jnp.minimum(step_size, jnp.maximum(n_alive - 1, 0))
-        neg = -err
-        vals, idxs = jax.lax.top_k(neg, step_size)         # cheapest first
-        take = jnp.arange(step_size) < k_want
-        sel_idx = jnp.where(take, idxs, -1)
-        sel_err = jnp.where(take, -vals, jnp.inf)
-        new_alive = alive
-        for j in range(step_size):
-            new_alive = jnp.where(
-                sel_idx[j] >= 0, new_alive.at[sel_idx[j]].set(False), new_alive)
-        removed_any = k_want > 0
-        # Incremental reassignment: only samples whose best or second died
-        # need new top-2; everyone else keeps their triple (Alg.1 + §4.2
-        # "only the queries previously assigned to its Voronoi cell need to
-        # be reassigned").  Fixed shapes -> recompute vectorized, select.
-        died_b = ~new_alive[st.bi]
-        died_s = ~new_alive[st.si]
-        affected = (died_b | died_s) & removed_any
-        fresh = top2(scores, new_alive)
-        st2 = CellState(
-            best=jnp.where(affected, fresh.best, st.best),
-            second=jnp.where(affected, fresh.second, st.second),
-            bi=jnp.where(affected, fresh.bi, st.bi),
-            si=jnp.where(affected, fresh.si, st.si),
-        )
-        return (new_alive, st2), (sel_idx, sel_err)
-
-    (_, _), (order_steps, err_steps) = jax.lax.scan(
-        body, (d_mask, state0), jnp.arange(n_steps))
-    order = order_steps.reshape(-1)                        # (n_steps*step,)
-    errs = err_steps.reshape(-1)
-
-    # rank[i]: position of token i in the flattened removal sequence.
-    rank = jnp.full((m,), m, jnp.int32)
-    err_at_removal = jnp.full((m,), jnp.inf, errs.dtype)
-    pos = jnp.arange(order.shape[0], dtype=jnp.int32)
-    valid = order >= 0
-    safe_order = jnp.where(valid, order, m)  # scatter pad -> dropped row
-    rank = rank.at[safe_order].min(jnp.where(valid, pos, m),
-                                   mode="drop")
-    err_at_removal = err_at_removal.at[safe_order].min(
-        jnp.where(valid, errs, jnp.inf), mode="drop")
-    # Final survivor: rank m-1 equivalent (last), err inf (never prune).
-    return rank, err_at_removal, order
+    if backend is None and not materialize:
+        backend = backend_lib.FUSED
+    if backend is None and (single_pass or bf16_scores):
+        # These knobs name reference-path variants; honor them over the
+        # platform default instead of silently dropping them on TPU.
+        backend = backend_lib.REFERENCE
+    allow = (backend_lib.BACKENDS if step_size == 1
+             else (backend_lib.REFERENCE, backend_lib.FUSED))
+    backend = backend_lib.resolve_backend(backend, allow=allow)
+    if backend == backend_lib.SHORTLIST:
+        return pruning_order_shortlist(d_emb, d_mask, samples,
+                                       bf16_scores=bf16_scores)
+    if backend == backend_lib.FUSED:
+        if single_pass or bf16_scores:
+            raise ValueError(
+                "single_pass/bf16_scores are reference-path knobs and "
+                "have no fused-kernel equivalent; drop them or pass "
+                "backend='reference'")
+        return _pruning_order_fused(d_emb, d_mask, samples,
+                                    step_size=step_size, block_s=block_s,
+                                    block_t=block_t,
+                                    skip_unaffected=skip_unaffected)
+    return _pruning_order_reference(d_emb, d_mask, samples,
+                                    step_size=step_size,
+                                    single_pass=single_pass,
+                                    bf16_scores=bf16_scores)
 
 
 @functools.partial(jax.jit, static_argnames=("shortlist", "rescan_every",
@@ -294,7 +406,8 @@ def pruning_order_shortlist(d_emb: jax.Array, d_mask: jax.Array,
 def pruning_order_batch(d_embs: jax.Array, d_masks: jax.Array,
                         samples: jax.Array, *, step_size: int = 1,
                         fast: bool = False, bf16_scores: bool = False,
-                        shortlist: bool = False):
+                        shortlist: bool = False,
+                        backend: str | None = None):
     """vmap of :func:`pruning_order` over a document batch (global pruning
     precomputation; embarrassingly parallel across the `data` mesh axis).
 
@@ -302,15 +415,24 @@ def pruning_order_batch(d_embs: jax.Array, d_masks: jax.Array,
     to ties; ``bf16_scores`` halves the cached score-matrix bytes;
     ``shortlist`` selects the top-K shortlist path (exact, fastest on a
     single host, but its lax.top_k rescan de-partitions under GSPMD —
-    kept for single-host pruning jobs, see EXPERIMENTS.md §Perf).
+    kept for single-host pruning jobs, see EXPERIMENTS.md §Perf);
+    ``backend`` forwards to :func:`pruning_order` (``backend="shortlist"``
+    is an alias for ``shortlist=True``).
     """
+    if backend == backend_lib.SHORTLIST:
+        backend, shortlist = None, True
     if shortlist and step_size == 1:
         fn = lambda e, k: pruning_order_shortlist(
             e, k, samples, bf16_scores=bf16_scores)
     else:
+        # skip_unaffected off: under vmap the fused path's lax.cond
+        # rescan-skip lowers to a both-branches select and measurably
+        # costs throughput instead of saving it.
         fn = lambda e, k: pruning_order(e, k, samples, step_size=step_size,
                                         single_pass=fast,
-                                        bf16_scores=bf16_scores)
+                                        bf16_scores=bf16_scores,
+                                        backend=backend,
+                                        skip_unaffected=False)
     return jax.vmap(fn)(d_embs, d_masks)
 
 
@@ -323,11 +445,15 @@ def keep_mask_from_order(rank: jax.Array, d_mask: jax.Array,
     return d_mask & (rank >= n_prune)
 
 
-@functools.partial(jax.jit, static_argnames=("step_size",))
 def prune_to_size(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
-                  target: int, *, step_size: int = 1) -> jax.Array:
-    """Alg. 1 entry point: keep-mask with exactly min(target, n_real) tokens."""
-    rank, _, _ = pruning_order(d_emb, d_mask, samples, step_size=step_size)
+                  target: int, *, step_size: int = 1,
+                  backend: str | None = None) -> jax.Array:
+    """Alg. 1 entry point: keep-mask with exactly min(target, n_real) tokens.
+
+    Un-jitted like :func:`pruning_order` so backend resolution stays a
+    call-time decision; the heavy lifting inside is jitted."""
+    rank, _, _ = pruning_order(d_emb, d_mask, samples, step_size=step_size,
+                               backend=backend)
     return keep_mask_from_order(rank, d_mask, target)
 
 

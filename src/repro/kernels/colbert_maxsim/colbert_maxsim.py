@@ -1,15 +1,24 @@
-"""Batched ColBERT MaxSim scoring Pallas kernel (serving/rerank hot spot).
+"""Batched ColBERT MaxSim scoring Pallas kernels (serving/rerank hot spot).
 
-Scores one query (l token vectors) against a block of candidate
-documents per grid step.  Documents are short (m <= ~256) so a whole
-(DB, m, dim) doc tile fits VMEM; the (DB, m, l) score tensor stays in
-VREGs, is masked, max-reduced over document tokens and sum-reduced over
-query tokens on-chip — only (DB,) scalars reach HBM.  This is the padded
-block-diagonal batching described in DESIGN.md §3: the MXU sees one
-dense (DB*m, dim) x (dim, l) matmul per tile.
+Two entry points share the same tiling idea — documents are short
+(m <= ~256) so a whole (DB, m, dim) doc tile fits VMEM, the block score
+tensor stays in VREGs, is masked, max-reduced over document tokens and
+sum-reduced over query tokens on-chip, and only per-doc scalars reach
+HBM.  This is the padded block-diagonal batching described in
+DESIGN.md §3.
 
-VMEM per step (DB=8, m=256, dim=128, l=32, f32):
-  docs 8*256*128*4 = 1.0 MB, scores 8*256*32*4 = 0.25 MB — comfortable.
+* ``colbert_maxsim``       — one query (l, dim) against all docs; the MXU
+  sees one dense (DB*m, dim) x (dim, l) matmul per tile.
+* ``colbert_maxsim_multi`` — a query BATCH (n_q, l, dim) against all
+  docs; the MXU sees one (DB*m, dim) x (dim, n_q*l) matmul per tile and
+  the output block is (n_q, DB).  This is the serving path: the full
+  corpus is swept in doc blocks and the 4-D (n_q, n_docs, l, m) einsum
+  tensor of the reference path is never materialized — the biggest
+  intermediate is the (DB, m, n_q, l) VMEM tile.
+
+VMEM per multi step (DB=8, m=256, dim=128, n_q=16, l=32, f32):
+  docs 8*256*128*4 = 1.0 MB, scores 8*256*16*32*4 = 4.0 MB — sized so
+  callers with bigger query batches chunk queries (serve layer does).
 """
 
 from __future__ import annotations
@@ -20,29 +29,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.backend import default_interpret
+
 NEG = -1e30
 
 
-def _kernel(q_ref, d_ref, mask_ref, out_ref):
+def _kernel(q_ref, d_ref, mask_ref, qmask_ref, out_ref):
     q = q_ref[...].astype(jnp.float32)            # (l, dim)
     d = d_ref[...].astype(jnp.float32)            # (DB, m, dim)
     msk = mask_ref[...]                           # (DB, m) int32
+    qmsk = qmask_ref[...]                         # (1, l) int32
     db, m, dim = d.shape
-    l = q.shape[0]
     d2 = d.reshape(db * m, dim)
     s = jax.lax.dot_general(d2, q, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    s = s.reshape(db, m, l)
+    s = s.reshape(db, m, q.shape[0])
     s = jnp.where((msk > 0)[:, :, None], s, NEG)
     best = jnp.max(s, axis=1)                     # (DB, l)
+    best = jnp.where((qmsk > 0), best, 0.0)       # (DB, l) via (1, l) bcast
     out_ref[...] = jnp.sum(best, axis=1, keepdims=True)  # (DB, 1)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def colbert_maxsim(q_emb: jax.Array, d_embs: jax.Array, d_masks: jax.Array,
-                   *, block_d: int = 8, interpret: bool = True) -> jax.Array:
-    """q_emb (l, dim) x d_embs (n_docs, m, dim) -> (n_docs,) scores."""
+                   q_mask: jax.Array | None = None, *, block_d: int = 8,
+                   interpret: bool | None = None) -> jax.Array:
+    """q_emb (l, dim) x d_embs (n_docs, m, dim) -> (n_docs,) scores.
+
+    ``interpret=None`` resolves to the compiled Mosaic kernel on TPU and
+    the Pallas interpreter elsewhere (`backend.default_interpret`).
+    """
+    interpret = default_interpret(interpret)
     n_docs, m, dim = d_embs.shape
+    l = q_emb.shape[0]
     db = min(block_d, n_docs)
     pad = (-n_docs) % db
     if pad:
@@ -50,16 +69,79 @@ def colbert_maxsim(q_emb: jax.Array, d_embs: jax.Array, d_masks: jax.Array,
         d_masks = jnp.pad(d_masks, ((0, pad), (0, 0)))
     np_ = d_embs.shape[0]
     mask_i = d_masks.astype(jnp.int32)
+    if q_mask is None:
+        q_mask = jnp.ones((l,), bool)
+    qmask_i = q_mask.astype(jnp.int32)[None, :]   # (1, l)
     out = pl.pallas_call(
         _kernel,
         grid=(np_ // db,),
         in_specs=[
-            pl.BlockSpec((q_emb.shape[0], dim), lambda i: (0, 0)),
+            pl.BlockSpec((l, dim), lambda i: (0, 0)),
             pl.BlockSpec((db, m, dim), lambda i: (i, 0, 0)),
             pl.BlockSpec((db, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, l), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((db, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
         interpret=interpret,
-    )(q_emb, d_embs, mask_i)
+    )(q_emb, d_embs, mask_i, qmask_i)
     return out[:n_docs, 0]
+
+
+def _kernel_multi(q_ref, d_ref, mask_ref, qmask_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)            # (n_q, l, dim)
+    d = d_ref[...].astype(jnp.float32)            # (DB, m, dim)
+    msk = mask_ref[...]                           # (DB, m) int32
+    qmsk = qmask_ref[...]                         # (n_q, l) int32
+    n_q, l, dim = q.shape
+    db, m, _ = d.shape
+    d2 = d.reshape(db * m, dim)
+    q2 = q.reshape(n_q * l, dim)
+    s = jax.lax.dot_general(d2, q2, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s.reshape(db, m, n_q, l)
+    s = jnp.where((msk > 0)[:, :, None, None], s, NEG)
+    best = jnp.max(s, axis=1)                     # (DB, n_q, l)
+    best = jnp.where((qmsk > 0)[None], best, 0.0)
+    out_ref[...] = jnp.transpose(jnp.sum(best, axis=-1))  # (n_q, DB)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def colbert_maxsim_multi(q_embs: jax.Array, d_embs: jax.Array,
+                         d_masks: jax.Array,
+                         q_masks: jax.Array | None = None, *,
+                         block_d: int = 8,
+                         interpret: bool | None = None) -> jax.Array:
+    """q_embs (n_q, l, dim) x d_embs (n_docs, m, dim) -> (n_q, n_docs).
+
+    The multi-query serving kernel: corpus swept in ``block_d`` doc
+    blocks, all queries scored per block on one MXU matmul.  No
+    (n_q, n_docs, l, m) tensor exists at any point.
+    """
+    interpret = default_interpret(interpret)
+    n_docs, m, dim = d_embs.shape
+    n_q, l, _ = q_embs.shape
+    db = min(block_d, n_docs)
+    pad = (-n_docs) % db
+    if pad:
+        d_embs = jnp.pad(d_embs, ((0, pad), (0, 0), (0, 0)))
+        d_masks = jnp.pad(d_masks, ((0, pad), (0, 0)))
+    np_ = d_embs.shape[0]
+    mask_i = d_masks.astype(jnp.int32)
+    if q_masks is None:
+        q_masks = jnp.ones((n_q, l), bool)
+    qmask_i = q_masks.astype(jnp.int32)
+    out = pl.pallas_call(
+        _kernel_multi,
+        grid=(np_ // db,),
+        in_specs=[
+            pl.BlockSpec((n_q, l, dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((db, m, dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((db, m), lambda i: (i, 0)),
+            pl.BlockSpec((n_q, l), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_q, db), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_q, np_), jnp.float32),
+        interpret=interpret,
+    )(q_embs, d_embs, mask_i, qmask_i)
+    return out[:, :n_docs]

@@ -1,4 +1,16 @@
-"""jit'd wrapper: Pallas on TPU, interpret elsewhere; vmap over queries."""
+"""jit'd wrappers for the ColBERT MaxSim kernels.
+
+Pallas Mosaic on TPU, interpreter elsewhere (resolved inside the kernel
+entry points via `repro.core.backend.default_interpret`).  Three shapes
+of serving work:
+
+* ``colbert_maxsim_op``        — one query vs a doc batch;
+* ``colbert_maxsim_multi_op``  — a query batch vs the corpus in one
+  grid sweep (e2e / exact scoring path);
+* ``colbert_maxsim_rerank_op`` — per-query candidate sets (the two-stage
+  rerank: each query has its OWN gathered doc block), vmapped over the
+  query axis so every query's candidates go through the fused kernel.
+"""
 
 from __future__ import annotations
 
@@ -6,22 +18,46 @@ import functools
 
 import jax
 
-from repro.kernels.colbert_maxsim.colbert_maxsim import colbert_maxsim
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.colbert_maxsim.colbert_maxsim import (colbert_maxsim,
+                                                         colbert_maxsim_multi)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d",))
-def colbert_maxsim_op(q_emb, d_embs, d_masks, *, block_d: int = 8):
-    return colbert_maxsim(q_emb, d_embs, d_masks, block_d=block_d,
-                          interpret=not _on_tpu())
+def colbert_maxsim_op(q_emb, d_embs, d_masks, q_mask=None, *,
+                      block_d: int = 8):
+    return colbert_maxsim(q_emb, d_embs, d_masks, q_mask, block_d=block_d)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d",))
 def colbert_maxsim_batch_op(q_embs, d_embs, d_masks, *, block_d: int = 8):
-    """(n_q, l, dim) x (n_docs, m, dim) -> (n_q, n_docs)."""
-    fn = lambda q: colbert_maxsim(q, d_embs, d_masks, block_d=block_d,
-                                  interpret=not _on_tpu())
+    """(n_q, l, dim) x (n_docs, m, dim) -> (n_q, n_docs).
+
+    Kept for compatibility: vmap of the single-query kernel over shared
+    docs.  Prefer ``colbert_maxsim_multi_op`` (one kernel launch, bigger
+    MXU matmuls) on the serving path.
+    """
+    fn = lambda q: colbert_maxsim(q, d_embs, d_masks, block_d=block_d)
     return jax.vmap(fn)(q_embs)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def colbert_maxsim_multi_op(q_embs, d_embs, d_masks, q_masks=None, *,
+                            block_d: int = 8):
+    """(n_q, l, dim) x (n_docs, m, dim) -> (n_q, n_docs), fused multi-query."""
+    return colbert_maxsim_multi(q_embs, d_embs, d_masks, q_masks,
+                                block_d=block_d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def colbert_maxsim_rerank_op(q_embs, d_subs, m_subs, q_masks=None, *,
+                             block_d: int = 8):
+    """Two-stage rerank: query i vs ITS candidate block.
+
+    q_embs (n_q, l, dim); d_subs (n_q, n_cand, m, dim);
+    m_subs (n_q, n_cand, m) -> (n_q, n_cand) scores.
+    """
+    if q_masks is None:
+        fn = lambda q, d, m: colbert_maxsim(q, d, m, block_d=block_d)
+        return jax.vmap(fn)(q_embs, d_subs, m_subs)
+    fn = lambda q, d, m, qm: colbert_maxsim(q, d, m, qm, block_d=block_d)
+    return jax.vmap(fn)(q_embs, d_subs, m_subs, q_masks)

@@ -17,3 +17,17 @@ def colbert_maxsim_ref(q_emb, d_embs, d_masks, q_mask=None):
     if q_mask is not None:
         best = jnp.where(q_mask[None, :], best, 0.0)
     return best.sum(-1)
+
+
+def colbert_maxsim_multi_ref(q_embs, d_embs, d_masks, q_masks=None):
+    """q_embs: (n_q, l, dim); d_embs: (n_docs, m, dim) -> (n_q, n_docs).
+
+    Materializes the full 4-D (n_q, n_docs, l, m) score tensor — the
+    footprint the multi-query kernel exists to avoid."""
+    s = jnp.einsum("qld,nmd->qnlm", q_embs.astype(jnp.float32),
+                   d_embs.astype(jnp.float32))
+    s = jnp.where(d_masks[None, :, None, :], s, NEG)
+    best = s.max(-1)                    # (n_q, n_docs, l)
+    if q_masks is not None:
+        best = jnp.where(q_masks[:, None, :], best, 0.0)
+    return best.sum(-1)

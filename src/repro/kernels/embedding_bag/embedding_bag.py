@@ -34,8 +34,12 @@ def _kernel(ids_ref, row_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("mode", "interpret"))
 def embedding_bag(table: jax.Array, ids: jax.Array, *, mode: str = "sum",
-                  interpret: bool = True) -> jax.Array:
-    """table: (V, D); ids: (n_bags, nnz) int32 -> (n_bags, D) f32."""
+                  interpret: bool | None = None) -> jax.Array:
+    """table: (V, D); ids: (n_bags, nnz) int32 -> (n_bags, D) f32.
+
+    ``interpret=None`` -> Mosaic on TPU, Pallas interpreter elsewhere."""
+    from repro.core.backend import default_interpret
+    interpret = default_interpret(interpret)
     n_bags, nnz = ids.shape
     V, D = table.shape
     flat_ids = ids.reshape(-1).astype(jnp.int32)

@@ -9,10 +9,6 @@ import jax
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("mode",))
 def embedding_bag_op(table, ids, *, mode: str = "sum"):
-    return embedding_bag(table, ids, mode=mode, interpret=not _on_tpu())
+    return embedding_bag(table, ids, mode=mode)

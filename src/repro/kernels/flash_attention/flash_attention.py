@@ -84,8 +84,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = False, window: int | None = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
-    """q: (H, Sq, d); k, v: (H, Sk, d) -> (H, Sq, d)."""
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (H, Sq, d); k, v: (H, Sk, d) -> (H, Sq, d).
+
+    ``interpret=None`` -> Mosaic on TPU, Pallas interpreter elsewhere."""
+    from repro.core.backend import default_interpret
+    interpret = default_interpret(interpret)
     H, Sq, d = q.shape
     Sk = k.shape[1]
     bq = min(block_q, Sq)

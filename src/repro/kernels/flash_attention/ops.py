@@ -10,10 +10,6 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.flash_attention import flash_attention
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("causal", "window"))
 def flash_attention_op(q, k, v, *, causal: bool = False,
                        window: int | None = None):
@@ -23,5 +19,4 @@ def flash_attention_op(q, k, v, *, causal: bool = False,
         rep = H // KV
         k = jnp.repeat(k, rep, axis=0)
         v = jnp.repeat(v, rep, axis=0)
-    return flash_attention(q, k, v, causal=causal, window=window,
-                           interpret=not _on_tpu())
+    return flash_attention(q, k, v, causal=causal, window=window)

@@ -1,9 +1,18 @@
-"""jit'd public wrapper for the fused MaxSim top-2 kernel.
+"""jit'd public wrappers for the fused MaxSim top-2 kernel.
 
-Selects the Pallas TPU kernel on TPU backends and the interpret-mode
-kernel elsewhere (bit-identical semantics; interpret executes the same
-kernel body in Python).  `voronoi_errors_fused` is the drop-in
-replacement for `repro.core.voronoi.estimate_errors` on the hot path.
+`maxsim_top2_op` selects the compiled Pallas TPU kernel on TPU backends
+and the interpret-mode kernel elsewhere (bit-identical semantics;
+interpret executes the same kernel body through the Pallas interpreter).
+
+`maxsim_top2_update_op` is the alive-mask-update entry used by the
+iterative pruning loop (Alg. 1): given the previous per-sample cell
+state and a *shrunk* alive mask it re-runs the fused kernel and keeps
+the old state for every sample whose best AND second token both
+survived — those samples' top-2 over a subset-alive token set provably
+cannot change, so the select is exact, not an approximation.
+
+`voronoi_errors_fused` is the drop-in replacement for
+`repro.core.voronoi.estimate_errors` on the hot path.
 """
 
 from __future__ import annotations
@@ -16,23 +25,59 @@ import jax.numpy as jnp
 from repro.kernels.maxsim_top2.maxsim_top2 import maxsim_top2
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("block_s", "block_t"))
 def maxsim_top2_op(samples, tokens, alive, *, block_s: int = 256,
                    block_t: int = 128):
+    """(best, second, argbest, argsecond) over alive tokens, fused."""
     return maxsim_top2(samples, tokens, alive, block_s=block_s,
-                       block_t=block_t, interpret=not _on_tpu())
+                       block_t=block_t)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_t",
+                                             "skip_unaffected"))
+def maxsim_top2_update_op(samples, tokens, alive, prev, *,
+                          block_s: int = 256, block_t: int = 128,
+                          skip_unaffected: bool = True):
+    """Incremental cell reassignment after an alive-mask shrink.
+
+    ``prev`` is the (best, second, argbest, argsecond) tuple computed
+    under the previous (superset) alive mask.  Returns the updated tuple
+    under ``alive`` plus the affected-sample mask.  Only samples whose
+    best or second token died are rewritten from the fused rescan.  The
+    rescan sweeps all token tiles when it runs (fixed shapes; no (N, m)
+    matrix is ever resident — each tile lives only in VMEM), but a
+    with ``skip_unaffected=True`` a ``lax.cond`` skips it entirely on
+    free-removal steps where no sample is affected (duplicate/
+    empty-cell tokens) — the same all-or-nothing skip the reference
+    path applies.  Pass ``skip_unaffected=False`` under vmap: there the
+    cond lowers to a select, both branches run anyway, and the batched
+    cond-of-pallas measurably *costs* throughput instead of saving it.
+    """
+    p_best, p_second, p_bi, p_si = prev
+    affected = ~alive[p_bi] | ~alive[p_si]
+
+    def rescan(prev):
+        p_best, p_second, p_bi, p_si = prev
+        f_best, f_second, f_bi, f_si = maxsim_top2(
+            samples, tokens, alive, block_s=block_s, block_t=block_t)
+        return (jnp.where(affected, f_best, p_best),
+                jnp.where(affected, f_second, p_second),
+                jnp.where(affected, f_bi, p_bi),
+                jnp.where(affected, f_si, p_si))
+
+    if skip_unaffected:
+        new = jax.lax.cond(jnp.any(affected), rescan, lambda p: p, prev)
+    else:
+        new = rescan(prev)
+    return new, affected
 
 
 def voronoi_errors_fused(samples, tokens, alive, *, block_s: int = 256,
                          block_t: int = 128):
     """Eq. 8 per-token errors via the fused kernel (never materializes
     the (N, m) score matrix)."""
-    best, second, bi = maxsim_top2_op(samples, tokens, alive,
-                                      block_s=block_s, block_t=block_t)
+    best, second, bi, _ = maxsim_top2_op(samples, tokens, alive,
+                                         block_s=block_s, block_t=block_t)
     m = tokens.shape[0]
     gap = best - second
     err = jnp.zeros((m,), jnp.float32).at[bi].add(gap) / samples.shape[0]

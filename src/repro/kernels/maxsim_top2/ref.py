@@ -1,9 +1,10 @@
 """Pure-jnp oracle for the fused MaxSim top-2 kernel.
 
 Given samples S (N, dim), tokens D (m, dim) and an alive mask (m,),
-return per-sample (best, second, argbest) of S @ D.T over alive tokens.
-This is exactly what the Voronoi estimator needs (Eq. 8): best - second
-is the pruning-error integrand; argbest is the cell id.
+return per-sample (best, second, argbest, argsecond) of S @ D.T over
+alive tokens.  This is exactly what the Voronoi estimator needs (Eq. 8):
+best - second is the pruning-error integrand; argbest is the cell id;
+argsecond feeds the incremental-reassignment affected check (Alg. 1).
 """
 
 from __future__ import annotations
@@ -19,5 +20,6 @@ def maxsim_top2_ref(samples, tokens, alive):
     bi = jnp.argmax(scores, axis=-1).astype(jnp.int32)
     best = jnp.max(scores, axis=-1)
     masked = scores.at[jnp.arange(scores.shape[0]), bi].set(NEG)
+    si = jnp.argmax(masked, axis=-1).astype(jnp.int32)
     second = jnp.max(masked, axis=-1)
-    return best, second, bi
+    return best, second, bi, si

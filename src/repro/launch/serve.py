@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import backend as backend_lib
 from repro.core import voronoi
 from repro.core.sampling import sample_sphere
 from repro.data import synthetic
@@ -24,7 +25,8 @@ from repro.train import checkpoint
 
 
 def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
-                    ckpt_dir: str | None = None, seed: int = 0):
+                    ckpt_dir: str | None = None, seed: int = 0,
+                    backend: str | None = None):
     cfg = configs.get("colbert").smoke
     params = colbert_lib.init_params(jax.random.PRNGKey(seed), cfg)
     if ckpt_dir:
@@ -38,12 +40,16 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
     d_emb, d_mask = colbert_lib.encode_docs(params, cfg, corpus.doc_ids)
     index = TokenIndex.build(d_emb, d_mask)
     samples = sample_sphere(jax.random.PRNGKey(1), 2048, cfg.out_dim)
-    ranks, errs, _ = voronoi.pruning_order_batch(d_emb, d_mask, samples)
+    ranks, errs, _ = voronoi.pruning_order_batch(d_emb, d_mask, samples,
+                                                 backend=backend)
     keep = voronoi.global_keep_masks(ranks, errs, d_mask, keep_fraction)
     pruned = index.with_keep(keep)
     print(f"[serve] index: {index.storage()}")
     print(f"[serve] pruned: {pruned.storage()}")
-    server = RetrievalServer(pruned, k=10)
+    # shortlist is a pruning-only path; serving falls back to the default.
+    serve_backend = backend if backend in backend_lib.SERVING else None
+    server = RetrievalServer(pruned, k=10, backend=serve_backend)
+    print(f"[serve] scoring backend: {server.backend}")
     q_emb, _ = colbert_lib.encode_queries(params, cfg, corpus.q_ids)
     t0 = time.time()
     idx, scores = server.query_batch(q_emb)
@@ -77,9 +83,14 @@ def main():
     ap.add_argument("--keep", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--backend", default=None,
+                    choices=["reference", "fused", "shortlist"],
+                    help="pruning/scoring path (default: fused on TPU, "
+                         "reference elsewhere; see repro.core.backend)")
     args = ap.parse_args()
     if args.arch == "colbert":
-        serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir)
+        serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir,
+                        backend=args.backend)
     else:
         serve_lm(args.arch, n_tokens=args.tokens)
 

@@ -12,16 +12,30 @@ pruning ratios can be swept cheaply; `storage()` reports both logical and
 compacted sizes (the number the paper's "Remain %" column tracks).
 Candidate scoring shards over the `model` axis ("candidates" logical
 axis) in the production mesh.
+
+Backend dispatch (``repro.core.backend``): the ``reference`` path scores
+via a single einsum that materializes the 4-D (n_q, n_docs, l, m) score
+tensor — O(n_q * n_docs * l * m) HBM at query time, the very footprint
+token pruning exists to kill.  The ``fused`` path sweeps the corpus in
+static ``block_docs``-sized blocks through the ``colbert_maxsim`` Pallas
+kernels: the biggest live intermediate is one (block_docs, m, n_q, l)
+VMEM tile, multi-query rerank is batched through one kernel launch, and
+the compiled HLO contains no 4-D score tensor (asserted in
+tests/test_backend_dispatch.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_lib
 from repro.core.scoring import NEG_INF
+from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_multi_op,
+                                              colbert_maxsim_rerank_op)
 from repro.sharding import constrain
 
 
@@ -60,25 +74,62 @@ class TokenIndex:
         return (self.d_embs * w).sum(1) / jnp.maximum(w.sum(1), 1.0)
 
 
-def maxsim_scores(index: TokenIndex, q_embs: jnp.ndarray,
-                  q_masks: jnp.ndarray | None = None) -> jnp.ndarray:
-    """(n_q, n_docs) exact MaxSim over the pruned index."""
-    mask = index.active_mask
-    s = jnp.einsum("qld,nmd->qnlm", q_embs, index.d_embs)
-    s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+def _maxsim_scores_reference(d_embs, active_mask, q_embs, q_masks):
+    """Materializing einsum path — the parity oracle."""
+    s = jnp.einsum("qld,nmd->qnlm", q_embs, d_embs)
+    s = jnp.where(active_mask[None, :, None, :], s, NEG_INF)
     best = s.max(-1)
     if q_masks is not None:
         best = jnp.where(q_masks[:, None, :], best, 0.0)
     return best.sum(-1)
 
 
+def _maxsim_scores_fused(d_embs, active_mask, q_embs, q_masks, *,
+                         block_docs, block_q):
+    """Chunked kernel path: corpus swept in ``block_docs`` blocks, query
+    batch in ``block_q`` chunks (a static unrolled loop under jit) to
+    bound the per-launch VMEM tile."""
+    n_q = q_embs.shape[0]
+    bq = min(block_q, n_q)
+    outs = []
+    for start in range(0, n_q, bq):
+        q_chunk = q_embs[start:start + bq]
+        qm_chunk = None if q_masks is None else q_masks[start:start + bq]
+        outs.append(colbert_maxsim_multi_op(q_chunk, d_embs, active_mask,
+                                            qm_chunk, block_d=block_docs))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+
+def maxsim_scores(index: TokenIndex, q_embs: jnp.ndarray,
+                  q_masks: jnp.ndarray | None = None, *,
+                  backend: str | None = None, block_docs: int = 8,
+                  block_q: int = 16) -> jnp.ndarray:
+    """(n_q, n_docs) exact MaxSim over the pruned index.
+
+    Both backends are exact; they differ only in what they materialize
+    (see module docstring).  ``backend=None`` resolves to fused on TPU,
+    reference elsewhere.
+    """
+    backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
+    if backend == backend_lib.FUSED:
+        return _maxsim_scores_fused(index.d_embs, index.active_mask,
+                                    q_embs, q_masks, block_docs=block_docs,
+                                    block_q=block_q)
+    return _maxsim_scores_reference(index.d_embs, index.active_mask,
+                                    q_embs, q_masks)
+
+
 def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
            n_first: int = 64, end_to_end: bool = False,
-           q_masks: jnp.ndarray | None = None):
+           q_masks: jnp.ndarray | None = None,
+           backend: str | None = None, block_docs: int = 8,
+           block_q: int = 16):
     """Two-stage (or e2e) retrieval. Returns (top_idx, top_scores, full)."""
+    backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
     n_docs = index.d_embs.shape[0]
     if end_to_end or n_first >= n_docs:
-        scores = maxsim_scores(index, q_embs, q_masks)
+        scores = maxsim_scores(index, q_embs, q_masks, backend=backend,
+                               block_docs=block_docs, block_q=block_q)
         scores = constrain(scores, "batch", "candidates")
         top_scores, top_idx = jax.lax.top_k(scores, k)
         return top_idx, top_scores, scores
@@ -89,15 +140,22 @@ def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
     first = q_pool @ pooled.T                        # (n_q, n_docs)
     _, cand = jax.lax.top_k(first, n_first)          # (n_q, n_first)
 
-    # Gather candidate docs and rerank with exact MaxSim.
+    # Gather candidate docs and rerank with exact MaxSim.  The gather is
+    # the index lookup; only the *scoring* differs per backend.
     d_sub = index.d_embs[cand]                       # (n_q, n_first, m, dim)
     m_sub = index.active_mask[cand]
-    s = jnp.einsum("qld,qnmd->qnlm", q_embs, d_sub)
-    s = jnp.where(m_sub[:, :, None, :], s, NEG_INF)
-    best = s.max(-1)
-    if q_masks is not None:
-        best = jnp.where(q_masks[:, None, :], best, 0.0)
-    rerank = best.sum(-1)                            # (n_q, n_first)
+    if backend == backend_lib.FUSED:
+        # Batched multi-query rerank: every query's candidate block goes
+        # through one fused kernel launch; no (n_q, n_first, l, m) tensor.
+        rerank = colbert_maxsim_rerank_op(q_embs, d_sub, m_sub, q_masks,
+                                          block_d=block_docs)
+    else:
+        s = jnp.einsum("qld,qnmd->qnlm", q_embs, d_sub)
+        s = jnp.where(m_sub[:, :, None, :], s, NEG_INF)
+        best = s.max(-1)
+        if q_masks is not None:
+            best = jnp.where(q_masks[:, None, :], best, 0.0)
+        rerank = best.sum(-1)                        # (n_q, n_first)
     top_scores, local = jax.lax.top_k(rerank, min(k, n_first))
     top_idx = jnp.take_along_axis(cand, local, axis=1)
     # densify to full score matrix for metric computation
@@ -107,14 +165,27 @@ def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
 
 
 class RetrievalServer:
-    """Batched request serving over a pruned index (examples/serve)."""
+    """Batched request serving over a pruned index (examples/serve).
 
-    def __init__(self, index: TokenIndex, *, k: int = 10, n_first: int = 64):
+    ``backend``/``block_docs``/``block_q`` select and tune the scoring
+    path once at construction; the jitted search closure bakes them in.
+    """
+
+    def __init__(self, index: TokenIndex, *, k: int = 10, n_first: int = 64,
+                 backend: str | None = None, block_docs: int = 8,
+                 block_q: int = 16):
         self.index = index
         self.k = k
         self.n_first = n_first
-        self._search = jax.jit(
-            lambda q: search(index, q, k=k, n_first=n_first)[:2])
+        self.backend = backend_lib.resolve_backend(backend,
+                                                   allow=backend_lib.SERVING)
+        self._search = jax.jit(functools.partial(
+            self._run, index, k=k, n_first=n_first, backend=self.backend,
+            block_docs=block_docs, block_q=block_q))
+
+    @staticmethod
+    def _run(index, q, **kw):
+        return search(index, q, **kw)[:2]
 
     def query_batch(self, q_embs: jnp.ndarray):
         idx, scores = self._search(q_embs)

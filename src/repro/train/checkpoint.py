@@ -15,7 +15,13 @@ Guarantees:
     on a daemon thread so the train loop is blocked only for the
     device->host copy.
 
-Layout:   <root>/step_000123/{manifest.json, leaves.msgpack.zst}
+Layout:   <root>/step_000123/{manifest.json, leaves.msgpack[.zst]}
+
+Compression is **optional**: when the ``zstandard`` wheel is available the
+body is zstd-compressed (``leaves.msgpack.zst``); otherwise leaves are
+written raw (``leaves.msgpack``).  The manifest records which was used so
+restore is self-describing.  Requesting ``compression="zstd"`` explicitly
+without the wheel raises a clear error instead of dying at import time.
 """
 
 from __future__ import annotations
@@ -32,7 +38,28 @@ _tmp_counter = itertools.count()
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dependency — no-compression fallback when absent
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
+
+_BODY = {"zstd": "leaves.msgpack.zst", "none": "leaves.msgpack"}
+
+
+def _resolve_compression(compression: str | None) -> str:
+    if compression is None:
+        return "zstd" if zstandard is not None else "none"
+    if compression not in _BODY:
+        raise ValueError(f"unknown compression {compression!r}; "
+                         f"choose one of {sorted(_BODY)} or None")
+    if compression == "zstd" and zstandard is None:
+        raise ImportError(
+            "checkpoint compression='zstd' requested but the `zstandard` "
+            "package is not installed; install it or pass "
+            "compression='none' / leave compression=None for the "
+            "uncompressed fallback")
+    return compression
 
 
 def _tree_paths(tree):
@@ -41,8 +68,9 @@ def _tree_paths(tree):
 
 
 def save(root: str, step: int, tree, *, keep: int = 3,
-         keep_period: int = 0) -> str:
+         keep_period: int = 0, compression: str | None = None) -> str:
     """Synchronous atomic checkpoint save. Returns the final directory."""
+    compression = _resolve_compression(compression)
     os.makedirs(root, exist_ok=True)
     # tmp name unique per CALL (pid + counter): a sync save may race a
     # pending async save of the same step; both must stage independently.
@@ -55,11 +83,12 @@ def save(root: str, step: int, tree, *, keep: int = 3,
 
     host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
     entries = _tree_paths(host_tree)
-    manifest = {"step": step, "format": 1, "leaves": []}
+    manifest = {"step": step, "format": 1, "compression": compression,
+                "leaves": []}
     packer = msgpack.Packer()
-    cctx = zstandard.ZstdCompressor(level=3)
-    body_path = os.path.join(tmp, "leaves.msgpack.zst")
-    with open(body_path, "wb") as f, cctx.stream_writer(f) as zf:
+    body_path = os.path.join(tmp, _BODY[compression])
+
+    def _write_body(zf):
         for name, leaf in entries:
             buf = np.ascontiguousarray(leaf).tobytes()
             manifest["leaves"].append({
@@ -70,7 +99,16 @@ def save(root: str, step: int, tree, *, keep: int = 3,
                 "nbytes": len(buf),
             })
             zf.write(packer.pack(buf))
-        zf.flush()
+
+    with open(body_path, "wb") as f:
+        if compression == "zstd":
+            cctx = zstandard.ZstdCompressor(level=3)
+            with cctx.stream_writer(f) as zf:
+                _write_body(zf)
+                zf.flush()
+        else:
+            _write_body(f)
+            f.flush()
     with open(body_path, "rb") as f:
         os.fsync(f.fileno())
     man_path = os.path.join(tmp, "manifest.json")
@@ -125,10 +163,17 @@ def list_steps(root: str) -> list[int]:
 def _verify_and_load(path: str, like_tree):
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    # format-1 checkpoints predate the compression field and are zstd.
+    compression = manifest.get("compression", "zstd")
+    if compression == "zstd" and zstandard is None:
+        raise ImportError(
+            f"checkpoint {path} is zstd-compressed but the `zstandard` "
+            "package is not installed")
     leaves = []
-    dctx = zstandard.ZstdDecompressor()
-    with open(os.path.join(path, "leaves.msgpack.zst"), "rb") as f:
-        unpacker = msgpack.Unpacker(dctx.stream_reader(f))
+    with open(os.path.join(path, _BODY[compression]), "rb") as f:
+        stream = (zstandard.ZstdDecompressor().stream_reader(f)
+                  if compression == "zstd" else f)
+        unpacker = msgpack.Unpacker(stream)
         for meta, buf in zip(manifest["leaves"], unpacker):
             if (zlib.crc32(buf) & 0xFFFFFFFF) != meta["crc32"]:
                 raise IOError(f"checksum mismatch for {meta['name']}")

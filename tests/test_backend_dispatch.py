@@ -1,0 +1,281 @@
+"""Backend-dispatch seam: fused/chunked paths vs reference oracles.
+
+Covers the contract the dispatch layer (repro.core.backend) promises:
+  * pruning_order(backend="fused") orders are IDENTICAL to the reference
+    path (same selection + reassignment semantics, lax.top_k lowest-index
+    tie-breaking shared by construction);
+  * chunked search()/maxsim_scores(backend="fused") match the reference
+    einsum path, including padded/ragged masks and query masks;
+  * the compiled fused serving HLO contains NO 4-D (n_q, n_docs, l, m)
+    score tensor while the reference provably does;
+  * pruning_order_shortlist is exact right at the
+    shortlist == rescan_every + 1 boundary (the proof's edge);
+  * the env-var/argument resolution rules of repro.core.backend.
+"""
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _proptest import sweep
+from repro.core import backend as backend_lib
+from repro.core import sampling, voronoi
+from repro.serve.retrieval import TokenIndex, maxsim_scores, search
+
+
+def _doc(seed, m, dim, n_real=None, radius=0.9):
+    k = jax.random.PRNGKey(seed)
+    d = jax.random.normal(k, (m, dim))
+    d = d / jnp.linalg.norm(d, axis=-1, keepdims=True) * radius
+    n_real = n_real or m
+    return d, jnp.arange(m) < n_real
+
+
+def _corpus(seed, n_docs, m, dim, ragged=True):
+    k = jax.random.PRNGKey(seed)
+    d = jax.random.normal(k, (n_docs, m, dim)) * 0.5
+    if ragged:
+        n_real = jax.random.randint(jax.random.fold_in(k, 1), (n_docs,),
+                                    1, m + 1)
+        masks = jnp.arange(m)[None, :] < n_real[:, None]
+    else:
+        masks = jnp.ones((n_docs, m), bool)
+    return d, masks
+
+
+class TestPruningBackendParity:
+    @sweep(n_cases=8, seed=0, m=[6, 16, 23], dim=[4, 8],
+           n_real=[None, 5], step=[1, 2])
+    def test_fused_order_identical_to_reference(self, m, dim, n_real, step):
+        if n_real is not None and n_real > m:
+            n_real = m
+        d, mask = _doc(m * dim + step, m, dim, n_real=n_real)
+        S = sampling.sample_sphere(jax.random.PRNGKey(1), 800, dim)
+        r_ref, e_ref, o_ref = voronoi.pruning_order(
+            d, mask, S, step_size=step, backend="reference")
+        r_f, e_f, o_f = voronoi.pruning_order(
+            d, mask, S, step_size=step, backend="fused")
+        np.testing.assert_array_equal(np.asarray(r_ref), np.asarray(r_f))
+        np.testing.assert_array_equal(np.asarray(o_ref), np.asarray(o_f))
+        fin = np.isfinite(np.asarray(e_ref))
+        assert (fin == np.isfinite(np.asarray(e_f))).all()
+        np.testing.assert_allclose(np.asarray(e_ref)[fin],
+                                   np.asarray(e_f)[fin], atol=1e-6)
+
+    def test_fused_batch_ragged_masks(self):
+        """vmapped fused path over docs of very different real lengths,
+        including a one-token document (nothing to remove)."""
+        d, masks = _corpus(3, 6, 12, 8)
+        masks = masks.at[0].set(jnp.arange(12) < 1)   # degenerate doc
+        S = sampling.sample_sphere(jax.random.PRNGKey(2), 600, 8)
+        r_ref, e_ref, _ = voronoi.pruning_order_batch(d, masks, S)
+        r_f, e_f, _ = voronoi.pruning_order_batch(d, masks, S,
+                                                  backend="fused")
+        np.testing.assert_array_equal(np.asarray(r_ref), np.asarray(r_f))
+        # degenerate doc: sole real token survives with rank m, err inf
+        assert bool(jnp.isinf(e_f[0, 0]))
+
+    def test_materialize_false_aliases_fused(self):
+        d, mask = _doc(5, 10, 8)
+        S = sampling.sample_sphere(jax.random.PRNGKey(3), 500, 8)
+        r_a, _, o_a = voronoi.pruning_order(d, mask, S, materialize=False)
+        r_b, _, o_b = voronoi.pruning_order(d, mask, S, backend="fused")
+        np.testing.assert_array_equal(np.asarray(r_a), np.asarray(r_b))
+        np.testing.assert_array_equal(np.asarray(o_a), np.asarray(o_b))
+
+    def test_shortlist_backend_delegates(self):
+        d, mask = _doc(9, 14, 8)
+        S = sampling.sample_sphere(jax.random.PRNGKey(7), 600, 8)
+        r_a, _, o_a = voronoi.pruning_order(d, mask, S, backend="shortlist")
+        r_b, _, o_b = voronoi.pruning_order_shortlist(d, mask, S)
+        np.testing.assert_array_equal(np.asarray(r_a), np.asarray(r_b))
+        np.testing.assert_array_equal(np.asarray(o_a), np.asarray(o_b))
+
+    def test_conflicting_knobs_rejected(self):
+        d, mask = _doc(9, 10, 8)
+        S = sampling.sample_sphere(jax.random.PRNGKey(8), 200, 8)
+        with pytest.raises(ValueError, match="reference-path knobs"):
+            voronoi.pruning_order(d, mask, S, backend="fused",
+                                  single_pass=True)
+        with pytest.raises(ValueError, match="backend"):
+            voronoi.pruning_order(d, mask, S, backend="shortlist",
+                                  step_size=2)
+        # knobs + unresolved backend prefer reference over platform default
+        r_k, _, o_k = voronoi.pruning_order(d, mask, S, single_pass=True)
+        r_r, _, o_r = voronoi.pruning_order(d, mask, S, single_pass=True,
+                                            backend="reference")
+        np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+
+    def test_keep_masks_and_global_pruning_agree(self):
+        """End of the pruning pipeline: global keep masks built from fused
+        orders == built from reference orders."""
+        d, masks = _corpus(7, 5, 10, 8)
+        S = sampling.sample_sphere(jax.random.PRNGKey(4), 700, 8)
+        out_ref = voronoi.pruning_order_batch(d, masks, S)
+        out_f = voronoi.pruning_order_batch(d, masks, S, backend="fused")
+        for frac in (0.3, 0.7):
+            k_ref = voronoi.global_keep_masks(out_ref[0], out_ref[1],
+                                              masks, frac)
+            k_f = voronoi.global_keep_masks(out_f[0], out_f[1], masks, frac)
+            np.testing.assert_array_equal(np.asarray(k_ref),
+                                          np.asarray(k_f))
+
+
+class TestShortlistBoundary:
+    @sweep(n_cases=6, seed=2, m=[9, 16, 24], dim=[4, 8],
+           rescan=[2, 4, 7])
+    def test_exact_at_minimal_shortlist(self, m, dim, rescan):
+        """Exactness proof edge: shortlist == rescan_every + 1 keeps the
+        true top-2 inside the shortlist between rescans — the order must
+        equal the reference for the MINIMAL legal K, not just K=16."""
+        K = rescan + 1
+        if K > m:
+            return
+        d, mask = _doc(m + dim + rescan, m, dim)
+        S = sampling.sample_sphere(jax.random.PRNGKey(5), 900, dim)
+        r_ref, _, o_ref = voronoi.pruning_order(d, mask, S,
+                                                backend="reference")
+        r_sl, _, o_sl = voronoi.pruning_order_shortlist(
+            d, mask, S, shortlist=K, rescan_every=rescan)
+        np.testing.assert_array_equal(np.asarray(o_ref[:m - 1]),
+                                      np.asarray(o_sl[:m - 1]))
+        # ranks agree on removed tokens (survivor conventions differ:
+        # reference assigns the survivor rank m via the scatter default)
+        removed = np.asarray(o_ref[:m - 1])
+        np.testing.assert_array_equal(np.asarray(r_ref)[removed],
+                                      np.asarray(r_sl)[removed])
+
+    def test_below_boundary_rejected(self):
+        d, mask = _doc(0, 12, 4)
+        S = sampling.sample_sphere(jax.random.PRNGKey(6), 100, 4)
+        with pytest.raises(ValueError, match="shortlist"):
+            voronoi.pruning_order_shortlist(d, mask, S, shortlist=4,
+                                            rescan_every=4)
+
+
+class TestServingBackendParity:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        k = jax.random.PRNGKey(0)
+        n_docs, m, dim, n_q, l = 33, 12, 16, 7, 6
+        d, masks = _corpus(11, n_docs, m, dim)
+        q = jax.random.normal(jax.random.fold_in(k, 1), (n_q, l, dim))
+        qm = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.8,
+                                  (n_q, l)).at[:, 0].set(True)
+        return TokenIndex.build(d, masks), q, qm
+
+    @sweep(n_cases=6, seed=4, block_docs=[4, 8, 16], block_q=[3, 16])
+    def test_maxsim_scores_parity(self, block_docs, block_q):
+        # sweep() calls with kwargs only; build the corpus inline
+        k = jax.random.PRNGKey(0)
+        d, masks = _corpus(11, 33, 12, 16)
+        q = jax.random.normal(jax.random.fold_in(k, 1), (7, 6, 16))
+        qm = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.8,
+                                  (7, 6)).at[:, 0].set(True)
+        index = TokenIndex.build(d, masks)
+        ref = maxsim_scores(index, q, qm, backend="reference")
+        fus = maxsim_scores(index, q, qm, backend="fused",
+                            block_docs=block_docs, block_q=block_q)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(fus),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_search_parity_both_stages(self, setup):
+        index, q, qm = setup
+        for e2e in (True, False):
+            i_r, s_r, f_r = search(index, q, k=5, n_first=16,
+                                   end_to_end=e2e, q_masks=qm,
+                                   backend="reference")
+            i_f, s_f, f_f = search(index, q, k=5, n_first=16,
+                                   end_to_end=e2e, q_masks=qm,
+                                   backend="fused")
+            np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_f))
+            np.testing.assert_allclose(np.asarray(s_r), np.asarray(s_f),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(f_r), np.asarray(f_f),
+                                       rtol=1e-5, atol=1e-4)
+
+    def test_search_parity_on_pruned_index(self, setup):
+        index, q, qm = setup
+        keep = index.d_masks & (jax.random.uniform(
+            jax.random.PRNGKey(9), index.d_masks.shape) < 0.6)
+        keep = keep.at[:, 0].set(index.d_masks[:, 0])  # >= 1 token/doc
+        pruned = index.with_keep(keep)
+        r = maxsim_scores(pruned, q, qm, backend="reference")
+        f = maxsim_scores(pruned, q, qm, backend="fused")
+        np.testing.assert_allclose(np.asarray(r), np.asarray(f),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_no_4d_tensor_in_fused_hlo(self, setup):
+        """Acceptance criterion: the compiled fused serving path never
+        materializes the (n_q, n_docs, l, m) score tensor; the reference
+        einsum path provably does."""
+        index, q, qm = setup
+        n_q, l = q.shape[:2]
+        n_docs, m = index.d_masks.shape
+        # both the StableHLO spelling (7x33x6x12) and HLO ([7,33,6,12])
+        pat = re.compile(
+            rf"{n_q}x{n_docs}x{l}x{m}|f32\[{n_q},{n_docs},{l},{m}\]")
+
+        def texts(backend):
+            fn = jax.jit(lambda qq: maxsim_scores(index, qq, qm,
+                                                  backend=backend))
+            lowered = fn.lower(q)
+            return lowered.as_text(), lowered.compile().as_text()
+
+        ref_low, _ = texts("reference")
+        assert pat.search(ref_low), \
+            "oracle changed: reference lowering no longer builds the 4-D"
+        fus_low, fus_comp = texts("fused")
+        assert not pat.search(fus_low) and not pat.search(fus_comp), \
+            "fused path materialized the 4-D score tensor"
+
+
+class TestBackendResolution:
+    def test_explicit_wins(self):
+        assert backend_lib.resolve_backend("fused") == "fused"
+        assert backend_lib.resolve_backend("reference") == "reference"
+
+    def test_env_var_override(self):
+        old = os.environ.get("REPRO_BACKEND")
+        try:
+            os.environ["REPRO_BACKEND"] = "fused"
+            assert backend_lib.resolve_backend(None) == "fused"
+            # valid name outside this path's allow-set: platform default
+            os.environ["REPRO_BACKEND"] = "shortlist"
+            assert backend_lib.resolve_backend(
+                None, allow=backend_lib.SERVING) in backend_lib.SERVING
+            # typo: loud failure everywhere
+            os.environ["REPRO_BACKEND"] = "fusedd"
+            with pytest.raises(ValueError, match="REPRO_BACKEND"):
+                backend_lib.resolve_backend(None)
+        finally:
+            if old is None:
+                os.environ.pop("REPRO_BACKEND", None)
+            else:
+                os.environ["REPRO_BACKEND"] = old
+
+    def test_platform_default(self):
+        old = os.environ.pop("REPRO_BACKEND", None)
+        try:
+            expect = "fused" if backend_lib.on_tpu() else "reference"
+            assert backend_lib.resolve_backend(None) == expect
+        finally:
+            if old is not None:
+                os.environ["REPRO_BACKEND"] = old
+
+    def test_invalid_rejected(self):
+        with pytest.raises(ValueError, match="backend"):
+            backend_lib.resolve_backend("nope")
+        with pytest.raises(ValueError, match="backend"):
+            backend_lib.resolve_backend("shortlist",
+                                        allow=("reference", "fused"))
+
+    def test_default_interpret_policy(self):
+        assert backend_lib.default_interpret(True) is True
+        assert backend_lib.default_interpret(False) is False
+        assert backend_lib.default_interpret(None) == (
+            not backend_lib.on_tpu())

@@ -42,9 +42,11 @@ class TestTrainDriverRestart:
                          ckpt_every=2, log_every=0, stop_after=6)
         steps = checkpoint.list_steps(ck)
         assert steps, "expected checkpoints"
-        # corrupt the newest
-        newest = os.path.join(ck, f"step_{steps[-1]:09d}",
-                              "leaves.msgpack.zst")
+        # corrupt the newest (body filename depends on optional compression)
+        newest_dir = os.path.join(ck, f"step_{steps[-1]:09d}")
+        (newest,) = [os.path.join(newest_dir, n)
+                     for n in os.listdir(newest_dir)
+                     if n.startswith("leaves.msgpack")]
         with open(newest, "r+b") as f:
             f.seek(20)
             f.write(b"\xde\xad\xbe\xef")

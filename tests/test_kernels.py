@@ -6,11 +6,16 @@ import numpy as np
 
 from _proptest import sweep
 from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_batch_op,
-                                              colbert_maxsim_op)
-from repro.kernels.colbert_maxsim.ref import colbert_maxsim_ref
+                                              colbert_maxsim_multi_op,
+                                              colbert_maxsim_op,
+                                              colbert_maxsim_rerank_op)
+from repro.kernels.colbert_maxsim.ref import (colbert_maxsim_multi_ref,
+                                              colbert_maxsim_ref)
 from repro.kernels.embedding_bag.ops import embedding_bag_op
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
-from repro.kernels.maxsim_top2.ops import maxsim_top2_op, voronoi_errors_fused
+from repro.kernels.maxsim_top2.ops import (maxsim_top2_op,
+                                           maxsim_top2_update_op,
+                                           voronoi_errors_fused)
 from repro.kernels.maxsim_top2.ref import maxsim_top2_ref
 from repro.core import voronoi, sampling
 
@@ -27,8 +32,8 @@ class TestMaxSimTop2:
         D = jax.random.normal(k2, (m, dim)).astype(dt)
         alive = jax.random.bernoulli(k3, 0.8, (m,))
         alive = alive.at[0].set(True).at[m // 2].set(True)
-        b, s, bi = maxsim_top2_op(S, D, alive)
-        rb, rs, rbi = maxsim_top2_ref(S, D, alive)
+        b, s, bi, si = maxsim_top2_op(S, D, alive)
+        rb, rs, rbi, rsi = maxsim_top2_ref(S, D, alive)
         tol = 1e-4 if dtype == "float32" else 5e-2
         np.testing.assert_allclose(np.asarray(b), np.asarray(rb), atol=tol,
                                    rtol=tol)
@@ -36,6 +41,7 @@ class TestMaxSimTop2:
                                    rtol=tol)
         if dtype == "float32":
             assert bool((bi == rbi).all())
+            assert bool((si == rsi).all())
 
     @sweep(n_cases=4, seed=3, block_s=[32, 256], block_t=[32, 128])
     def test_block_shape_invariance(self, block_s, block_t):
@@ -43,11 +49,35 @@ class TestMaxSimTop2:
         S = jax.random.normal(k, (200, 16))
         D = jax.random.normal(jax.random.fold_in(k, 1), (100, 16))
         alive = jnp.ones((100,), bool)
-        b, s, bi = maxsim_top2_op(S, D, alive, block_s=block_s,
-                                  block_t=block_t)
-        rb, rs, rbi = maxsim_top2_ref(S, D, alive)
+        b, s, bi, si = maxsim_top2_op(S, D, alive, block_s=block_s,
+                                      block_t=block_t)
+        rb, rs, rbi, rsi = maxsim_top2_ref(S, D, alive)
         np.testing.assert_allclose(np.asarray(b), np.asarray(rb), atol=1e-4)
         assert bool((bi == rbi).all())
+        assert bool((si == rsi).all())
+
+    @sweep(n_cases=6, seed=7, m=[16, 100], kill=[1, 3, 9],
+           block_t=[32, 128])
+    def test_update_op_matches_fresh_rescan(self, m, kill, block_t):
+        """Alive-mask-update entry == full rescan under the shrunk mask."""
+        k = jax.random.PRNGKey(m + kill)
+        S = jax.random.normal(k, (64, 16))
+        D = jax.random.normal(jax.random.fold_in(k, 1), (m, 16))
+        alive = jnp.ones((m,), bool)
+        prev = maxsim_top2_op(S, D, alive, block_t=block_t)
+        dead = jax.random.choice(jax.random.fold_in(k, 2),
+                                 m - 1, (kill,), replace=False) + 1
+        alive2 = alive.at[dead].set(False)
+        (b, s, bi, si), affected = maxsim_top2_update_op(
+            S, D, alive2, prev, block_t=block_t)
+        rb, rs, rbi, rsi = maxsim_top2_ref(S, D, alive2)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(rb), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-4)
+        assert bool((bi == rbi).all())
+        # unaffected samples kept their previous state bit-for-bit
+        keep = ~np.asarray(affected)
+        np.testing.assert_array_equal(np.asarray(b)[keep],
+                                      np.asarray(prev[0])[keep])
 
     def test_fused_errors_match_reference_estimator(self):
         k = jax.random.PRNGKey(5)
@@ -65,7 +95,7 @@ class TestMaxSimTop2:
         S = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
         D = jax.random.normal(jax.random.PRNGKey(1), (5, 8))
         alive = jnp.zeros((5,), bool).at[2].set(True)
-        b, s, bi = maxsim_top2_op(S, D, alive)
+        b, s, bi, si = maxsim_top2_op(S, D, alive)
         assert bool((bi == 2).all())
         assert bool((s <= -1e29).all())  # no second-best exists
 
@@ -101,6 +131,56 @@ class TestColbertMaxsim:
         out = colbert_maxsim_op(q, d, msk)
         # doc 1's visible token scores 400 per query token
         np.testing.assert_allclose(np.asarray(out), [8.0, 800.0], rtol=1e-5)
+
+    def test_q_mask_zeroes_masked_query_tokens(self):
+        q = jnp.ones((3, 4))
+        d = jnp.stack([jnp.ones((3, 4)), 2 * jnp.ones((3, 4))])
+        msk = jnp.ones((2, 3), bool)
+        qm = jnp.array([True, True, False])
+        out = colbert_maxsim_op(q, d, msk, qm)
+        np.testing.assert_allclose(np.asarray(out), [8.0, 16.0], rtol=1e-5)
+
+
+class TestColbertMaxsimMulti:
+    @sweep(n_cases=8, seed=5, n_q=[1, 3, 9], n_docs=[3, 10, 33],
+           m=[8, 24], l=[4, 16], dim=[16, 64])
+    def test_matches_oracle(self, n_q, n_docs, m, l, dim):
+        k = jax.random.PRNGKey(n_q * n_docs + m + l)
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        q = jax.random.normal(k1, (n_q, l, dim))
+        d = jax.random.normal(k2, (n_docs, m, dim))
+        msk = jax.random.bernoulli(k3, 0.85, (n_docs, m)).at[:, 0].set(True)
+        qm = jax.random.bernoulli(k4, 0.7, (n_q, l)).at[:, 0].set(True)
+        out = colbert_maxsim_multi_op(q, d, msk, qm)
+        ref = colbert_maxsim_multi_ref(q, d, msk, qm)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_agrees_with_single_query_kernel(self):
+        k = jax.random.PRNGKey(11)
+        q = jax.random.normal(k, (4, 8, 32))
+        d = jax.random.normal(jax.random.fold_in(k, 1), (12, 16, 32))
+        msk = jnp.ones((12, 16), bool)
+        out = colbert_maxsim_multi_op(q, d, msk)
+        per_q = jnp.stack([colbert_maxsim_op(q[i], d, msk)
+                           for i in range(4)])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(per_q),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rerank_op_per_query_candidates(self):
+        """Each query scored against its OWN candidate block."""
+        k = jax.random.PRNGKey(13)
+        n_q, nc, m, l, dim = 5, 6, 10, 4, 16
+        q = jax.random.normal(k, (n_q, l, dim))
+        d = jax.random.normal(jax.random.fold_in(k, 1), (n_q, nc, m, dim))
+        msk = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.8,
+                                   (n_q, nc, m)).at[:, :, 0].set(True)
+        qm = jnp.ones((n_q, l), bool).at[:, -1].set(False)
+        out = colbert_maxsim_rerank_op(q, d, msk, qm)
+        ref = jnp.stack([colbert_maxsim_ref(q[i], d[i], msk[i], qm[i])
+                         for i in range(n_q)])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
 
 
 class TestEmbeddingBag:

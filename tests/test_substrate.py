@@ -75,8 +75,11 @@ class TestCheckpoint:
         tree = {"w": jnp.ones((4,))}
         checkpoint.save(root, 1, tree)
         checkpoint.save(root, 2, {"w": jnp.full((4,), 2.0)})
-        # corrupt the newest checkpoint body
-        path = os.path.join(root, "step_000000002", "leaves.msgpack.zst")
+        # corrupt the newest checkpoint body (name depends on whether the
+        # optional zstd compression is available)
+        step_dir = os.path.join(root, "step_000000002")
+        (path,) = [os.path.join(step_dir, n) for n in os.listdir(step_dir)
+                   if n.startswith("leaves.msgpack")]
         with open(path, "r+b") as f:
             f.seek(10)
             f.write(b"\x00\x00\x00\x00")
