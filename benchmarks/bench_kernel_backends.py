@@ -1,44 +1,60 @@
-"""Backend-dispatch perf record: reference vs fused/chunked hot paths.
+"""Backend-dispatch perf record: reference vs fused/shortlist hot paths.
 
 Measures the two hot paths the dispatch seam (repro.core.backend)
-routes — iterative Voronoi pruning and MaxSim serving — on both
-backends, prints the harness CSV lines, and writes
+routes — iterative Voronoi pruning (all four backends + the bucketed
+corpus pipeline + the ragged-corpus comparison) and MaxSim serving —
+prints the harness CSV lines, and APPENDS a timestamped entry to
 ``BENCH_kernel_backends.json`` at the repo root so the perf trajectory
-of the kernel-backed paths is recorded PR over PR.
+of the kernel-backed paths accumulates PR over PR instead of being
+overwritten.
 
 Shapes are CPU-scaled but chosen so the *serving* comparison is
 meaningful off-TPU too: at the rerank shape the reference einsum's 4-D
 (n_q, n_docs, l, m) tensor exceeds LLC and the chunked kernel path wins
 outright even through the Pallas interpreter.  The pruning comparison
-off-TPU prices the interpreter per scan step, so the fused docs/sec is
-a lower bound (the TPU number is the one that matters); the reference
-and shortlist figures are real either way.
+off-TPU prices the interpreter per scan step for the fused/topk paths,
+so those docs/sec are lower bounds (the TPU numbers are the ones that
+matter); the reference, dense-shortlist and bucketed figures are real
+either way.
+
+``python -m benchmarks.bench_kernel_backends --check`` re-reads the
+last trajectory entry and fails (exit 1) if batched pruning regressed
+below the same run's reference-path docs/sec — the throughput smoke
+scripts/smoke.sh runs after recording.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import sys
+import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from benchmarks.bench_speedup import run_pruning_backends
+from benchmarks.bench_speedup import run_pruning_backends, run_ragged_pruning
 from repro.serve.retrieval import TokenIndex, maxsim_scores
 
-OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
-                        "BENCH_kernel_backends.json")
+OUT_PATH = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        os.pardir,
+                                        "BENCH_kernel_backends.json"))
 
 # Rerank benchmark shape: 4-D reference tensor = 32*256*32*128 f32
 # = 134 MB — large enough that materializing it is the bottleneck.
 RERANK = dict(n_q=32, n_docs=256, m=128, l=32, dim=128, block_docs=64)
 
+PRUNING_BACKENDS = ("reference", "fused", "shortlist", "shortlist_topk",
+                    "bucketed_shortlist")
+
 
 def run_rerank_backends(n_q=32, n_docs=256, m=128, l=32, dim=128,
                         block_docs=64):
     """Rerank latency (queries/sec) for reference einsum vs chunked
-    kernel serving at the benchmark shape.  Returns {backend: q_per_s}."""
+    kernel serving at the benchmark shape, plus the autotuned-blocks
+    row (block_docs/block_q resolved by repro.core.tuning).
+    Returns {backend: q_per_s}."""
     k = jax.random.PRNGKey(0)
     d = jax.random.normal(k, (n_docs, m, dim))
     masks = jnp.ones((n_docs, m), bool)
@@ -50,26 +66,82 @@ def run_rerank_backends(n_q=32, n_docs=256, m=128, l=32, dim=128,
     f_fus = jax.jit(lambda qq: maxsim_scores(index, qq, backend="fused",
                                              block_docs=block_docs,
                                              block_q=n_q))
+    f_tuned = jax.jit(lambda qq: maxsim_scores(index, qq, backend="fused"))
     t_ref, _ = common.timeit(lambda: f_ref(q), repeat=2)
     t_fus, _ = common.timeit(lambda: f_fus(q), repeat=2)
+    t_tuned, _ = common.timeit(lambda: f_tuned(q), repeat=2)
     return {
         "reference": n_q / t_ref,
         "fused": n_q / t_fus,
+        "fused_autotuned": n_q / t_tuned,
         "speedup_fused_over_reference": t_ref / t_fus,
         "shape": dict(n_q=n_q, n_docs=n_docs, m=m, l=l, dim=dim,
                       block_docs=block_docs),
     }
 
 
+def load_trajectory(path: str = OUT_PATH) -> list[dict]:
+    """Read the trajectory entries; a legacy single-record dict (PR 1
+    wrote one overwritten object) is adopted as the first entry."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and "entries" in data:
+        return data["entries"]
+    if isinstance(data, dict):                # legacy single record
+        data.setdefault("timestamp", "pre-trajectory (PR 1)")
+        return [data]
+    return list(data)
+
+
+def append_entry(entry: dict, path: str = OUT_PATH) -> None:
+    entries = load_trajectory(path)
+    entries.append(entry)
+    with open(path, "w") as f:
+        json.dump({"entries": entries}, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check_last(path: str = OUT_PATH) -> None:
+    """Throughput smoke: batched corpus pruning (bucketed shortlist)
+    must not regress below the same entry's reference-path docs/sec."""
+    entries = load_trajectory(path)
+    if not entries:
+        raise SystemExit(f"{path}: no trajectory entries; run the bench")
+    last = entries[-1]
+    docs = last.get("pruning_docs_per_s", {})
+    bucketed = docs.get("bucketed_shortlist")
+    ref = docs.get("reference")
+    if bucketed is None or ref is None:
+        raise SystemExit(f"{path}: last entry predates the bucketed "
+                         "pipeline; re-run the bench")
+    if bucketed < ref:
+        raise SystemExit(
+            f"THROUGHPUT REGRESSION: bucketed shortlist pruning "
+            f"{bucketed:.2f} docs/s fell below the reference path "
+            f"{ref:.2f} docs/s at the bench shape "
+            f"{last.get('pruning_shape')}")
+    print(f"throughput smoke OK: bucketed {bucketed:.2f} docs/s vs "
+          f"reference {ref:.2f} docs/s "
+          f"({bucketed / ref:.2f}x at the bench shape)")
+
+
 def main():
     pruning = run_pruning_backends()
+    ragged = run_ragged_pruning()
     rerank = run_rerank_backends(**RERANK)
 
-    for name in ("reference", "fused", "shortlist"):
+    for name in PRUNING_BACKENDS:
         common.csv_line(f"kernel_backends/pruning_{name}",
                         1e6 / pruning[name],
                         f"docs_per_s={pruning[name]:.2f}")
-    for name in ("reference", "fused"):
+    common.csv_line("kernel_backends/pruning_bucketed_ragged",
+                    1e6 / ragged["bucketed"],
+                    f"docs_per_s={ragged['bucketed']:.2f};"
+                    f"{ragged['speedup_bucketed_over_flat']:.2f}x over "
+                    f"flat padding on the ragged corpus")
+    for name in ("reference", "fused", "fused_autotuned"):
         common.csv_line(f"kernel_backends/rerank_{name}",
                         1e6 / rerank[name],
                         f"q_per_s={rerank[name]:.2f}")
@@ -79,23 +151,38 @@ def main():
         f"holds={wins};"
         f"speedup={rerank['speedup_fused_over_reference']:.2f}x at "
         f"{rerank['shape']['n_q']}q x {rerank['shape']['n_docs']}docs")
+    prune_speedup = pruning["bucketed_shortlist"] / pruning["reference"]
+    common.csv_line(
+        "kernel_backends/CLAIM_bucketed_pruning_2x_reference", 0.0,
+        f"holds={prune_speedup >= 2.0};speedup={prune_speedup:.2f}x at "
+        f"{pruning['shape']['n_docs']}docs x {pruning['shape']['m']}tok")
 
-    record = {
+    entry = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "jax_backend": jax.default_backend(),
         "interpret_mode_kernels": jax.default_backend() != "tpu",
         "pruning_docs_per_s": {k: v for k, v in pruning.items()
                                if k != "shape"},
         "pruning_shape": pruning["shape"],
-        "rerank_q_per_s": {k: rerank[k] for k in ("reference", "fused")},
+        "pruning_speedup_bucketed_over_reference": prune_speedup,
+        "ragged_pruning_docs_per_s": {k: ragged[k]
+                                      for k in ("flat", "bucketed")},
+        "ragged_pruning_shape": ragged["shape"],
+        "ragged_speedup_bucketed_over_flat":
+            ragged["speedup_bucketed_over_flat"],
+        "rerank_q_per_s": {k: rerank[k] for k in
+                           ("reference", "fused", "fused_autotuned")},
         "rerank_speedup_fused_over_reference":
             rerank["speedup_fused_over_reference"],
         "rerank_shape": rerank["shape"],
         "claim_chunked_serving_beats_reference": bool(wins),
+        "claim_bucketed_pruning_2x_reference": bool(prune_speedup >= 2.0),
     }
-    with open(os.path.abspath(OUT_PATH), "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
-        f.write("\n")
+    append_entry(entry)
 
 
 if __name__ == "__main__":
-    main()
+    if "--check" in sys.argv[1:]:
+        check_last()
+    else:
+        main()

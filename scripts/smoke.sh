@@ -1,17 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 smoke: the exact ROADMAP verify command plus the kernel
-# micro-benches (Pallas interpreter off-TPU), then the backend-dispatch
-# perf record.  Run from anywhere; zstandard is optional (checkpointing
-# falls back to uncompressed bodies).
+# micro-benches (Pallas interpreter off-TPU), the backend-dispatch perf
+# record, and the pruning-throughput gate (fails if batched bucketed
+# pruning regresses below the reference path at the bench shape).
+# Run from anywhere; zstandard is optional (checkpointing falls back to
+# uncompressed bodies).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-# Two test_sharded_exec failures predate this tooling (seed state, see
-# ROADMAP Open items); deselect them so -x keeps its fail-fast value
-# for everything else.  Remove the deselects when they are fixed.
-python -m pytest -x -q \
-  --deselect tests/test_sharded_exec.py::test_a2a_lookup_matches_dense_fwd_and_grad \
-  --deselect tests/test_sharded_exec.py::test_sharded_lm_train_step_matches_single_device
+python -m pytest -x -q
 python -m benchmarks.run kernels kernel_backends
+python -m benchmarks.bench_kernel_backends --check
 echo "smoke OK"

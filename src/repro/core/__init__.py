@@ -1,6 +1,12 @@
 """Core library: the paper's Voronoi Pruning contribution + baselines."""
 
-from repro.core import baselines, lp, metrics, regularizers, sampling, scoring
+from repro.core import (baselines, lp, metrics, pruning_pipeline,
+                        regularizers, sampling, scoring, tuning)
+from repro.core.pruning_pipeline import (
+    bucket_plan,
+    prune_corpus,
+    pruning_order_bucketed,
+)
 from repro.core.voronoi import (
     CellState,
     assign_cells,
@@ -17,9 +23,11 @@ from repro.core.voronoi import (
 )
 
 __all__ = [
-    "baselines", "lp", "metrics", "regularizers", "sampling", "scoring",
-    "CellState", "assign_cells", "beam_pruning_order", "estimate_errors",
-    "global_keep_masks", "keep_mask_from_order", "mean_error",
-    "mean_error_batch", "prune_to_size", "pruning_order",
-    "pruning_order_batch", "token_errors",
+    "baselines", "lp", "metrics", "pruning_pipeline", "regularizers",
+    "sampling", "scoring", "tuning",
+    "CellState", "assign_cells", "beam_pruning_order", "bucket_plan",
+    "estimate_errors", "global_keep_masks", "keep_mask_from_order",
+    "mean_error", "mean_error_batch", "prune_corpus", "prune_to_size",
+    "pruning_order", "pruning_order_batch", "pruning_order_bucketed",
+    "token_errors",
 ]

@@ -17,25 +17,40 @@ path                    what it does                when it wins
                         matrix (pruning) or the     path with exact jnp
                         4-D (n_q, n_docs, l, m)     tie-breaking *defined*
                         einsum tensor (serving)     by construction
-``fused``               Pallas kernels; score       TPU, and any shape where
-                        *tiles* live in VMEM, the   the resident score
-                        big intermediates never     matrix/tensor is HBM-
-                        reach HBM; per-step FLOPs   or memory-bound (long
-                        are higher (tiles are       docs, large corpora,
-                        recomputed), bytes are      big sample sets)
-                        much lower
-``shortlist``           exact top-K shortlist       single-host pruning
-(pruning only)          cache; per-step work is     jobs; fastest wall-
-                        O(N*K) instead of O(N*m)    clock, but its
-                        with a periodic rescan      ``lax.top_k`` rescan
-                                                    de-partitions under
+``fused``               Pallas kernels; score       serving on TPU, and any
+                        *tiles* live in VMEM, the   shape where the resident
+                        big intermediates never     score matrix/tensor is
+                        reach HBM; per-step FLOPs   HBM- or memory-bound
+                        are higher (tiles are       (long docs, large
+                        recomputed), bytes are      corpora, big sample
+                        much lower                  sets)
+``shortlist``           exact top-K shortlist       single-host CPU/GPU
+(pruning only)          cache; per-step work is     pruning jobs; fastest
+                        O(N*K) instead of O(N*m)    wall-clock off-TPU, but
+                        with a periodic dense       its ``lax.top_k`` rescan
+                        ``lax.top_k`` rescan        de-partitions under
                                                     GSPMD
+``shortlist_topk``      same shortlist algorithm,   TPU pruning (the
+(pruning only)          but the rescan runs         platform default) and
+                        through the fused           multi-host jobs: no
+                        ``maxsim_topk`` Pallas      TopK custom-call, the
+                        kernel — score tiles stay   rescan partitions over
+                        in VMEM, no (N, m) matrix   the sample/doc axes
+                        and no TopK custom-call     under GSPMD
 ======================  ==========================  =======================
 
-``resolve_backend(None)`` picks ``fused`` on TPU and ``reference``
-elsewhere; the ``REPRO_BACKEND`` environment variable overrides (useful
-to force the fused path through the Pallas interpreter off-TPU for
-parity debugging).
+``resolve_backend(None)`` picks, on TPU, ``shortlist_topk`` where the
+caller allows it (pruning) and ``fused`` otherwise (serving); off-TPU it
+picks ``reference``.  The ``REPRO_BACKEND`` environment variable
+overrides (useful to force the fused path through the Pallas interpreter
+off-TPU for parity debugging).
+
+``tuned(kind, **shape)`` is the autotuner seam: call sites that used to
+hardcode block sizes / shortlist schedules ask it for a
+``repro.core.tuning.KernelConfig`` resolved from (shape, platform, VMEM
+budget) — static heuristics by default, a cached one-shot measured race
+with ``REPRO_AUTOTUNE=measure``.  Explicit arguments at the call sites
+always win; the autotuner only fills ``None``s.
 
 ``default_interpret(None)`` is the companion policy for the raw kernel
 entry points: Pallas ``interpret`` mode everywhere except on real TPU
@@ -55,19 +70,24 @@ __all__ = [
     "BACKENDS",
     "REFERENCE",
     "FUSED",
+    "PRUNING",
     "SERVING",
     "SHORTLIST",
+    "SHORTLIST_TOPK",
     "default_interpret",
     "on_tpu",
     "resolve_backend",
+    "tuned",
 ]
 
 REFERENCE = "reference"
 FUSED = "fused"
 SHORTLIST = "shortlist"
-BACKENDS = (REFERENCE, FUSED, SHORTLIST)
+SHORTLIST_TOPK = "shortlist_topk"
+BACKENDS = (REFERENCE, FUSED, SHORTLIST, SHORTLIST_TOPK)
 # Per-path allow sets: serving has no shortlist analogue.
 SERVING = (REFERENCE, FUSED)
+PRUNING = BACKENDS
 
 _ENV_VAR = "REPRO_BACKEND"
 
@@ -88,18 +108,29 @@ def default_interpret(interpret: bool | None = None) -> bool:
     return interpret
 
 
+def _platform_default(allow: tuple[str, ...]) -> str:
+    """TPU prefers the partitionable kernel paths: ``shortlist_topk``
+    where the caller supports it (pruning), else ``fused`` (serving).
+    Off-TPU the materializing reference path wins (Pallas runs through
+    the interpreter there)."""
+    if on_tpu():
+        return SHORTLIST_TOPK if SHORTLIST_TOPK in allow else FUSED
+    return REFERENCE
+
+
 def resolve_backend(backend: str | None = None,
                     *, allow: tuple[str, ...] = BACKENDS) -> str:
     """Resolve a user-facing ``backend=`` argument to a concrete path.
 
     Precedence: explicit argument > ``REPRO_BACKEND`` env var > platform
-    default (``fused`` on TPU, ``reference`` elsewhere).  ``allow``
-    restricts the valid set for entry points that support fewer paths
-    (serving has no shortlist).  An explicit argument outside ``allow``
-    raises; an env-var value that is a *valid* backend but outside this
-    path's ``allow`` falls back to the platform default (a global
-    override must not crash paths it cannot apply to), while an env-var
-    value that is no backend at all raises everywhere (typo safety).
+    default (on TPU ``shortlist_topk`` where allowed, else ``fused``;
+    ``reference`` elsewhere).  ``allow`` restricts the valid set for
+    entry points that support fewer paths (serving has no shortlist).
+    An explicit argument outside ``allow`` raises; an env-var value that
+    is a *valid* backend but outside this path's ``allow`` falls back to
+    the platform default (a global override must not crash paths it
+    cannot apply to), while an env-var value that is no backend at all
+    raises everywhere (typo safety).
 
     Call this OUTSIDE jit: it reads the environment, and a jitted
     caller would pin the first-seen value into its trace cache.
@@ -117,9 +148,18 @@ def resolve_backend(backend: str | None = None,
                 # shortlist on serving): fall back to platform default
                 # rather than crash paths the override can't apply to.
                 env = None
-        backend = env or (FUSED if on_tpu() else REFERENCE)
+        backend = env or _platform_default(allow)
     if backend not in allow:
         raise ValueError(
             f"backend={backend!r} (from {source}) not supported here; "
             f"choose one of {list(allow)}")
     return backend
+
+
+def tuned(kind: str, **shape):
+    """Autotuner seam: a ``repro.core.tuning.KernelConfig`` for
+    (kind, shape) on the current platform.  Lazy import keeps the
+    dispatch module dependency-free for the kernel layer below it.
+    """
+    from repro.core import tuning
+    return tuning.tune(kind, **shape)

@@ -1,0 +1,197 @@
+"""Length-bucketed corpus pruning pipeline (offline Alg. 1 at scale).
+
+Corpus pruning runs the paper's Alg. 1 over every document.  The naive
+batch path (`pruning_order_batch`) pads every document to the corpus
+max length `m` and vmaps one fixed-shape scan — a real corpus is
+ragged, so short documents pay full-`m` padding cost at every one of
+their `m - 1` scan steps, and any new max length recompiles the world.
+
+This pipeline cuts both costs:
+
+1. **Bucketing** (:func:`bucket_plan`): documents are grouped by real
+   token count into a few padded shape buckets (power-of-two widths by
+   default, so the number of distinct compiled shapes is O(log m) no
+   matter how ragged the corpus is).
+2. **Within a bucket**: the shortlist scan (or whichever backend is
+   selected) is vmapped at the bucket width — a 32-token document in
+   the 32-wide bucket runs a 31-step scan over 32-token score rows
+   instead of an (m-1)-step scan over m-token rows.
+3. **Across buckets**: bucket computations are dispatched back-to-back
+   without blocking — JAX's async dispatch keeps the device busy on
+   bucket i while bucket i+1 is being sliced and enqueued (the
+   double-buffered streaming loop); results are gathered only after
+   every bucket is in flight.
+
+Exactness: a document's pruning order depends only on its own real
+tokens (dead/padded columns score ``NEG_INF`` and are never selected,
+and every backend's per-step reductions are elementwise in the padded
+axis), so truncating at the document's *effective length* — last alive
+position + 1, which handles scattered (non-prefix) masks too — and
+running it in a narrower bucket changes nothing.  The
+assembled (ranks, errs, orders) are **bit-identical** to the
+unbucketed `pruning_order_batch` on the same corpus — asserted over
+ragged corpora in tests/test_pruning_pipeline.py.  Knob choices made
+per bucket by the autotuner don't break this: the shortlist path is
+exact for every legal (K, R), and tile sizes never change kernel
+results.
+
+The per-bucket ``(rank == width) -> m`` / order-padding fixups translate
+the bucket-local "never removed" sentinels back to corpus-global
+conventions; see `_scatter_bucket`.
+
+Multi-host note: buckets are embarrassingly parallel across the `data`
+mesh axis like the flat batch path; `global_keep_masks` itself still
+merges on one host (ROADMAP open item).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import voronoi
+from repro.core.tuning import _pow2_at_least
+
+__all__ = [
+    "Bucket",
+    "bucket_plan",
+    "effective_lengths",
+    "pruning_order_bucketed",
+    "prune_corpus",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One padded shape bucket: ``indices`` into the corpus doc axis,
+    all with real length <= ``width``."""
+
+    width: int
+    indices: np.ndarray
+
+    def __repr__(self):  # keep test failure output readable
+        return f"Bucket(width={self.width}, n_docs={len(self.indices)})"
+
+
+def effective_lengths(d_masks) -> np.ndarray:
+    """Per-document effective length: last alive position + 1 (0 when
+    fully masked).  This — not the alive COUNT — is what bucket widths
+    must cover: truncating a document at its effective length drops
+    only dead trailing columns, so any mask layout (prefix-padded or
+    scattered, e.g. stopword-filtered) buckets correctly."""
+    masks = np.asarray(d_masks)
+    m = masks.shape[1]
+    any_alive = masks.any(axis=1)
+    last = m - np.argmax(masks[:, ::-1], axis=1)
+    return np.where(any_alive, last, 0).astype(np.int64)
+
+
+def bucket_plan(n_real, m: int, *, granularity: int | str = "pow2",
+                min_width: int = 8) -> list[Bucket]:
+    """Group documents into padded shape buckets by effective length
+    (:func:`effective_lengths` — pass alive counts only for corpora
+    known to be prefix-padded).
+
+    ``granularity="pow2"`` rounds each document's length up to the next
+    power of two (bounding distinct compiled shapes by O(log m));
+    an integer rounds up to that multiple instead.  Widths are clamped
+    to [min_width, m].  Every document lands in exactly one bucket and
+    buckets are ordered by width (ascending) — the cheap buckets
+    dispatch first, maximizing compute/dispatch overlap for the big
+    ones.  Host-side by design: the plan is data-dependent (real
+    lengths), which is exactly what fixed-shape jitted code cannot
+    branch on.
+    """
+    n_real = np.asarray(n_real)
+    if n_real.ndim != 1:
+        raise ValueError(f"n_real must be 1-D, got shape {n_real.shape}")
+    if granularity == "pow2":
+        width_of = _pow2_at_least
+    elif isinstance(granularity, int) and granularity >= 1:
+        width_of = lambda x: -(-x // granularity) * granularity
+    else:
+        raise ValueError(f"granularity={granularity!r}: 'pow2' or int >= 1")
+    widths = np.array([min(m, max(min_width, width_of(max(int(x), 1))))
+                       for x in n_real], np.int64)
+    return [Bucket(width=int(w), indices=np.flatnonzero(widths == w))
+            for w in np.unique(widths)]
+
+
+def _order_len(width: int, step_size: int) -> int:
+    """Length of the flattened removal-order record a pruning backend
+    emits for documents of padded length ``width`` (0 for width <= 1)."""
+    n_steps = -(-(width - 1) // step_size)
+    return n_steps * step_size
+
+
+def _scatter_bucket(ranks, errs, orders, bucket, local, m: int):
+    """Write one bucket's (rank, err, order) rows back into the
+    corpus-global arrays, translating bucket-local sentinels:
+    ``rank == width`` (never removed: the survivor, dead and padded
+    slots) becomes the global sentinel ``m``; order rows are left-
+    aligned (removal positions never exceed width - 2) and stay -1
+    padded to the global record length."""
+    r, e, o = (np.asarray(x) for x in local)
+    w = bucket.width
+    ranks[bucket.indices, :w] = np.where(r >= w, m, r)
+    errs[bucket.indices, :w] = e
+    orders[bucket.indices, :o.shape[1]] = o
+
+
+def pruning_order_bucketed(d_embs, d_masks, samples, *, step_size: int = 1,
+                           fast: bool = False, bf16_scores: bool = False,
+                           shortlist: bool = False,
+                           backend: str | None = None,
+                           granularity: int | str = "pow2",
+                           min_width: int = 8,
+                           plan: list[Bucket] | None = None):
+    """Length-bucketed equivalent of `voronoi.pruning_order_batch`.
+
+    Same signature semantics and bit-identical (ranks, errs, orders);
+    see the module docstring for the why and the exactness argument.
+    ``plan`` overrides the computed :func:`bucket_plan` (reuse it when
+    pruning several sample sets over one corpus).
+    """
+    n_docs, m = d_masks.shape
+    order_len = _order_len(m, step_size)
+    ranks = np.full((n_docs, m), m, np.int32)
+    errs = np.full((n_docs, m), np.inf, np.float32)
+    orders = np.full((n_docs, order_len), -1, np.int32)
+    if n_docs == 0:
+        return jnp.asarray(ranks), jnp.asarray(errs), jnp.asarray(orders)
+
+    if plan is None:
+        plan = bucket_plan(effective_lengths(d_masks), m,
+                           granularity=granularity, min_width=min_width)
+
+    # Stream buckets: slice + dispatch everything first (async dispatch
+    # overlaps bucket i's compute with bucket i+1's staging — the
+    # double-buffered loop), then gather.
+    in_flight = []
+    for bucket in plan:
+        idx = jnp.asarray(bucket.indices)
+        e = jnp.take(d_embs, idx, axis=0)[:, :bucket.width]
+        k = jnp.take(d_masks, idx, axis=0)[:, :bucket.width]
+        out = voronoi.pruning_order_batch(
+            e, k, samples, step_size=step_size, fast=fast,
+            bf16_scores=bf16_scores, shortlist=shortlist, backend=backend)
+        in_flight.append((bucket, out))
+    for bucket, out in in_flight:
+        _scatter_bucket(ranks, errs, orders, bucket, out, m)
+    return jnp.asarray(ranks), jnp.asarray(errs), jnp.asarray(orders)
+
+
+def prune_corpus(d_embs, d_masks, samples, keep_fraction: float, *,
+                 backend: str | None = None, shortlist: bool = False,
+                 step_size: int = 1, granularity: int | str = "pow2",
+                 min_width: int = 8):
+    """Corpus-level pruning, end to end: bucketed per-doc orders merged
+    into global keep masks (§4.2) under a corpus-wide token budget.
+    Returns (keep_masks (n_docs, m), ranks, errs)."""
+    ranks, errs, _ = pruning_order_bucketed(
+        d_embs, d_masks, samples, backend=backend, shortlist=shortlist,
+        step_size=step_size, granularity=granularity, min_width=min_width)
+    keep = voronoi.global_keep_masks(ranks, errs, d_masks, keep_fraction)
+    return keep, ranks, errs

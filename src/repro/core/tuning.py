@@ -1,0 +1,312 @@
+"""Shape-aware autotuner for the kernel-backed hot paths (ROADMAP item).
+
+Every tunable knob of the pruning and serving paths — Pallas tile sizes
+(``block_s``/``block_t`` for the ``maxsim_top2``/``maxsim_topk``
+kernels, ``block_docs``/``block_q`` for the chunked serving sweep) and
+the shortlist algorithm's (``shortlist``, ``rescan_every``) pair — used
+to be hardcoded defaults at the call sites.  This module picks them
+from (problem shape, platform, VMEM budget) instead:
+
+* **heuristic mode** (default): a static table/formula, pure and
+  deterministic — same shape bucket in, same :class:`KernelConfig` out.
+  Tile sizes are MXU/VPU-aligned and shrunk to fit the VMEM budget;
+  the shortlist size balances per-step O(N*K) work against the
+  amortized O(N*m / rescan_every) rescan (K ~ sqrt(m), always
+  satisfying the exactness bound ``shortlist >= rescan_every + 1``).
+* **measured mode** (``measure=True`` or ``REPRO_AUTOTUNE=measure``):
+  a one-shot wall-clock race of a small candidate grid on synthetic
+  data of the given shape, cached in-process so each (kind, platform,
+  shape bucket) pays the measurement exactly once.
+
+Shapes are bucketed (power-of-two on the sample/doc/query counts, exact
+on the per-document axes m/l/dim that determine tile legality) so jit
+caches and the measurement cache stay small under ragged workloads.
+
+Consumers reach this module through the backend seam
+(``repro.core.backend.tuned``) — ``pruning_order*`` resolves
+``block_s``/``block_t``/``shortlist``/``rescan_every`` here when the
+caller passes ``None``, and ``maxsim_scores``/``search``/
+``RetrievalServer`` do the same for ``block_docs``/``block_q``.
+Explicit arguments always win; the autotuner only fills blanks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+
+__all__ = [
+    "KernelConfig",
+    "cache_info",
+    "clear_cache",
+    "heuristic_config",
+    "shape_key",
+    "tune",
+]
+
+_ENV_VAR = "REPRO_AUTOTUNE"
+
+# Per-core VMEM is ~16 MB on current TPUs; budget half of it so the
+# pipelined double-buffering of grid blocks still fits.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+# Off-TPU the kernels run through the Pallas interpreter: there is no
+# VMEM to respect, block buffers live in host cache, and larger blocks
+# amortize per-launch interpreter overhead — so the working-set bound is
+# LLC-ish instead (measured: block_docs=64 at the 134 MB rerank bench
+# shape beats budget-shrunk blocks ~1.5x on CPU).
+INTERPRET_WORKING_SET_BUDGET = 64 * 1024 * 1024
+
+KINDS = ("pruning", "serving")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Resolved knobs for one hot-path invocation.
+
+    Pruning consumers read ``block_s``/``block_t`` (kernel tile sizes)
+    and ``shortlist``/``rescan_every`` (shortlist schedule); serving
+    consumers read ``block_docs``/``block_q``.  A single config type
+    keeps the backend seam one function wide.
+    """
+
+    block_s: int = 256
+    block_t: int = 128
+    block_docs: int = 8
+    block_q: int = 16
+    shortlist: int = 8
+    rescan_every: int = 7
+
+    def validate(self) -> "KernelConfig":
+        if self.shortlist < self.rescan_every + 1:
+            raise ValueError(
+                f"invalid config: shortlist={self.shortlist} < "
+                f"rescan_every={self.rescan_every} + 1 (exactness bound)")
+        for f in dataclasses.fields(self):
+            if getattr(self, f.name) < 1:
+                raise ValueError(f"invalid config: {f.name} < 1")
+        return self
+
+
+def _pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def shape_key(kind: str, shape: dict, *, platform: str | None = None,
+              measured: bool = False) -> tuple:
+    """Canonical cache key: kind, platform, mode, bucketed shape.
+
+    Batch-like axes (samples, docs, queries) bucket to powers of two —
+    configs are insensitive to small count changes and this keeps the
+    cache (and the jit caches keyed on the resulting static args) from
+    growing per ragged shape.  Per-item axes (m, l, dim) stay exact:
+    they bound tile legality and the shortlist exactness proof.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown tuning kind {kind!r}; one of {KINDS}")
+    platform = platform or jax.default_backend()
+    bucketed = []
+    for name in sorted(shape):
+        v = int(shape[name])
+        if name in ("n_samples", "n_docs", "n_q"):
+            v = _pow2_at_least(max(v, 1))
+        bucketed.append((name, v))
+    return (kind, platform, "measured" if measured else "heuristic",
+            tuple(bucketed))
+
+
+def _pruning_heuristic(shape: dict, platform: str,
+                       vmem_budget: int) -> KernelConfig:
+    n = int(shape.get("n_samples", 2048))
+    m = int(shape.get("m", 128))
+    dim = int(shape.get("dim", 128))
+
+    # Kernel tiles: token tile lane-aligned, sample tile shrunk until
+    # (samples + tokens + scores) f32 tiles fit the VMEM budget.
+    block_t = min(512, max(8, _round_up(min(m, 512), 128)))
+    block_s = min(1024, max(8, _round_up(min(n, 256), 8)))
+    while block_s > 8 and 4 * (block_s * dim + block_t * dim
+                               + block_s * block_t) > vmem_budget:
+        block_s //= 2
+
+    # Shortlist schedule: per-step work is O(N*K), the amortized rescan
+    # O(N*m / R) with R = K - 1, so K ~ sqrt(m) balances them.  Lane-
+    # friendly powers of two; exactness bound K >= R + 1 holds by
+    # construction.
+    k = _pow2_at_least(max(int(m ** 0.5), 2))
+    k = max(4, min(32, k))
+    k = min(k, max(m, 2))
+    rescan = max(1, k - 1)
+    return KernelConfig(block_s=block_s, block_t=block_t,
+                        shortlist=k, rescan_every=rescan).validate()
+
+
+def _serving_heuristic(shape: dict, platform: str,
+                       vmem_budget: int) -> KernelConfig:
+    n_q = int(shape.get("n_q", 16))
+    n_docs = int(shape.get("n_docs", 256))
+    m = int(shape.get("m", 128))
+    l = int(shape.get("l", 32))
+    dim = int(shape.get("dim", 128))
+
+    block_q = min(_pow2_at_least(max(n_q, 1)), 32)
+    # Doc block: largest power of two whose (docs + queries + scores)
+    # f32 tiles fit the budget; bigger blocks amortize kernel launches
+    # and feed the MXU larger matmuls.
+    block_docs = 128
+    while block_docs > 4 and 4 * (block_docs * m * dim
+                                  + block_q * l * dim
+                                  + block_docs * m * block_q * l
+                                  ) > vmem_budget:
+        block_docs //= 2
+    block_docs = min(block_docs, _pow2_at_least(max(n_docs, 1)))
+    return KernelConfig(block_docs=max(block_docs, 1),
+                        block_q=max(block_q, 1)).validate()
+
+
+def heuristic_config(kind: str, *, platform: str | None = None,
+                     vmem_budget: int | None = None,
+                     **shape) -> KernelConfig:
+    """Static-table config for (kind, shape, platform).  Pure.
+
+    ``vmem_budget=None`` resolves per platform: the half-VMEM budget on
+    TPU (tiles must genuinely fit), the LLC-ish working-set budget
+    elsewhere (interpret-mode kernels have no VMEM and bigger blocks
+    amortize launch overhead)."""
+    platform = platform or jax.default_backend()
+    if vmem_budget is None:
+        vmem_budget = (DEFAULT_VMEM_BUDGET if platform == "tpu"
+                       else INTERPRET_WORKING_SET_BUDGET)
+    if kind == "pruning":
+        return _pruning_heuristic(shape, platform, vmem_budget)
+    if kind == "serving":
+        return _serving_heuristic(shape, platform, vmem_budget)
+    raise ValueError(f"unknown tuning kind {kind!r}; one of {KINDS}")
+
+
+# ----------------------------------------------------------------------
+# Measured mode: one-shot candidate race, cached in-process.
+# ----------------------------------------------------------------------
+
+_CACHE: dict[tuple, KernelConfig] = {}
+
+
+def _time_once(fn) -> float:
+    out = fn()
+    jax.block_until_ready(out)           # warmup + compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def _measure_pruning(shape: dict, base: KernelConfig) -> KernelConfig:
+    import jax.numpy as jnp
+
+    from repro.core import voronoi
+    from repro.core.sampling import sample_sphere
+
+    n = int(shape.get("n_samples", 2048))
+    m = int(shape.get("m", 128))
+    dim = int(shape.get("dim", 128))
+    key = jax.random.PRNGKey(0)
+    d = jax.random.normal(key, (m, dim))
+    mask = jnp.ones((m,), bool)
+    samples = sample_sphere(jax.random.PRNGKey(1), n, dim)
+
+    ks = sorted({max(2, min(k, m)) for k in
+                 (base.shortlist // 2, base.shortlist, base.shortlist * 2)})
+    best, best_t = base, float("inf")
+    for k in ks:
+        cand = dataclasses.replace(base, shortlist=k, rescan_every=k - 1)
+        # every knob pinned explicitly: a None would consult the tuner
+        # from inside the race (re-entrant on the very key being tuned)
+        fn = lambda cand=cand: voronoi.pruning_order_shortlist(
+            d, mask, samples, shortlist=cand.shortlist,
+            rescan_every=cand.rescan_every, block_s=cand.block_s,
+            block_t=cand.block_t)[0]
+        t = _time_once(fn)
+        if t < best_t:
+            best, best_t = cand, t
+    return best
+
+
+def _measure_serving(shape: dict, base: KernelConfig) -> KernelConfig:
+    import jax.numpy as jnp
+
+    from repro.serve import retrieval
+
+    n_q = int(shape.get("n_q", 16))
+    n_docs = int(shape.get("n_docs", 256))
+    m = int(shape.get("m", 128))
+    l = int(shape.get("l", 32))
+    dim = int(shape.get("dim", 128))
+    key = jax.random.PRNGKey(0)
+    d = jax.random.normal(key, (n_docs, m, dim))
+    masks = jnp.ones((n_docs, m), bool)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (n_q, l, dim))
+    index = retrieval.TokenIndex.build(d, masks)
+
+    cands = sorted({max(1, min(bd, n_docs)) for bd in
+                    (base.block_docs // 2, base.block_docs,
+                     base.block_docs * 2)})
+    best, best_t = base, float("inf")
+    for bd in cands:
+        cand = dataclasses.replace(base, block_docs=bd)
+        fn = lambda cand=cand: retrieval.maxsim_scores(
+            index, q, backend="fused", block_docs=cand.block_docs,
+            block_q=cand.block_q)
+        t = _time_once(fn)
+        if t < best_t:
+            best, best_t = cand, t
+    return best
+
+
+def tune(kind: str, *, measure: bool | None = None,
+         platform: str | None = None, vmem_budget: int | None = None,
+         **shape) -> KernelConfig:
+    """Resolve a :class:`KernelConfig` for (kind, shape).
+
+    ``measure=None`` reads the ``REPRO_AUTOTUNE`` env var
+    (``"measure"`` enables the one-shot measured race; anything else —
+    including unset — stays heuristic).  Results are cached in-process
+    per (kind, platform, mode, shape bucket): the heuristic is pure so
+    the cache is just memoization; the measured race runs exactly once
+    per key.  Call this OUTSIDE jit — measured mode times real
+    executions, and the resulting ints become static jit arguments.
+    """
+    if measure is None:
+        measure = os.environ.get(_ENV_VAR, "").lower() == "measure"
+    key = shape_key(kind, shape, platform=platform, measured=measure)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    cfg = heuristic_config(kind, platform=platform,
+                           vmem_budget=vmem_budget, **shape)
+    if measure:
+        # Seed the cache with the heuristic BEFORE racing: the race runs
+        # real pruning/serving calls, and if any of them consults the
+        # tuner for this same key (e.g. a knob left unpinned) it must
+        # get the heuristic answer, not recurse into another race.
+        _CACHE[key] = cfg
+        cfg = (_measure_pruning(shape, cfg) if kind == "pruning"
+               else _measure_serving(shape, cfg)).validate()
+    _CACHE[key] = cfg
+    return cfg
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def cache_info() -> dict[tuple, KernelConfig]:
+    """Snapshot of the in-process tuning cache (tests/debugging)."""
+    return dict(_CACHE)

@@ -10,12 +10,18 @@ Casting token pruning as Voronoi-cell mass estimation:
   *  optional step-size > 1 and beam-search variants (ablations, §6.2).
 
 Reference semantics live here in pure jnp (fixed shapes, jit/vmap/scan
-friendly).  The production TPU path fuses the (best, second) reduction
-with the sample x token matmul in ``repro.kernels.maxsim_top2`` so the
-(N, m) score matrix never leaves VMEM; :func:`pruning_order` routes
-through it with ``backend="fused"`` (dispatch policy in
-``repro.core.backend`` — see its path matrix for reference vs fused vs
-shortlist trade-offs).
+friendly).  The production TPU paths run through the Pallas kernels:
+``backend="fused"`` fuses the (best, second) reduction with the
+sample x token matmul (``repro.kernels.maxsim_top2``) so the (N, m)
+score matrix never leaves VMEM, and ``backend="shortlist_topk"`` — the
+TPU default — runs the exact top-K shortlist algorithm with its
+periodic rescan through ``repro.kernels.maxsim_topk`` (no TopK
+custom-call, partitionable under GSPMD).  Dispatch policy and the full
+path matrix live in ``repro.core.backend``; tile sizes and shortlist
+schedules come from the shape-aware autotuner (``repro.core.tuning``)
+unless pinned.  Corpus-scale jobs should use the length-bucketed
+pipeline (``repro.core.pruning_pipeline`` or
+``pruning_order_batch(bucketed=True)``).
 
 Shape conventions: one document is (m, dim) + bool mask (m,); samples
 (N, dim).  Batch versions vmap over the leading doc axis.
@@ -33,6 +39,7 @@ from repro.core import backend as backend_lib
 from repro.core.scoring import NEG_INF, top2_scores
 from repro.kernels.maxsim_top2.ops import (maxsim_top2_op,
                                            maxsim_top2_update_op)
+from repro.kernels.maxsim_topk.ops import maxsim_topk_op
 
 __all__ = [
     "CellState",
@@ -150,10 +157,10 @@ def _select_removals(err: jax.Array, alive: jax.Array, step_size: int):
     take = jnp.arange(step_size) < k_want
     sel_idx = jnp.where(take, idxs, -1)
     sel_err = jnp.where(take, -vals, jnp.inf)
-    new_alive = alive
-    for j in range(step_size):
-        new_alive = jnp.where(
-            sel_idx[j] >= 0, new_alive.at[sel_idx[j]].set(False), new_alive)
+    # Single masked scatter: padded (-1) slots redirect out of bounds and
+    # drop, so step_size > 1 no longer unrolls one scatter per index.
+    safe_idx = jnp.where(sel_idx >= 0, sel_idx, err.shape[0])
+    new_alive = alive.at[safe_idx].set(False, mode="drop")
     return new_alive, sel_idx, sel_err, k_want > 0
 
 
@@ -265,8 +272,10 @@ def _pruning_order_fused(d_emb, d_mask, samples, *, step_size,
 def pruning_order(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
                   *, step_size: int = 1, materialize: bool = True,
                   single_pass: bool = False, bf16_scores: bool = False,
-                  backend: str | None = None, block_s: int = 256,
-                  block_t: int = 128, skip_unaffected: bool = True
+                  backend: str | None = None, block_s: int | None = None,
+                  block_t: int | None = None, skip_unaffected: bool = True,
+                  shortlist: int | None = None,
+                  rescan_every: int | None = None
                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Iterative Voronoi pruning (Alg. 1) producing a full removal order.
 
@@ -285,14 +294,21 @@ def pruning_order(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
     ``"reference"`` keeps the (N, m) score matrix resident;
     ``"fused"`` recomputes score tiles through the ``maxsim_top2``
     Pallas kernel so the matrix never exists (``materialize=False`` is
-    an alias); ``None`` resolves to fused on TPU, reference elsewhere
-    (``REPRO_BACKEND`` env var overrides).  Both paths share selection
-    and reassignment semantics — orders are identical up to float
-    tie-breaking (see tests/test_backend_dispatch.py).
+    an alias); ``"shortlist"`` / ``"shortlist_topk"`` run the exact
+    top-K shortlist algorithm with a dense or ``maxsim_topk``-kernel
+    rescan; ``None`` resolves to shortlist_topk on TPU, reference
+    elsewhere (``REPRO_BACKEND`` env var overrides).  All paths share
+    selection and reassignment semantics — orders are identical up to
+    float tie-breaking (see tests/test_backend_dispatch.py).
+
+    Tile sizes (``block_s``/``block_t``) and the shortlist schedule
+    (``shortlist``/``rescan_every``) default to ``None`` — filled in by
+    the shape-aware autotuner (``repro.core.tuning``) via the backend
+    seam; explicit values win.
 
     This wrapper is deliberately NOT jitted: backend resolution (env
-    var, platform, flag interplay) happens eagerly at call time; only
-    the per-backend implementations carry jit caches.
+    var, platform, flag interplay) and autotuning happen eagerly at
+    call time; only the per-backend implementations carry jit caches.
 
     ``skip_unaffected`` (fused path) wraps each step's kernel rescan in
     a ``lax.cond`` that skips free removals; leave it True for single-
@@ -305,18 +321,28 @@ def pruning_order(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
         # These knobs name reference-path variants; honor them over the
         # platform default instead of silently dropping them on TPU.
         backend = backend_lib.REFERENCE
-    allow = (backend_lib.BACKENDS if step_size == 1
+    allow = (backend_lib.PRUNING if step_size == 1
              else (backend_lib.REFERENCE, backend_lib.FUSED))
     backend = backend_lib.resolve_backend(backend, allow=allow)
-    if backend == backend_lib.SHORTLIST:
+    if backend in (backend_lib.SHORTLIST, backend_lib.SHORTLIST_TOPK):
+        rescan = ("topk" if backend == backend_lib.SHORTLIST_TOPK
+                  else "dense")
         return pruning_order_shortlist(d_emb, d_mask, samples,
-                                       bf16_scores=bf16_scores)
+                                       bf16_scores=bf16_scores,
+                                       rescan=rescan, shortlist=shortlist,
+                                       rescan_every=rescan_every,
+                                       block_s=block_s, block_t=block_t)
     if backend == backend_lib.FUSED:
         if single_pass or bf16_scores:
             raise ValueError(
                 "single_pass/bf16_scores are reference-path knobs and "
                 "have no fused-kernel equivalent; drop them or pass "
                 "backend='reference'")
+        if block_s is None or block_t is None:
+            cfg = backend_lib.tuned("pruning", n_samples=samples.shape[0],
+                                    m=d_emb.shape[0], dim=d_emb.shape[-1])
+            block_s = cfg.block_s if block_s is None else block_s
+            block_t = cfg.block_t if block_t is None else block_t
         return _pruning_order_fused(d_emb, d_mask, samples,
                                     step_size=step_size, block_s=block_s,
                                     block_t=block_t,
@@ -328,71 +354,83 @@ def pruning_order(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("shortlist", "rescan_every",
-                                              "bf16_scores"))
-def pruning_order_shortlist(d_emb: jax.Array, d_mask: jax.Array,
-                            samples: jax.Array, *, shortlist: int = 16,
-                            rescan_every: int = 8,
-                            bf16_scores: bool = False
-                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """EXACT fast path for :func:`pruning_order` (§Perf iteration).
+                                              "bf16_scores", "rescan",
+                                              "block_s", "block_t"))
+def _pruning_order_shortlist_impl(d_emb, d_mask, samples, *, shortlist,
+                                  rescan_every, bf16_scores, rescan,
+                                  block_s, block_t):
+    """Nested-scan shortlist pruning with a pluggable rescan.
 
-    The reference recomputes a masked top-2 over all m tokens for every
-    sample at every removal step — O(N*m) HBM traffic per step.  Here
-    each sample instead keeps its top-`shortlist` candidate tokens; the
-    per-step reduction touches only (N, K).  A full (N, m) rescan runs
-    once per `rescan_every` steps as the *outer* level of a nested scan
-    (no data-dependent control flow).
+    ``rescan="dense"`` caches the (N, m) score matrix once and rescans
+    with ``lax.top_k`` — fastest on a single host, but the TopK
+    custom-call de-partitions under GSPMD.  ``rescan="topk"`` recomputes
+    the rescan through the fused ``maxsim_topk`` Pallas kernel: score
+    tiles live in VMEM, no (N, m) matrix is ever cached, and the grid is
+    plain data parallelism over sample blocks — the path that shards
+    over samples/docs on a multi-host mesh.
 
-    Exactness: between rescans at most `rescan_every - 1` tokens die, so
-    the true top-2 of the alive set is always contained in the last
-    rescan's top-(2 + rescan_every - 1) <= K entries.  With the defaults
-    (K=16, R=8) the result is bit-identical to the reference (tested).
-
-    This is the algorithmic twin of the fused Pallas kernel: on TPU the
-    rescan is the `maxsim_top2` kernel pass and the shortlist lives in
-    VMEM across steps.
+    The inner steps are scatter-free (§Perf): validity of shortlist
+    entries is maintained by compare-and-mask instead of an (N, K)
+    gather + row scatter, and the Eq. 8 error accumulation is a one-hot
+    matmul (an MXU-friendly segment-sum whose (N, m) one-hot is a
+    transient compute intermediate, fused or freed per step — not a
+    cached score matrix).  On CPU this is ~3x the scatter-based inner at
+    the bench shape; the one-hot matmul is also bit-identical to the
+    ``.at[].add`` scatter-sum there (asserted by the parity tests).
     """
-    if rescan_every > shortlist - 1:
-        raise ValueError("need shortlist >= rescan_every + 1 for exactness")
     n, m = samples.shape[0], d_emb.shape[0]
     K = min(shortlist, m)
     R = rescan_every
-    scores = samples @ d_emb.T
-    scores = jnp.where(d_mask[None, :], scores, NEG_INF)
-    if bf16_scores:
-        scores = scores.astype(jnp.bfloat16)
+    if rescan == "dense":
+        scores = samples @ d_emb.T
+        scores = jnp.where(d_mask[None, :], scores, NEG_INF)
+        if bf16_scores:
+            scores = scores.astype(jnp.bfloat16)
+
+        def rescan_fn(alive):
+            s = jnp.where(alive[None, :], scores,
+                          NEG_INF).astype(jnp.float32)
+            return jax.lax.top_k(s, K)                      # (N, K) x2
+    else:
+        def rescan_fn(alive):
+            return maxsim_topk_op(samples, d_emb, alive, k=K,
+                                  block_s=block_s, block_t=block_t)
+
     n_steps = m - 1
-    n_outer = -(-n_steps // R)
+    n_outer = -(-n_steps // R) if n_steps else 0
+    kcol = jax.lax.broadcasted_iota(jnp.int32, (n, K), 1)
+    tok = jnp.arange(m, dtype=jnp.int32)
 
     def outer(carry, _):
         alive, rank, err_at, next_pos = carry
-        # full rescan: per-sample top-K of alive tokens
-        s = jnp.where(alive[None, :], scores, NEG_INF).astype(jnp.float32)
-        vals, idxs = jax.lax.top_k(s, K)                    # (N, K)
+        vals, idxs = rescan_fn(alive)       # per-sample top-K of alive
+        valid0 = jnp.ones((n, K), bool)
 
         def inner(icarry, _):
-            alive, rank, err_at, pos = icarry
-            valid = alive[idxs]                             # (N, K) gather
+            alive, valid, rank, err_at, pos = icarry
             v = jnp.where(valid, vals, NEG_INF)
             b1 = jnp.max(v, axis=1)
             a1 = jnp.argmax(v, axis=1)
             bi = jnp.take_along_axis(idxs, a1[:, None], 1)[:, 0]
-            v2 = v.at[jnp.arange(n), a1].set(NEG_INF)
+            v2 = jnp.where(kcol == a1[:, None], NEG_INF, v)
             b2 = jnp.max(v2, axis=1)
             gap = b1 - b2
-            e = jnp.zeros((m,), jnp.float32).at[bi].add(gap) / n
+            onehot = (tok[None, :] == bi[:, None]).astype(jnp.float32)
+            e = (gap @ onehot) / n
             e = jnp.where(alive, e, jnp.inf)
             n_alive = jnp.sum(alive)
             j = jnp.argmin(e)
             do = (n_alive > 1) & (pos < n_steps)
-            alive2 = jnp.where(do, alive.at[j].set(False), alive)
-            rank2 = jnp.where(do, rank.at[j].set(pos), rank)
-            err2 = jnp.where(do, err_at.at[j].set(e[j]), err_at)
+            kill = do & (tok == j)
+            alive2 = alive & ~kill
+            rank2 = jnp.where(kill, pos, rank)
+            err2 = jnp.where(kill, e[j], err_at)
+            valid2 = valid & ~(do & (idxs == j))
             order_j = jnp.where(do, j, -1)
-            return (alive2, rank2, err2, pos + 1), order_j
+            return (alive2, valid2, rank2, err2, pos + 1), order_j
 
-        (alive, rank, err_at, next_pos), orders = jax.lax.scan(
-            inner, (alive, rank, err_at, next_pos), None, length=R)
+        (alive, _, rank, err_at, next_pos), orders = jax.lax.scan(
+            inner, (alive, valid0, rank, err_at, next_pos), None, length=R)
         return (alive, rank, err_at, next_pos), orders
 
     rank0 = jnp.full((m,), m, jnp.int32)
@@ -403,36 +441,142 @@ def pruning_order_shortlist(d_emb: jax.Array, d_mask: jax.Array,
     return rank, err_at, order
 
 
+def _resolve_shortlist_knobs(shortlist, rescan_every, block_s, block_t,
+                             *, n, m, dim):
+    """Fill ``None`` shortlist knobs from the autotuner (backend seam);
+    validate the exactness bound on whatever the caller pinned."""
+    if None in (shortlist, rescan_every, block_s, block_t):
+        cfg = backend_lib.tuned("pruning", n_samples=n, m=m, dim=dim)
+        if shortlist is None:
+            # grow past the tuned K if the caller pinned a longer rescan
+            # interval — the exactness bound is not the tuner's to break
+            shortlist = (cfg.shortlist if rescan_every is None
+                         else max(cfg.shortlist, rescan_every + 1))
+        if rescan_every is None:
+            rescan_every = min(cfg.rescan_every, max(shortlist - 1, 1))
+        block_s = cfg.block_s if block_s is None else block_s
+        block_t = cfg.block_t if block_t is None else block_t
+    if rescan_every > shortlist - 1:
+        raise ValueError("need shortlist >= rescan_every + 1 for exactness")
+    return shortlist, rescan_every, block_s, block_t
+
+
+def pruning_order_shortlist(d_emb: jax.Array, d_mask: jax.Array,
+                            samples: jax.Array, *,
+                            shortlist: int | None = None,
+                            rescan_every: int | None = None,
+                            bf16_scores: bool = False,
+                            rescan: str = "dense",
+                            block_s: int | None = None,
+                            block_t: int | None = None
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """EXACT fast path for :func:`pruning_order` (§Perf iteration).
+
+    The reference recomputes a masked top-2 over all m tokens for every
+    sample at every removal step — O(N*m) traffic per step.  Here each
+    sample instead keeps its top-`shortlist` candidate tokens; the
+    per-step reduction touches only (N, K).  A full rescan runs once per
+    `rescan_every` steps as the *outer* level of a nested scan (no
+    data-dependent control flow), either against a cached dense score
+    matrix (``rescan="dense"``) or through the fused ``maxsim_topk``
+    Pallas kernel (``rescan="topk"`` — the ``shortlist_topk`` backend:
+    partitionable, nothing (N, m)-shaped cached).
+
+    Exactness: between rescans at most `rescan_every - 1` tokens die, so
+    the true top-2 of the alive set is always contained in the last
+    rescan's top-(2 + rescan_every - 1) <= K entries; the result is
+    bit-identical to the reference (tested at the boundary).
+
+    ``shortlist``/``rescan_every``/``block_s``/``block_t`` default to
+    ``None`` — resolved by the shape-aware autotuner
+    (``repro.core.tuning``) from (N, m, dim) and the platform; pass
+    explicit values to pin them.  Un-jitted wrapper: knob resolution is
+    a call-time decision, the impl underneath carries the jit cache.
+    """
+    if rescan not in ("dense", "topk"):
+        raise ValueError(f"rescan={rescan!r}: one of ('dense', 'topk')")
+    if rescan == "topk" and bf16_scores:
+        raise ValueError(
+            "bf16_scores caches a bf16 dense score matrix and has no "
+            "topk-kernel equivalent; drop it or use rescan='dense'")
+    n, m = samples.shape[0], d_emb.shape[0]
+    shortlist, rescan_every, block_s, block_t = _resolve_shortlist_knobs(
+        shortlist, rescan_every, block_s, block_t, n=n, m=m,
+        dim=d_emb.shape[-1])
+    return _pruning_order_shortlist_impl(
+        d_emb, d_mask, samples, shortlist=shortlist,
+        rescan_every=rescan_every, bf16_scores=bf16_scores, rescan=rescan,
+        block_s=block_s, block_t=block_t)
+
+
 def pruning_order_batch(d_embs: jax.Array, d_masks: jax.Array,
                         samples: jax.Array, *, step_size: int = 1,
                         fast: bool = False, bf16_scores: bool = False,
                         shortlist: bool = False,
-                        backend: str | None = None):
+                        backend: str | None = None,
+                        bucketed: bool = False):
     """vmap of :func:`pruning_order` over a document batch (global pruning
     precomputation; embarrassingly parallel across the `data` mesh axis).
 
     ``fast=True`` uses the single-pass top-2 reduction (§Perf) — exact up
     to ties; ``bf16_scores`` halves the cached score-matrix bytes;
-    ``shortlist`` selects the top-K shortlist path (exact, fastest on a
-    single host, but its lax.top_k rescan de-partitions under GSPMD —
-    kept for single-host pruning jobs, see EXPERIMENTS.md §Perf);
-    ``backend`` forwards to :func:`pruning_order` (``backend="shortlist"``
-    is an alias for ``shortlist=True``).
+    ``shortlist`` selects the dense top-K shortlist path (exact, fastest
+    on a single host, but its lax.top_k rescan de-partitions under GSPMD
+    — multi-host jobs use ``backend="shortlist_topk"``, whose
+    ``maxsim_topk`` rescan partitions; that path is also the TPU
+    default); ``backend`` forwards to :func:`pruning_order`
+    (``backend="shortlist"`` is an alias for ``shortlist=True``).
+
+    ``bucketed=True`` routes through the length-bucketed corpus pipeline
+    (``repro.core.pruning_pipeline``): documents are grouped into a few
+    padded shape buckets by real token count, so a ragged corpus stops
+    paying full-`m` padding cost for short documents and stops
+    recompiling per shape.  Results are bit-identical either way.
+
+    Backend resolution and autotuning happen HERE, once, before the
+    vmap — never inside a trace.
     """
+    if bucketed:
+        from repro.core import pruning_pipeline
+        return pruning_pipeline.pruning_order_bucketed(
+            d_embs, d_masks, samples, step_size=step_size, fast=fast,
+            bf16_scores=bf16_scores, shortlist=shortlist, backend=backend)
     if backend == backend_lib.SHORTLIST:
         backend, shortlist = None, True
-    if shortlist and step_size == 1:
-        fn = lambda e, k: pruning_order_shortlist(
-            e, k, samples, bf16_scores=bf16_scores)
-    else:
+    if backend is None and shortlist and step_size == 1:
+        backend = backend_lib.SHORTLIST
+    elif backend is None and (fast or bf16_scores):
+        backend = backend_lib.REFERENCE
+    allow = (backend_lib.PRUNING if step_size == 1
+             else (backend_lib.REFERENCE, backend_lib.FUSED))
+    backend = backend_lib.resolve_backend(backend, allow=allow)
+    n, m, dim = samples.shape[0], d_embs.shape[1], d_embs.shape[-1]
+    if backend in (backend_lib.FUSED, backend_lib.SHORTLIST_TOPK) and (
+            fast or bf16_scores):
+        raise ValueError(
+            "fast/bf16_scores are materializing-path knobs with no "
+            f"{backend}-kernel equivalent; drop them or choose "
+            "backend='reference'/'shortlist'")
+    if backend in (backend_lib.SHORTLIST, backend_lib.SHORTLIST_TOPK):
+        rescan = ("topk" if backend == backend_lib.SHORTLIST_TOPK
+                  else "dense")
+        K, R, bs, bt = _resolve_shortlist_knobs(None, None, None, None,
+                                                n=n, m=m, dim=dim)
+        fn = lambda e, k: _pruning_order_shortlist_impl(
+            e, k, samples, shortlist=K, rescan_every=R,
+            bf16_scores=bf16_scores, rescan=rescan, block_s=bs, block_t=bt)
+    elif backend == backend_lib.FUSED:
+        cfg = backend_lib.tuned("pruning", n_samples=n, m=m, dim=dim)
         # skip_unaffected off: under vmap the fused path's lax.cond
         # rescan-skip lowers to a both-branches select and measurably
         # costs throughput instead of saving it.
-        fn = lambda e, k: pruning_order(e, k, samples, step_size=step_size,
-                                        single_pass=fast,
-                                        bf16_scores=bf16_scores,
-                                        backend=backend,
-                                        skip_unaffected=False)
+        fn = lambda e, k: _pruning_order_fused(
+            e, k, samples, step_size=step_size, block_s=cfg.block_s,
+            block_t=cfg.block_t, skip_unaffected=False)
+    else:
+        fn = lambda e, k: _pruning_order_reference(
+            e, k, samples, step_size=step_size, single_pass=fast,
+            bf16_scores=bf16_scores)
     return jax.vmap(fn)(d_embs, d_masks)
 
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.core import backend as backend_lib
-from repro.core import voronoi
+from repro.core import pruning_pipeline
 from repro.core.sampling import sample_sphere
 from repro.data import synthetic
 from repro.models import colbert as colbert_lib
@@ -40,9 +40,10 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
     d_emb, d_mask = colbert_lib.encode_docs(params, cfg, corpus.doc_ids)
     index = TokenIndex.build(d_emb, d_mask)
     samples = sample_sphere(jax.random.PRNGKey(1), 2048, cfg.out_dim)
-    ranks, errs, _ = voronoi.pruning_order_batch(d_emb, d_mask, samples,
-                                                 backend=backend)
-    keep = voronoi.global_keep_masks(ranks, errs, d_mask, keep_fraction)
+    # Length-bucketed corpus pruning: short documents run in narrow
+    # shape buckets instead of paying full-doc_len padding per step.
+    keep, ranks, errs = pruning_pipeline.prune_corpus(
+        d_emb, d_mask, samples, keep_fraction, backend=backend)
     pruned = index.with_keep(keep)
     print(f"[serve] index: {index.storage()}")
     print(f"[serve] pruned: {pruned.storage()}")
@@ -84,9 +85,10 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--backend", default=None,
-                    choices=["reference", "fused", "shortlist"],
-                    help="pruning/scoring path (default: fused on TPU, "
-                         "reference elsewhere; see repro.core.backend)")
+                    choices=list(backend_lib.BACKENDS),
+                    help="pruning/scoring path (default: shortlist_topk "
+                         "pruning + fused serving on TPU, reference "
+                         "elsewhere; see repro.core.backend)")
     args = ap.parse_args()
     if args.arch == "colbert":
         serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir,

@@ -100,18 +100,34 @@ def _maxsim_scores_fused(d_embs, active_mask, q_embs, q_masks, *,
     return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
 
+def _resolve_serving_blocks(index, q_embs, block_docs, block_q):
+    """Fill ``None`` chunking knobs from the shape-aware autotuner
+    (``repro.core.tuning`` via the backend seam); explicit values win."""
+    if block_docs is None or block_q is None:
+        n_docs, m = index.d_masks.shape
+        cfg = backend_lib.tuned("serving", n_q=q_embs.shape[0],
+                                n_docs=n_docs, m=m, l=q_embs.shape[1],
+                                dim=q_embs.shape[-1])
+        block_docs = cfg.block_docs if block_docs is None else block_docs
+        block_q = cfg.block_q if block_q is None else block_q
+    return block_docs, block_q
+
+
 def maxsim_scores(index: TokenIndex, q_embs: jnp.ndarray,
                   q_masks: jnp.ndarray | None = None, *,
-                  backend: str | None = None, block_docs: int = 8,
-                  block_q: int = 16) -> jnp.ndarray:
+                  backend: str | None = None, block_docs: int | None = None,
+                  block_q: int | None = None) -> jnp.ndarray:
     """(n_q, n_docs) exact MaxSim over the pruned index.
 
     Both backends are exact; they differ only in what they materialize
     (see module docstring).  ``backend=None`` resolves to fused on TPU,
-    reference elsewhere.
+    reference elsewhere.  ``block_docs``/``block_q`` default to ``None``
+    — picked by the shape-aware autotuner; pass ints to pin them.
     """
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
     if backend == backend_lib.FUSED:
+        block_docs, block_q = _resolve_serving_blocks(index, q_embs,
+                                                      block_docs, block_q)
         return _maxsim_scores_fused(index.d_embs, index.active_mask,
                                     q_embs, q_masks, block_docs=block_docs,
                                     block_q=block_q)
@@ -122,10 +138,14 @@ def maxsim_scores(index: TokenIndex, q_embs: jnp.ndarray,
 def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
            n_first: int = 64, end_to_end: bool = False,
            q_masks: jnp.ndarray | None = None,
-           backend: str | None = None, block_docs: int = 8,
-           block_q: int = 16):
-    """Two-stage (or e2e) retrieval. Returns (top_idx, top_scores, full)."""
+           backend: str | None = None, block_docs: int | None = None,
+           block_q: int | None = None):
+    """Two-stage (or e2e) retrieval. Returns (top_idx, top_scores, full).
+    ``block_docs``/``block_q`` default to autotuned (see maxsim_scores)."""
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
+    if backend == backend_lib.FUSED:
+        block_docs, block_q = _resolve_serving_blocks(index, q_embs,
+                                                      block_docs, block_q)
     n_docs = index.d_embs.shape[0]
     if end_to_end or n_first >= n_docs:
         scores = maxsim_scores(index, q_embs, q_masks, backend=backend,
@@ -167,26 +187,43 @@ def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
 class RetrievalServer:
     """Batched request serving over a pruned index (examples/serve).
 
-    ``backend``/``block_docs``/``block_q`` select and tune the scoring
-    path once at construction; the jitted search closure bakes them in.
+    ``backend`` is resolved once at construction.  ``block_docs``/
+    ``block_q`` default to ``None`` — autotuned per incoming query-batch
+    shape (resolution happens eagerly in :meth:`query_batch`, OUTSIDE
+    the jitted closure; one closure is built and cached per (n_q, l)
+    shape, so steady-state traffic with a fixed batch shape pays
+    resolution exactly once).
     """
 
     def __init__(self, index: TokenIndex, *, k: int = 10, n_first: int = 64,
-                 backend: str | None = None, block_docs: int = 8,
-                 block_q: int = 16):
+                 backend: str | None = None, block_docs: int | None = None,
+                 block_q: int | None = None):
         self.index = index
         self.k = k
         self.n_first = n_first
         self.backend = backend_lib.resolve_backend(backend,
                                                    allow=backend_lib.SERVING)
-        self._search = jax.jit(functools.partial(
-            self._run, index, k=k, n_first=n_first, backend=self.backend,
-            block_docs=block_docs, block_q=block_q))
+        self._block_docs = block_docs
+        self._block_q = block_q
+        self._search = {}                       # (n_q, l) -> jitted closure
 
     @staticmethod
     def _run(index, q, **kw):
         return search(index, q, **kw)[:2]
 
+    def _closure_for(self, q_embs):
+        key = q_embs.shape[:2]
+        fn = self._search.get(key)
+        if fn is None:
+            bd, bq = self._block_docs, self._block_q
+            if self.backend == backend_lib.FUSED:
+                bd, bq = _resolve_serving_blocks(self.index, q_embs, bd, bq)
+            fn = jax.jit(functools.partial(
+                self._run, self.index, k=self.k, n_first=self.n_first,
+                backend=self.backend, block_docs=bd, block_q=bq))
+            self._search[key] = fn
+        return fn
+
     def query_batch(self, q_embs: jnp.ndarray):
-        idx, scores = self._search(q_embs)
+        idx, scores = self._closure_for(q_embs)(q_embs)
         return jax.device_get(idx), jax.device_get(scores)

@@ -95,6 +95,70 @@ class TestPruningBackendParity:
         np.testing.assert_array_equal(np.asarray(r_a), np.asarray(r_b))
         np.testing.assert_array_equal(np.asarray(o_a), np.asarray(o_b))
 
+    @sweep(n_cases=6, seed=5, m=[6, 16, 23], dim=[4, 8], n_real=[None, 5])
+    def test_shortlist_topk_identical_to_reference(self, m, dim, n_real):
+        """The kernel-rescan shortlist path (shortlist_topk backend) is
+        the same exact algorithm: orders/ranks identical to the
+        reference, errs identical to the dense shortlist bit-for-bit."""
+        if n_real is not None and n_real > m:
+            n_real = m
+        d, mask = _doc(m * dim + 1, m, dim, n_real=n_real)
+        S = sampling.sample_sphere(jax.random.PRNGKey(9), 700, dim)
+        r_ref, e_ref, o_ref = voronoi.pruning_order(d, mask, S,
+                                                    backend="reference")
+        r_t, e_t, o_t = voronoi.pruning_order(d, mask, S,
+                                              backend="shortlist_topk")
+        r_d, e_d, o_d = voronoi.pruning_order(d, mask, S,
+                                              backend="shortlist")
+        n_rm = int(jnp.sum(mask)) - 1
+        np.testing.assert_array_equal(np.asarray(o_ref)[:n_rm],
+                                      np.asarray(o_t)[:n_rm])
+        np.testing.assert_array_equal(np.asarray(r_t), np.asarray(r_d))
+        np.testing.assert_array_equal(np.asarray(e_t), np.asarray(e_d))
+        np.testing.assert_array_equal(np.asarray(o_t), np.asarray(o_d))
+
+    def test_shortlist_topk_batch_ragged(self):
+        d, masks = _corpus(13, 5, 12, 8)
+        S = sampling.sample_sphere(jax.random.PRNGKey(10), 500, 8)
+        out_d = voronoi.pruning_order_batch(d, masks, S, shortlist=True)
+        out_t = voronoi.pruning_order_batch(d, masks, S,
+                                            backend="shortlist_topk")
+        for a, b in zip(out_d, out_t):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_no_full_m_topk_in_shortlist_topk_hlo(self):
+        """Acceptance criterion: the compiled shortlist-on-maxsim_topk
+        path contains no full-m lax.top_k — neither the (N, m) top_k op
+        in the lowering nor a TopK custom-call over f32[N, m] in the
+        compiled module — while the dense shortlist provably does (the
+        GSPMD de-partitioning culprit)."""
+        n, m, dim = 300, 23, 8
+        d, mask = _doc(21, m, dim)
+        S = sampling.sample_sphere(jax.random.PRNGKey(11), n, dim)
+
+        def texts(rescan):
+            fn = jax.jit(lambda dd, kk, ss:
+                         voronoi._pruning_order_shortlist_impl(
+                             dd, kk, ss, shortlist=8, rescan_every=7,
+                             bf16_scores=False, rescan=rescan,
+                             block_s=64, block_t=16))
+            lowered = fn.lower(d, mask, S)
+            return lowered.as_text(), lowered.compile().as_text()
+
+        low_pat = re.compile(rf"top_k[^\n]*{n}x{m}x")
+        dense_low, dense_comp = texts("dense")
+        assert low_pat.search(dense_low), \
+            "oracle changed: dense shortlist lowering lost its top_k"
+        assert any("TopK" in ln and f"[{n},{m}]" in ln
+                   for ln in dense_comp.splitlines()), \
+            "oracle changed: dense compiled module lost the TopK call"
+        topk_low, topk_comp = texts("topk")
+        assert not low_pat.search(topk_low), \
+            "shortlist_topk lowering still carries a full-m top_k"
+        assert not any("TopK" in ln and f"[{n},{m}]" in ln
+                       for ln in topk_comp.splitlines()), \
+            "shortlist_topk compiled module still calls full-m TopK"
+
     def test_conflicting_knobs_rejected(self):
         d, mask = _doc(9, 10, 8)
         S = sampling.sample_sphere(jax.random.PRNGKey(8), 200, 8)
@@ -244,6 +308,8 @@ class TestBackendResolution:
         try:
             os.environ["REPRO_BACKEND"] = "fused"
             assert backend_lib.resolve_backend(None) == "fused"
+            os.environ["REPRO_BACKEND"] = "shortlist_topk"
+            assert backend_lib.resolve_backend(None) == "shortlist_topk"
             # valid name outside this path's allow-set: platform default
             os.environ["REPRO_BACKEND"] = "shortlist"
             assert backend_lib.resolve_backend(
@@ -261,8 +327,17 @@ class TestBackendResolution:
     def test_platform_default(self):
         old = os.environ.pop("REPRO_BACKEND", None)
         try:
-            expect = "fused" if backend_lib.on_tpu() else "reference"
+            # TPU prefers the partitionable kernel paths: shortlist_topk
+            # where the caller allows it (pruning), fused otherwise
+            # (serving); off-TPU the reference path wins.
+            on_tpu = backend_lib.on_tpu()
+            expect = "shortlist_topk" if on_tpu else "reference"
             assert backend_lib.resolve_backend(None) == expect
+            expect_srv = "fused" if on_tpu else "reference"
+            assert backend_lib.resolve_backend(
+                None, allow=backend_lib.SERVING) == expect_srv
+            assert backend_lib.resolve_backend(
+                None, allow=("reference", "fused")) == expect_srv
         finally:
             if old is not None:
                 os.environ["REPRO_BACKEND"] = old

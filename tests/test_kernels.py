@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from _proptest import sweep
 from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_batch_op,
@@ -17,6 +18,8 @@ from repro.kernels.maxsim_top2.ops import (maxsim_top2_op,
                                            maxsim_top2_update_op,
                                            voronoi_errors_fused)
 from repro.kernels.maxsim_top2.ref import maxsim_top2_ref
+from repro.kernels.maxsim_topk.ops import maxsim_topk_op
+from repro.kernels.maxsim_topk.ref import maxsim_topk_ref
 from repro.core import voronoi, sampling
 
 
@@ -98,6 +101,75 @@ class TestMaxSimTop2:
         b, s, bi, si = maxsim_top2_op(S, D, alive)
         assert bool((bi == 2).all())
         assert bool((s <= -1e29).all())  # no second-best exists
+
+
+class TestMaxSimTopK:
+    """maxsim_topk vs the lax.top_k oracle: the contract is BIT-identical
+    output (values AND indices), sorted order and tie-breaking included —
+    the shortlist_topk pruning path leans on it for exactness."""
+
+    @sweep(n_cases=12, seed=0, N=[16, 100, 257], m=[9, 48, 130],
+           k=[1, 4, 16], block_s=[32, 256], block_t=[16, 128])
+    def test_matches_oracle_bitwise(self, N, m, k, block_s, block_t):
+        if k > m:
+            k = m
+        key = jax.random.PRNGKey(N * m + k)
+        S = jax.random.normal(key, (N, 16))
+        D = jax.random.normal(jax.random.fold_in(key, 1), (m, 16))
+        alive = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.75, (m,))
+        alive = alive.at[0].set(True)
+        v, i = maxsim_topk_op(S, D, alive, k=k, block_s=block_s,
+                              block_t=block_t)
+        rv, ri = maxsim_topk_ref(S, D, alive, k)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    @sweep(n_cases=6, seed=3, m=[24, 64], k=[4, 8], block_t=[16, 32])
+    def test_ties_resolve_to_lowest_index(self, m, k, block_t):
+        """Duplicate token rows + coarse quantization force exact score
+        ties, including across tile boundaries; lax.top_k's sorted-
+        descending lowest-index-first order must be reproduced."""
+        key = jax.random.PRNGKey(m + k)
+        S = jnp.round(jax.random.normal(key, (64, 8)) * 2) / 2
+        D = jnp.round(jax.random.normal(jax.random.fold_in(key, 1),
+                                        (m, 8)) * 2) / 2
+        # duplicates straddling tile boundaries of every block_t swept
+        D = D.at[m - 1].set(D[0]).at[m // 2].set(D[1]).at[2].set(D[1])
+        alive = jnp.ones((m,), bool)
+        v, i = maxsim_topk_op(S, D, alive, k=k, block_t=block_t)
+        rv, ri = maxsim_topk_ref(S, D, alive, k)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_k_equals_m_returns_full_argsort(self):
+        S = jax.random.normal(jax.random.PRNGKey(0), (33, 8))
+        D = jax.random.normal(jax.random.PRNGKey(1), (12, 8))
+        alive = jnp.arange(12) < 9
+        v, i = maxsim_topk_op(S, D, alive, k=12, block_t=8)
+        rv, ri = maxsim_topk_ref(S, D, alive, 12)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+        # dead tokens trail, lowest dead index first
+        assert bool((np.asarray(v)[:, 9:] <= -1e29).all())
+
+    def test_k_above_m_rejected(self):
+        S = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+        D = jax.random.normal(jax.random.PRNGKey(1), (5, 4))
+        with pytest.raises(ValueError, match="exceeds token count"):
+            maxsim_topk_op(S, D, jnp.ones((5,), bool), k=6)
+
+    def test_top2_agreement(self):
+        """k=2 specializes to exactly what maxsim_top2 computes."""
+        S = jax.random.normal(jax.random.PRNGKey(2), (50, 16))
+        D = jax.random.normal(jax.random.PRNGKey(3), (40, 16))
+        alive = jax.random.bernoulli(jax.random.PRNGKey(4), 0.7, (40,))
+        alive = alive.at[0].set(True).at[1].set(True)
+        v, i = maxsim_topk_op(S, D, alive, k=2, block_t=16)
+        b, s, bi, si = maxsim_top2_op(S, D, alive, block_t=16)
+        np.testing.assert_array_equal(np.asarray(v[:, 0]), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(v[:, 1]), np.asarray(s))
+        np.testing.assert_array_equal(np.asarray(i[:, 0]), np.asarray(bi))
+        np.testing.assert_array_equal(np.asarray(i[:, 1]), np.asarray(si))
 
 
 class TestColbertMaxsim:

@@ -1,0 +1,160 @@
+"""Length-bucketed corpus pruning pipeline: plan properties and the
+bit-identical-parity contract against the flat `pruning_order_batch`.
+
+The pipeline's whole value is that bucketing is a pure execution-shape
+change: (ranks, errs, orders) must match the unbucketed batch path BIT
+for BIT on ragged corpora, for every backend, including degenerate
+documents (one-token, fully masked) and step_size > 1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _proptest import sweep
+from repro.core import pruning_pipeline as pp
+from repro.core import sampling, voronoi
+
+
+def _ragged_corpus(seed, n_docs, m, dim):
+    k = jax.random.PRNGKey(seed)
+    d = jax.random.normal(k, (n_docs, m, dim)) * 0.5
+    n_real = jax.random.randint(jax.random.fold_in(k, 1), (n_docs,),
+                                1, m + 1)
+    masks = jnp.arange(m)[None, :] < n_real[:, None]
+    return d, masks, n_real
+
+
+class TestBucketPlan:
+    @sweep(n_cases=8, seed=0, n_docs=[1, 7, 40], m=[8, 24, 100],
+           granularity=["pow2", 8])
+    def test_partition_and_bounds(self, n_docs, m, granularity):
+        rng = np.random.default_rng(n_docs * m)
+        n_real = rng.integers(1, m + 1, n_docs)
+        plan = pp.bucket_plan(n_real, m, granularity=granularity)
+        seen = np.concatenate([b.indices for b in plan])
+        # exact partition of the doc axis
+        assert sorted(seen.tolist()) == list(range(n_docs))
+        widths = [b.width for b in plan]
+        assert widths == sorted(widths)
+        for b in plan:
+            assert b.width <= m
+            assert (n_real[b.indices] <= b.width).all()
+
+    def test_pow2_bounds_bucket_count(self):
+        n_real = np.arange(1, 513)
+        plan = pp.bucket_plan(n_real, 512)
+        assert len(plan) <= 8  # O(log m) shapes: 8,16,...,512
+
+    def test_bad_inputs_rejected(self):
+        with pytest.raises(ValueError, match="granularity"):
+            pp.bucket_plan([3, 4], 8, granularity=0)
+        with pytest.raises(ValueError, match="1-D"):
+            pp.bucket_plan(np.ones((2, 2)), 8)
+
+
+class TestBucketedParity:
+    @sweep(n_cases=6, seed=1, n_docs=[5, 12], m=[10, 24, 33], dim=[4, 8],
+           backend_kw=[{}, {"shortlist": True},
+                       {"backend": "shortlist_topk"},
+                       {"backend": "fused"}, {"step_size": 3},
+                       {"fast": True}])
+    def test_bit_identical_to_flat_batch(self, n_docs, m, dim, backend_kw):
+        d, masks, _ = _ragged_corpus(n_docs * m + dim, n_docs, m, dim)
+        S = sampling.sample_sphere(jax.random.PRNGKey(2), 400, dim)
+        flat = voronoi.pruning_order_batch(d, masks, S, **backend_kw)
+        buck = pp.pruning_order_bucketed(d, masks, S, **backend_kw)
+        for name, a, b in zip(("ranks", "errs", "orders"), flat, buck):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{name} {backend_kw}")
+
+    def test_bucketed_flag_on_batch_entry(self):
+        d, masks, _ = _ragged_corpus(3, 6, 16, 8)
+        S = sampling.sample_sphere(jax.random.PRNGKey(3), 300, 8)
+        a = voronoi.pruning_order_batch(d, masks, S, shortlist=True)
+        b = voronoi.pruning_order_batch(d, masks, S, shortlist=True,
+                                        bucketed=True)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_scattered_non_prefix_masks(self):
+        """Masks need not be prefix-padded (e.g. stopword filtering
+        kills interior positions): bucket widths follow the EFFECTIVE
+        length (last alive position + 1), so a doc alive at {0, 15}
+        must not be truncated into a narrow bucket."""
+        k = jax.random.PRNGKey(17)
+        n_docs, m = 6, 16
+        d = jax.random.normal(k, (n_docs, m, 8)) * 0.5
+        masks = jax.random.bernoulli(jax.random.fold_in(k, 1), 0.4,
+                                     (n_docs, m))
+        masks = masks.at[0].set(False).at[0, 0].set(True) \
+                     .at[0, m - 1].set(True)     # alive only at {0, 15}
+        S = sampling.sample_sphere(jax.random.PRNGKey(18), 400, 8)
+        eff = pp.effective_lengths(masks)
+        assert int(eff[0]) == m
+        flat = voronoi.pruning_order_batch(d, masks, S, shortlist=True)
+        buck = pp.pruning_order_bucketed(d, masks, S, shortlist=True)
+        for name, a, b in zip(("ranks", "errs", "orders"), flat, buck):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+    def test_degenerate_docs(self):
+        """One-token and fully-masked documents survive bucketing."""
+        d, masks, _ = _ragged_corpus(5, 6, 20, 8)
+        masks = masks.at[0].set(False)                    # 0 real tokens
+        masks = masks.at[1].set(jnp.arange(20) < 1)       # 1 real token
+        S = sampling.sample_sphere(jax.random.PRNGKey(4), 300, 8)
+        flat = voronoi.pruning_order_batch(d, masks, S, shortlist=True)
+        buck = pp.pruning_order_bucketed(d, masks, S, shortlist=True)
+        for a, b in zip(flat, buck):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # conventions: nothing removed, rank sentinel m, err inf
+        assert bool((buck[0][0] == 20).all())
+        assert bool(jnp.isinf(buck[1][1][0]))
+
+    def test_uniform_lengths_single_bucket(self):
+        d, masks, _ = _ragged_corpus(7, 4, 16, 8)
+        masks = jnp.ones_like(masks)
+        plan = pp.bucket_plan(np.asarray(masks.sum(1)), 16)
+        assert len(plan) == 1 and plan[0].width == 16
+        flat = voronoi.pruning_order_batch(d, masks, S := sampling.
+                                           sample_sphere(
+                                               jax.random.PRNGKey(5),
+                                               200, 8))
+        buck = pp.pruning_order_bucketed(d, masks, S)
+        for a, b in zip(flat, buck):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_empty_corpus(self):
+        d = jnp.zeros((0, 8, 4))
+        masks = jnp.zeros((0, 8), bool)
+        S = sampling.sample_sphere(jax.random.PRNGKey(6), 100, 4)
+        r, e, o = pp.pruning_order_bucketed(d, masks, S)
+        assert r.shape == (0, 8) and e.shape == (0, 8) and o.shape == (0, 7)
+
+    def test_plan_reuse(self):
+        d, masks, n_real = _ragged_corpus(9, 8, 24, 8)
+        plan = pp.bucket_plan(np.asarray(n_real), 24)
+        S = sampling.sample_sphere(jax.random.PRNGKey(7), 300, 8)
+        a = pp.pruning_order_bucketed(d, masks, S, shortlist=True)
+        b = pp.pruning_order_bucketed(d, masks, S, shortlist=True,
+                                      plan=plan)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestPruneCorpus:
+    def test_keep_masks_match_flat_global_pruning(self):
+        d, masks, _ = _ragged_corpus(11, 10, 20, 8)
+        S = sampling.sample_sphere(jax.random.PRNGKey(8), 500, 8)
+        for frac in (0.3, 0.7):
+            keep, ranks, errs = pp.prune_corpus(d, masks, S, frac,
+                                                shortlist=True)
+            flat = voronoi.pruning_order_batch(d, masks, S, shortlist=True)
+            ref = voronoi.global_keep_masks(flat[0], flat[1], masks, frac)
+            np.testing.assert_array_equal(np.asarray(keep), np.asarray(ref))
+            # budget + per-doc floor invariants survive the bucketing
+            assert bool((keep & ~masks).sum() == 0)
+            per_doc = np.asarray((keep & masks).sum(1))
+            assert (per_doc[np.asarray(masks.sum(1)) > 0] >= 1).all()
