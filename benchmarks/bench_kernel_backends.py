@@ -3,7 +3,10 @@
 Measures the two hot paths the dispatch seam (repro.core.backend)
 routes — iterative Voronoi pruning (all four backends + the bucketed
 corpus pipeline + the ragged-corpus comparison) and MaxSim serving —
-prints the harness CSV lines, and APPENDS a timestamped entry to
+plus the packed-vs-masked index-layout comparison (same pruned corpus
+served from the dense masked `TokenIndex` and from the compacted
+`PackedIndex`, throughput AND measured bytes), prints the harness CSV
+lines, and APPENDS a timestamped entry to
 ``BENCH_kernel_backends.json`` at the repo root so the perf trajectory
 of the kernel-backed paths accumulates PR over PR instead of being
 overwritten.
@@ -19,7 +22,8 @@ either way.
 
 ``python -m benchmarks.bench_kernel_backends --check`` re-reads the
 last trajectory entry and fails (exit 1) if batched pruning regressed
-below the same run's reference-path docs/sec — the throughput smoke
+below the same run's reference-path docs/sec, or if packed serving
+dropped below the masked path at the same shape — the throughput smoke
 scripts/smoke.sh runs after recording.
 """
 
@@ -32,6 +36,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
 from benchmarks.bench_speedup import run_pruning_backends, run_ragged_pruning
@@ -80,6 +85,45 @@ def run_rerank_backends(n_q=32, n_docs=256, m=128, l=32, dim=128,
     }
 
 
+def run_packed_serving(n_q=32, n_docs=256, m=128, l=32, dim=128,
+                       keep_fraction=0.5):
+    """Index-layout comparison at the rerank shape: the same pruned
+    corpus served from the dense masked index vs the packed artifact
+    (platform-default backend on both), plus the measured-bytes story.
+    The keep mask holds exactly ``keep_fraction * m`` scattered tokens
+    per doc, so the packed capacity buckets are tight and the layout
+    effect isolates from pruning-quality noise.
+    Returns {masked|packed: q_per_s, bytes..., shape}."""
+    k = jax.random.PRNGKey(0)
+    d = jax.random.normal(k, (n_docs, m, dim))
+    masks = jnp.ones((n_docs, m), bool)
+    q = jax.random.normal(jax.random.fold_in(k, 1), (n_q, l, dim))
+    n_keep = int(m * keep_fraction)
+    rng = np.random.default_rng(0)
+    keep = np.zeros((n_docs, m), bool)
+    for i in range(n_docs):                 # scattered, exact-count keeps
+        keep[i, rng.choice(m, n_keep, replace=False)] = True
+    masked = TokenIndex.build(d, masks).with_keep(jnp.asarray(keep))
+    packed = masked.pack()
+
+    f_mask = jax.jit(lambda qq: maxsim_scores(masked, qq))
+    f_pack = jax.jit(lambda qq: maxsim_scores(packed, qq))
+    t_mask, _ = common.timeit(lambda: f_mask(q), repeat=2)
+    t_pack, _ = common.timeit(lambda: f_pack(q), repeat=2)
+    pst = packed.storage()
+    return {
+        "masked": n_q / t_mask,
+        "packed": n_q / t_pack,
+        "speedup_packed_over_masked": t_mask / t_pack,
+        "bytes_masked_resident": n_docs * m * dim * 4,
+        "bytes_packed_stored": pst["bytes_stored"],
+        "bytes_ratio_packed_over_dense":
+            pst["bytes_stored"] / (n_docs * m * dim * 4),
+        "shape": dict(n_q=n_q, n_docs=n_docs, m=m, l=l, dim=dim,
+                      keep_fraction=keep_fraction),
+    }
+
+
 def load_trajectory(path: str = OUT_PATH) -> list[dict]:
     """Read the trajectory entries; a legacy single-record dict (PR 1
     wrote one overwritten object) is adopted as the first entry."""
@@ -125,12 +169,25 @@ def check_last(path: str = OUT_PATH) -> None:
     print(f"throughput smoke OK: bucketed {bucketed:.2f} docs/s vs "
           f"reference {ref:.2f} docs/s "
           f"({bucketed / ref:.2f}x at the bench shape)")
+    layout = last.get("packed_serving_q_per_s", {})
+    pk, mk = layout.get("packed"), layout.get("masked")
+    if pk is None or mk is None:
+        raise SystemExit(f"{path}: last entry predates the packed index "
+                         "layout; re-run the bench")
+    if pk < mk:
+        raise SystemExit(
+            f"THROUGHPUT REGRESSION: packed serving {pk:.2f} q/s fell "
+            f"below the masked path {mk:.2f} q/s at the bench shape "
+            f"{last.get('packed_serving_shape')}")
+    print(f"throughput smoke OK: packed serving {pk:.2f} q/s vs masked "
+          f"{mk:.2f} q/s ({pk / mk:.2f}x at the bench shape)")
 
 
 def main():
     pruning = run_pruning_backends()
     ragged = run_ragged_pruning()
     rerank = run_rerank_backends(**RERANK)
+    layout = run_packed_serving()
 
     for name in PRUNING_BACKENDS:
         common.csv_line(f"kernel_backends/pruning_{name}",
@@ -156,6 +213,17 @@ def main():
         "kernel_backends/CLAIM_bucketed_pruning_2x_reference", 0.0,
         f"holds={prune_speedup >= 2.0};speedup={prune_speedup:.2f}x at "
         f"{pruning['shape']['n_docs']}docs x {pruning['shape']['m']}tok")
+    for name in ("masked", "packed"):
+        common.csv_line(f"kernel_backends/serving_layout_{name}",
+                        1e6 / layout[name],
+                        f"q_per_s={layout[name]:.2f}")
+    common.csv_line(
+        "kernel_backends/CLAIM_packed_index_shrinks_and_keeps_throughput",
+        0.0,
+        f"holds={layout['speedup_packed_over_masked'] >= 1.0};"
+        f"speedup={layout['speedup_packed_over_masked']:.2f}x;"
+        f"bytes_ratio={layout['bytes_ratio_packed_over_dense']:.3f} of "
+        f"dense at keep={layout['shape']['keep_fraction']}")
 
     entry = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -175,8 +243,17 @@ def main():
         "rerank_speedup_fused_over_reference":
             rerank["speedup_fused_over_reference"],
         "rerank_shape": rerank["shape"],
+        "packed_serving_q_per_s": {k: layout[k]
+                                   for k in ("masked", "packed")},
+        "packed_serving_shape": layout["shape"],
+        "packed_speedup_over_masked": layout["speedup_packed_over_masked"],
+        "packed_bytes": {k: layout[k] for k in
+                         ("bytes_masked_resident", "bytes_packed_stored",
+                          "bytes_ratio_packed_over_dense")},
         "claim_chunked_serving_beats_reference": bool(wins),
         "claim_bucketed_pruning_2x_reference": bool(prune_speedup >= 2.0),
+        "claim_packed_index_shrinks_and_keeps_throughput":
+            bool(layout["speedup_packed_over_masked"] >= 1.0),
     }
     append_entry(entry)
 

@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 smoke: the exact ROADMAP verify command plus the kernel
 # micro-benches (Pallas interpreter off-TPU), the backend-dispatch perf
-# record, and the pruning-throughput gate (fails if batched bucketed
-# pruning regresses below the reference path at the bench shape).
+# record, the throughput gates (fails if batched bucketed pruning
+# regresses below the reference path, or packed serving below the
+# masked path, at the bench shapes), and the packed-index lifecycle
+# roundtrip (prune -> pack -> save on the first serve run, load -> query
+# on the second — the offline/online split a real deployment uses).
 # Run from anywhere; zstandard is optional (checkpointing falls back to
 # uncompressed bodies).
 set -euo pipefail
@@ -12,4 +15,11 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m pytest -x -q
 python -m benchmarks.run kernels kernel_backends
 python -m benchmarks.bench_kernel_backends --check
+
+index_dir="$(mktemp -d)/packed_index"
+trap 'rm -rf "$(dirname "$index_dir")"' EXIT
+python -m repro.launch.serve --arch colbert --index-dir "$index_dir"
+test -f "$index_dir/packed_index.json"
+python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
+  | grep -q "loaded packed index"
 echo "smoke OK"

@@ -78,6 +78,7 @@ __all__ = [
     "on_tpu",
     "resolve_backend",
     "tuned",
+    "tuned_serving_blocks",
 ]
 
 REFERENCE = "reference"
@@ -163,3 +164,23 @@ def tuned(kind: str, **shape):
     """
     from repro.core import tuning
     return tuning.tune(kind, **shape)
+
+
+def tuned_serving_blocks(n_q: int, n_docs: int, m: int, l: int, dim: int,
+                         block_docs: int | None = None,
+                         block_q: int | None = None) -> tuple[int, int]:
+    """Resolve the serving sweep's ``(block_docs, block_q)`` chunking
+    knobs for one doc array of shape (n_docs, m, dim).  Explicit values
+    win; ``None``s come from the autotuner.
+
+    ``m`` here is the *token capacity of the array being scored*, not
+    necessarily the corpus max length: the packed index scores one
+    capacity bucket at a time, so each bucket shape (n_docs_b, cap_b)
+    keys its own tuning entry — narrow buckets legitimately get bigger
+    doc blocks than the full-width dense index would.
+    """
+    if block_docs is None or block_q is None:
+        cfg = tuned("serving", n_q=n_q, n_docs=n_docs, m=m, l=l, dim=dim)
+        block_docs = cfg.block_docs if block_docs is None else block_docs
+        block_q = cfg.block_q if block_q is None else block_q
+    return block_docs, block_q

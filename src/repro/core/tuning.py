@@ -18,6 +18,16 @@ from (problem shape, platform, VMEM budget) instead:
   data of the given shape, cached in-process so each (kind, platform,
   shape bucket) pays the measurement exactly once.
 
+The in-process cache also persists (ROADMAP item: offline jobs share
+one measurement pass): :func:`dump_cache`/:func:`load_cache` write/read
+it as JSON, and the ``REPRO_AUTOTUNE_CACHE`` env var automates both —
+the file is loaded lazily before the first :func:`tune` call and
+re-dumped (atomic tmp+rename, merging the file's current entries first
+so concurrent writers keep each other's measurements) after every
+measured race, so a fleet of jobs pointed at one path converges on one
+measurement pass per shape bucket.  Entries are keyed on platform, so
+one file can carry CPU and TPU tables side by side.
+
 Shapes are bucketed (power-of-two on the sample/doc/query counts, exact
 on the per-document axes m/l/dim that determine tile legality) so jit
 caches and the measurement cache stay small under ragged workloads.
@@ -33,6 +43,7 @@ Explicit arguments always win; the autotuner only fills blanks.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 
@@ -42,12 +53,16 @@ __all__ = [
     "KernelConfig",
     "cache_info",
     "clear_cache",
+    "dump_cache",
     "heuristic_config",
+    "load_cache",
     "shape_key",
     "tune",
 ]
 
 _ENV_VAR = "REPRO_AUTOTUNE"
+_CACHE_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+_CACHE_FORMAT = 1
 
 # Per-core VMEM is ~16 MB on current TPUs; budget half of it so the
 # pipelined double-buffering of grid blocks still fits.
@@ -198,6 +213,77 @@ def heuristic_config(kind: str, *, platform: str | None = None,
 # ----------------------------------------------------------------------
 
 _CACHE: dict[tuple, KernelConfig] = {}
+_env_cache_loaded = False
+
+
+def _key_to_jsonable(key: tuple) -> dict:
+    kind, platform, mode, shape = key
+    return {"kind": kind, "platform": platform, "mode": mode,
+            "shape": [[n, v] for n, v in shape]}
+
+
+def _key_from_jsonable(d: dict) -> tuple:
+    return (str(d["kind"]), str(d["platform"]), str(d["mode"]),
+            tuple((str(n), int(v)) for n, v in d["shape"]))
+
+
+def _read_entries(path: str) -> dict[tuple, KernelConfig]:
+    """Parse a :func:`dump_cache` file.  Every config is re-validated,
+    so a hand-edited file cannot smuggle in an illegal schedule."""
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("format", 0) > _CACHE_FORMAT:
+        raise IOError(f"{path}: tuning-cache format {payload['format']} is "
+                      f"newer than this reader (format {_CACHE_FORMAT})")
+    return {_key_from_jsonable(e["key"]): KernelConfig(**e["config"]).validate()
+            for e in payload.get("entries", [])}
+
+
+def dump_cache(path: str, *, merge: bool = True) -> int:
+    """Write the in-process tuning cache to ``path`` as JSON (atomic
+    tmp+rename).  Returns the number of entries written.
+
+    ``merge=True`` (default) first folds in entries already in the file
+    that this process doesn't hold — in-process entries win per key —
+    so concurrent writers sharing one file keep each other's
+    measurements instead of overwriting the whole file with their local
+    view.  The remaining race window (read-then-rename) can only drop
+    an entry measured by another process inside that window, and that
+    process re-merges it on its own next dump.  ``merge=False`` writes
+    exactly the in-process snapshot (e.g. to prune a stale file)."""
+    if merge and os.path.exists(path):
+        for key, cfg in _read_entries(path).items():
+            _CACHE.setdefault(key, cfg)
+    payload = {
+        "format": _CACHE_FORMAT,
+        "entries": [{"key": _key_to_jsonable(k),
+                     "config": dataclasses.asdict(v)}
+                    for k, v in _CACHE.items()],
+    }
+    from repro.train.checkpoint import atomic_json_dump
+    atomic_json_dump(path, payload)
+    return len(payload["entries"])
+
+
+def load_cache(path: str) -> int:
+    """Merge a :func:`dump_cache` file into the in-process cache (file
+    entries win over in-process ones — the file is the shared
+    measurement pass).  Returns the number of entries merged."""
+    entries = _read_entries(path)
+    _CACHE.update(entries)
+    return len(entries)
+
+
+def _maybe_load_env_cache() -> None:
+    """Lazy one-shot load of the ``REPRO_AUTOTUNE_CACHE`` file (if the
+    env var is set and the file exists) before the first resolution."""
+    global _env_cache_loaded
+    if _env_cache_loaded:
+        return
+    _env_cache_loaded = True
+    path = os.environ.get(_CACHE_ENV_VAR)
+    if path and os.path.exists(path):
+        load_cache(path)
 
 
 def _time_once(fn) -> float:
@@ -285,6 +371,7 @@ def tune(kind: str, *, measure: bool | None = None,
     """
     if measure is None:
         measure = os.environ.get(_ENV_VAR, "").lower() == "measure"
+    _maybe_load_env_cache()
     key = shape_key(kind, shape, platform=platform, measured=measure)
     hit = _CACHE.get(key)
     if hit is not None:
@@ -299,12 +386,20 @@ def tune(kind: str, *, measure: bool | None = None,
         _CACHE[key] = cfg
         cfg = (_measure_pruning(shape, cfg) if kind == "pruning"
                else _measure_serving(shape, cfg)).validate()
+        _CACHE[key] = cfg
+        # Share the measurement pass: re-dump the merged cache whenever
+        # a race produced a new entry and the env hook names a file.
+        path = os.environ.get(_CACHE_ENV_VAR)
+        if path:
+            dump_cache(path)
     _CACHE[key] = cfg
     return cfg
 
 
 def clear_cache() -> None:
+    global _env_cache_loaded
     _CACHE.clear()
+    _env_cache_loaded = False
 
 
 def cache_info() -> dict[tuple, KernelConfig]:

@@ -1,7 +1,11 @@
 """Serving driver.
 
   --arch colbert : end-to-end late-interaction retrieval service
-                   (encode corpus -> Voronoi-prune index -> batched queries)
+                   (encode corpus -> Voronoi-prune -> pack -> batched
+                   queries).  With --index-dir the packed artifact is
+                   persisted there on first run (prune -> pack -> save ->
+                   load -> serve) and loaded directly on later runs —
+                   the offline-prune / online-serve split.
   --arch <lm>    : KV-cache decode loop on the smoke config
 """
 
@@ -20,13 +24,16 @@ from repro.core.sampling import sample_sphere
 from repro.data import synthetic
 from repro.models import colbert as colbert_lib
 from repro.models import transformer as tfm
+from repro.serve import index_io
 from repro.serve.retrieval import RetrievalServer, TokenIndex
 from repro.train import checkpoint
 
 
 def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
                     ckpt_dir: str | None = None, seed: int = 0,
-                    backend: str | None = None):
+                    backend: str | None = None,
+                    index_dir: str | None = None,
+                    compress: str = "none"):
     cfg = configs.get("colbert").smoke
     params = colbert_lib.init_params(jax.random.PRNGKey(seed), cfg)
     if ckpt_dir:
@@ -37,19 +44,47 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
     corpus = synthetic.token_corpus(seed, n_docs=256, n_q=n_queries,
                                     vocab=cfg.vocab, m=cfg.doc_len,
                                     l=cfg.query_len)
-    d_emb, d_mask = colbert_lib.encode_docs(params, cfg, corpus.doc_ids)
-    index = TokenIndex.build(d_emb, d_mask)
-    samples = sample_sphere(jax.random.PRNGKey(1), 2048, cfg.out_dim)
-    # Length-bucketed corpus pruning: short documents run in narrow
-    # shape buckets instead of paying full-doc_len padding per step.
-    keep, ranks, errs = pruning_pipeline.prune_corpus(
-        d_emb, d_mask, samples, keep_fraction, backend=backend)
-    pruned = index.with_keep(keep)
-    print(f"[serve] index: {index.storage()}")
-    print(f"[serve] pruned: {pruned.storage()}")
+    if index_dir and index_io.has_index(index_dir):
+        # Online half of the lifecycle: the pruning job already ran and
+        # the artifact is authoritative — this run's pruning/packing
+        # flags do not apply to it.  Warn when they visibly disagree so
+        # a ratio sweep pointed at a stale directory cannot silently
+        # report results from the wrong index.
+        packed = index_io.load_index(index_dir)
+        st = packed.storage()
+        print(f"[serve] loaded packed index from {index_dir}: {st}")
+        if compress != packed.compression:
+            print(f"[serve] WARNING: --compress {compress} ignored; the "
+                  f"loaded artifact is {packed.compression!r} (delete "
+                  f"{index_dir} to re-pack)")
+        if abs(st["remain_pct"] - 100.0 * keep_fraction) > 1.0:
+            print(f"[serve] WARNING: --keep {keep_fraction} ignored; the "
+                  f"loaded artifact retains {st['remain_pct']:.1f}% of "
+                  f"tokens (delete {index_dir} to re-prune)")
+        if ckpt_dir:
+            print(f"[serve] WARNING: --ckpt-dir ignored; the loaded "
+                  f"artifact was encoded by the job that built it")
+    else:
+        d_emb, d_mask = colbert_lib.encode_docs(params, cfg, corpus.doc_ids)
+        index = TokenIndex.build(d_emb, d_mask)
+        samples = sample_sphere(jax.random.PRNGKey(1), 2048, cfg.out_dim)
+        # Length-bucketed corpus pruning: short documents run in narrow
+        # shape buckets instead of paying full-doc_len padding per step.
+        keep, ranks, errs = pruning_pipeline.prune_corpus(
+            d_emb, d_mask, samples, keep_fraction, backend=backend)
+        pruned = index.with_keep(keep)
+        print(f"[serve] masked (reported): {pruned.storage()}")
+        packed = pruned.pack(compression=compress)
+        print(f"[serve] packed (measured): {packed.storage()}")
+        if index_dir:
+            index_io.save_index(index_dir, packed)
+            # Serve what is on disk, not what is in memory: the reload
+            # exercises the exact artifact a later job would start from.
+            packed = index_io.load_index(index_dir)
+            print(f"[serve] saved + reloaded packed index at {index_dir}")
     # shortlist is a pruning-only path; serving falls back to the default.
     serve_backend = backend if backend in backend_lib.SERVING else None
-    server = RetrievalServer(pruned, k=10, backend=serve_backend)
+    server = RetrievalServer(packed, k=10, backend=serve_backend)
     print(f"[serve] scoring backend: {server.backend}")
     q_emb, _ = colbert_lib.encode_queries(params, cfg, corpus.q_ids)
     t0 = time.time()
@@ -89,10 +124,17 @@ def main():
                     help="pruning/scoring path (default: shortlist_topk "
                          "pruning + fused serving on TPU, reference "
                          "elsewhere; see repro.core.backend)")
+    ap.add_argument("--index-dir", default=None,
+                    help="packed-index artifact directory: load and serve "
+                         "if one exists there, else prune -> pack -> save "
+                         "it first (repro.serve.index_io)")
+    ap.add_argument("--compress", default="none", choices=["none", "int8"],
+                    help="token compression when packing a new index")
     args = ap.parse_args()
     if args.arch == "colbert":
         serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir,
-                        backend=args.backend)
+                        backend=args.backend, index_dir=args.index_dir,
+                        compress=args.compress)
     else:
         serve_lm(args.arch, n_tokens=args.tokens)
 

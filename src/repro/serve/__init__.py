@@ -1,3 +1,3 @@
-from repro.serve import retrieval
+from repro.serve import index, index_io, retrieval
 
-__all__ = ["retrieval"]
+__all__ = ["index", "index_io", "retrieval"]

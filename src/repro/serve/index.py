@@ -1,0 +1,247 @@
+"""Packed serving index: pruning that actually shrinks the index.
+
+`TokenIndex` (repro.serve.retrieval) keeps the full dense
+(n_docs, m, dim) tensor plus a keep-mask — the right view for sweeping
+pruning ratios, but its ``storage()`` savings are *reported*, never
+realized: HBM and disk still hold every pruned token.  `PackedIndex` is
+the serving artifact that realizes them:
+
+* **Capacity-bucketed ragged storage** — kept tokens are compacted to
+  the front of each row and documents are grouped by kept-token count
+  into power-of-two capacity buckets (the same pow2
+  ``pruning_pipeline.bucket_plan`` the pruning pipeline uses, so the
+  number of distinct compiled shapes stays O(log m)).  Each bucket is a
+  dense ``(n_docs_b, cap_b, dim)`` array that the fused
+  ``colbert_maxsim`` kernels consume directly — no new kernel shapes,
+  just narrower ones.  A per-bucket ``doc_ids`` remap scatters bucket
+  scores back to corpus-global positions for the global top-k.
+* **Optional int8 compression** — per-block symmetric int8 with scales
+  (``train/compress.quantize_int8``, the gradient-compression codec);
+  ~4x fewer bytes again on top of pruning, dequantized on the fly
+  inside the jitted scoring path.
+* **A sharding spec** — ``shard_axes`` names the logical axes of every
+  bucket (docs are the "candidates" axis), resolved to mesh axes by the
+  active ``sharding/specs`` rule set, so buckets place over the
+  candidate-parallel axis of the production mesh like the dense index
+  did.
+
+``storage()["bytes_stored"]`` is the sum of *actual* array bytes — the
+number the paper's "index size" claims are about (~keep_fraction x the
+dense fp32 bytes; ~4x smaller again under int8), asserted in
+tests/test_packed_index.py.
+
+Exactness: compaction preserves the original token order within a doc
+and drops only masked-out columns; MaxSim's per-query-token max over
+document tokens is subset/order-invariant, so packed scores are
+bit-identical to masked scores on the fp path (and the global top-k ids
+identical) — the parity suite pins this per backend.
+
+Persistence lives in ``repro.serve.index_io`` (versioned manifest +
+the train/checkpoint atomic/async writer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning_pipeline import bucket_plan
+from repro.sharding import spec_for
+from repro.train import compress
+
+__all__ = ["COMPRESSIONS", "PackedBucket", "PackedIndex"]
+
+COMPRESSIONS = ("none", "int8")
+
+
+@dataclasses.dataclass
+class PackedBucket:
+    """One capacity bucket of the packed index.
+
+    ``masks`` is prefix-dense by construction (kept tokens compacted to
+    the front); a document that lost every token to pruning has an
+    all-false row.  Exactly one of ``embs`` (fp) or ``q8``/``scales``
+    (int8 blocks + per-block scales) is populated, per the owning
+    index's ``compression``.
+    """
+
+    cap: int
+    doc_ids: jnp.ndarray              # (n_docs_b,) int32, global doc ids
+    masks: jnp.ndarray                # (n_docs_b, cap) bool
+    embs: jnp.ndarray | None = None   # (n_docs_b, cap, dim) float
+    q8: jnp.ndarray | None = None     # (n_blocks, 256) int8
+    scales: jnp.ndarray | None = None  # (n_blocks,) float32
+
+    @property
+    def n_docs(self) -> int:
+        return self.masks.shape[0]
+
+    def dense_embs(self, dim: int) -> jnp.ndarray:
+        """The (n_docs_b, cap, dim) fp32 bucket the kernels score.
+        int8 buckets dequantize here — inside jit this fuses into the
+        scoring computation; nothing fp32-sized persists in HBM."""
+        if self.embs is not None:
+            return self.embs
+        n = self.n_docs * self.cap * dim
+        return compress.dequantize_int8(self.q8, self.scales,
+                                        (self.n_docs, self.cap, dim), n)
+
+    def nbytes(self) -> int:
+        arrs = (self.doc_ids, self.masks, self.embs, self.q8, self.scales)
+        return sum(int(a.nbytes) for a in arrs if a is not None)
+
+    def __repr__(self):  # keep test failure output readable
+        return (f"PackedBucket(cap={self.cap}, n_docs={self.n_docs}, "
+                f"compressed={self.embs is None})")
+
+
+@dataclasses.dataclass
+class PackedIndex:
+    """Compacted token index: the artifact pruning produces and serving
+    loads.  Build with :meth:`pack` (or ``TokenIndex.pack()``), persist
+    with ``repro.serve.index_io``, serve through
+    ``repro.serve.retrieval`` (``maxsim_scores``/``search``/
+    ``RetrievalServer`` accept a `PackedIndex` wherever they accept a
+    `TokenIndex`).
+    """
+
+    n_docs: int
+    m: int                      # original padded doc length (provenance)
+    dim: int
+    tokens_total: int           # alive tokens before pruning
+    compression: str
+    buckets: list[PackedBucket]
+    # Logical axes of each bucket's (docs, tokens, dim) arrays; the
+    # active sharding/specs rule set resolves "candidates" to the mesh's
+    # candidate-parallel axis (``model`` in the canonical rules).
+    shard_axes: tuple = ("candidates", None, None)
+    _pooled: jnp.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _padded: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @classmethod
+    def pack(cls, d_embs, d_masks, keep=None, *, compression: str = "none",
+             granularity: int | str = "pow2",
+             min_width: int = 8) -> "PackedIndex":
+        """Compact ``keep & d_masks`` tokens into capacity buckets.
+
+        Host-side by design (like ``bucket_plan``): the layout is
+        data-dependent.  ``keep=None`` packs the unpruned index.
+        ``granularity`` is the bucket rounding of
+        ``pruning_pipeline.bucket_plan`` ("pow2" or an int multiple);
+        finer granularity trades more compiled shapes for less padding.
+        """
+        if compression not in COMPRESSIONS:
+            raise ValueError(f"compression={compression!r}; "
+                             f"one of {COMPRESSIONS}")
+        embs = np.asarray(d_embs)
+        masks = np.asarray(d_masks, bool)
+        active = masks if keep is None else np.asarray(keep, bool) & masks
+        n_docs, m = active.shape
+        dim = embs.shape[-1]
+        buckets = []
+        if n_docs:
+            plan = bucket_plan(active.sum(1), m, granularity=granularity,
+                               min_width=min_width)
+            for b in plan:
+                act = active[b.indices]
+                # stable argsort on ~mask: kept positions first, original
+                # token order preserved (MaxSim doesn't care, pooled sums do).
+                sel = np.argsort(~act, axis=1, kind="stable")[:, :b.width]
+                e = np.take_along_axis(embs[b.indices], sel[:, :, None],
+                                       axis=1)
+                mk = np.take_along_axis(act, sel, axis=1)
+                e[~mk] = 0  # deterministic bytes in the padded tail
+                bucket = PackedBucket(cap=b.width,
+                                      doc_ids=jnp.asarray(b.indices,
+                                                          jnp.int32),
+                                      masks=jnp.asarray(mk))
+                if compression == "int8":
+                    bucket.q8, bucket.scales = compress.quantize_int8(
+                        jnp.asarray(e, jnp.float32))
+                else:
+                    bucket.embs = jnp.asarray(e)
+                buckets.append(bucket)
+        return cls(n_docs=n_docs, m=m, dim=dim,
+                   tokens_total=int(masks.sum()), compression=compression,
+                   buckets=buckets)
+
+    # -- introspection ---------------------------------------------------
+
+    @property
+    def tokens_kept(self) -> int:
+        return int(sum(int(b.masks.sum()) for b in self.buckets))
+
+    @property
+    def cap_max(self) -> int:
+        return max((b.cap for b in self.buckets), default=0)
+
+    def spec(self):
+        """PartitionSpec for one bucket under the active rule set."""
+        return spec_for(*self.shard_axes)
+
+    def storage(self) -> dict:
+        """Measured footprint.  Unlike ``TokenIndex.storage()`` (which
+        *reports* what a compacted index would cost), ``bytes_stored``
+        here sums the bytes of the arrays this process actually holds."""
+        kept = self.tokens_kept
+        slots = sum(b.n_docs * b.cap for b in self.buckets)
+        return {
+            "tokens_total": self.tokens_total,
+            "tokens_kept": kept,
+            "remain_pct": 100.0 * kept / max(self.tokens_total, 1),
+            "bytes_stored": sum(b.nbytes() for b in self.buckets),
+            "bytes_fp32": kept * self.dim * 4,
+            "bytes_fp32_unpruned": self.tokens_total * self.dim * 4,
+            "bytes_dense_fp32": self.n_docs * self.m * self.dim * 4,
+            "compression": self.compression,
+            "n_buckets": len(self.buckets),
+            "cap_max": self.cap_max,
+            # pow2 rounding + empty-doc floors: stored slots per kept token
+            "padding_overhead": slots / max(kept, 1),
+        }
+
+    # -- serving views ---------------------------------------------------
+
+    def pooled(self) -> jnp.ndarray:
+        """(n_docs, dim) mean-pooled doc vectors for the cheap first
+        stage, scattered to global doc order.  Cached when built outside
+        a trace (the server's first stage then reuses one buffer across
+        query batches); inside a jit trace the result is a tracer and
+        must NOT be cached — it would leak into later traces.  The
+        server warms these views eagerly before jitting."""
+        if self._pooled is not None:
+            return self._pooled
+        out = jnp.zeros((self.n_docs, self.dim), jnp.float32)
+        for b in self.buckets:
+            e = b.dense_embs(self.dim)
+            w = b.masks[..., None].astype(e.dtype)
+            p = (e * w).sum(1) / jnp.maximum(w.sum(1), 1.0)
+            out = out.at[b.doc_ids].set(p)
+        if not isinstance(out, jax.core.Tracer):
+            self._pooled = out
+        return out
+
+    def padded(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Gatherable view ((n_docs, cap_max, dim) embs, (n_docs,
+        cap_max) masks) for the two-stage rerank, whose per-query
+        candidate gather needs one uniform token axis.  cap_max-wide —
+        still the *compacted* width, not the original m.  Lazily built
+        and cached (same tracer rule as :meth:`pooled`); counted
+        separately from ``bytes_stored`` (it is serving scratch, only
+        materialized by two-stage search, and a deployment that only
+        runs e2e scoring never pays it)."""
+        if self._padded is not None:
+            return self._padded
+        e = jnp.zeros((self.n_docs, self.cap_max, self.dim), jnp.float32)
+        mk = jnp.zeros((self.n_docs, self.cap_max), bool)
+        for b in self.buckets:
+            e = e.at[b.doc_ids, :b.cap].set(b.dense_embs(self.dim))
+            mk = mk.at[b.doc_ids, :b.cap].set(b.masks)
+        if not isinstance(e, jax.core.Tracer):
+            self._padded = (e, mk)
+        return e, mk

@@ -1,0 +1,115 @@
+"""Packed-index persistence: versioned manifest + checkpoint-layer body.
+
+The on-disk artifact a pruning job hands to serving:
+
+    <dir>/packed_index.json            versioned manifest (layout metadata)
+    <dir>/step_000000000/{...}         bucket arrays via repro.train.checkpoint
+
+The body rides the existing ``train/checkpoint`` writer, inheriting its
+guarantees for free: atomic rename commit, per-leaf crc32 verification
+on load, optional zstd, and the async save path (device->host copy now,
+disk write on a daemon thread — ``save_index(..., async_save=True)``;
+``repro.train.checkpoint.wait_pending()`` joins it).  The manifest is
+our own layer: it records the *layout* (bucket capacities and sizes,
+compression, dims) that the checkpoint's flat leaf list cannot express,
+and is what makes restore self-describing — ``load_index`` rebuilds the
+leaf pytree structure from it before asking the checkpoint layer to
+fill it.  Manifest writes are tmp+fsync+rename atomic like the body.
+
+``FORMAT`` is bumped on any layout change; ``load_index`` refuses
+newer-format manifests loudly instead of misreading them.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+
+from repro.serve.index import COMPRESSIONS, PackedBucket, PackedIndex
+from repro.train import checkpoint
+
+__all__ = ["FORMAT", "MANIFEST", "has_index", "load_index", "save_index"]
+
+FORMAT = 1
+MANIFEST = "packed_index.json"
+
+
+def _body_tree(index: PackedIndex) -> dict:
+    """The pytree the checkpoint layer serializes.  Key sets differ by
+    compression; the manifest records which, so load rebuilds the same
+    structure."""
+    buckets = []
+    for b in index.buckets:
+        leaf = {"doc_ids": b.doc_ids, "masks": b.masks}
+        if index.compression == "int8":
+            leaf |= {"q8": b.q8, "scales": b.scales}
+        else:
+            leaf |= {"embs": b.embs}
+        buckets.append(leaf)
+    return {"buckets": buckets}
+
+
+def save_index(path: str, index: PackedIndex, *,
+               async_save: bool = False) -> str:
+    """Persist ``index`` under ``path``.  Returns the manifest path.
+    ``async_save`` stages to host now and writes on a daemon thread
+    (join with ``checkpoint.wait_pending()`` before handing the
+    directory to another job)."""
+    os.makedirs(path, exist_ok=True)
+    manifest = {
+        "format": FORMAT,
+        "kind": "packed_index",
+        "n_docs": index.n_docs,
+        "m": index.m,
+        "dim": index.dim,
+        "tokens_total": index.tokens_total,
+        "compression": index.compression,
+        "buckets": [{"cap": b.cap, "n_docs": b.n_docs}
+                    for b in index.buckets],
+    }
+    final = os.path.join(path, MANIFEST)
+    checkpoint.atomic_json_dump(final, manifest)
+    saver = checkpoint.save_async if async_save else checkpoint.save
+    saver(path, 0, _body_tree(index), keep=1)
+    return final
+
+
+def has_index(path: str) -> bool:
+    """True when ``path`` holds a loadable artifact (manifest + at least
+    one committed checkpoint step)."""
+    return (os.path.exists(os.path.join(path, MANIFEST))
+            and bool(checkpoint.list_steps(path)))
+
+
+def load_index(path: str) -> PackedIndex:
+    """Restore a :class:`PackedIndex` saved by :func:`save_index`.
+
+    The checkpoint layer verifies per-leaf crc32s and walks past corrupt
+    steps; a directory with no restorable body raises ``IOError``.
+    """
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") != "packed_index":
+        raise IOError(f"{path}: manifest is not a packed index")
+    if manifest.get("format", 0) > FORMAT:
+        raise IOError(f"{path}: manifest format {manifest['format']} is "
+                      f"newer than this reader (format {FORMAT})")
+    compression = manifest["compression"]
+    if compression not in COMPRESSIONS:
+        raise IOError(f"{path}: unknown compression {compression!r}")
+    keys = (("doc_ids", "masks", "q8", "scales") if compression == "int8"
+            else ("doc_ids", "masks", "embs"))
+    like = {"buckets": [{k: 0 for k in keys} for _ in manifest["buckets"]]}
+    _, tree = checkpoint.restore_latest(path, like)
+    if tree is None:
+        raise IOError(f"{path}: no restorable packed-index body")
+    buckets = []
+    for meta, leaf in zip(manifest["buckets"], tree["buckets"]):
+        arrs = {k: jnp.asarray(v) for k, v in leaf.items()}
+        buckets.append(PackedBucket(cap=int(meta["cap"]), **arrs))
+    return PackedIndex(n_docs=int(manifest["n_docs"]),
+                       m=int(manifest["m"]), dim=int(manifest["dim"]),
+                       tokens_total=int(manifest["tokens_total"]),
+                       compression=compression, buckets=buckets)

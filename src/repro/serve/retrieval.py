@@ -7,11 +7,23 @@ The serving pipeline mirrors the paper's experimental setup:
     token-level index — the paper's ColBERTv2-rerank configuration.
     `end_to_end=True` skips stage 1 (ColBERTv2-e2e analogue).
 
-The index stores a keep-mask per document rather than compacting rows so
-pruning ratios can be swept cheaply; `storage()` reports both logical and
-compacted sizes (the number the paper's "Remain %" column tracks).
-Candidate scoring shards over the `model` axis ("candidates" logical
-axis) in the production mesh.
+Two index layouts feed this module (DESIGN_BACKENDS.md §Index layouts):
+
+* ``TokenIndex`` — the dense **masked** view: full (n_docs, m, dim)
+  tensor + keep-mask.  Pruning ratios sweep cheaply (flip the mask), and
+  ``storage()`` *reports* what compaction would save, but the process
+  keeps paying for every pruned token.  The experimentation view.
+* ``repro.serve.index.PackedIndex`` — the **packed** serving artifact:
+  kept tokens compacted into capacity-bucketed dense arrays the kernels
+  score directly, with a doc-id remap back to corpus-global positions.
+  ``storage()`` there measures bytes actually held.  Build one with
+  ``TokenIndex.pack()``; persist via ``repro.serve.index_io``.
+
+``maxsim_scores``/``search``/``RetrievalServer`` accept either layout on
+both backends, with identical top-k results (asserted in
+tests/test_packed_index.py).  Candidate scoring shards over the `model`
+axis ("candidates" logical axis) in the production mesh — packed buckets
+carry the same logical axes (``PackedIndex.shard_axes``).
 
 Backend dispatch (``repro.core.backend``): the ``reference`` path scores
 via a single einsum that materializes the 4-D (n_q, n_docs, l, m) score
@@ -21,11 +33,16 @@ static ``block_docs``-sized blocks through the ``colbert_maxsim`` Pallas
 kernels: the biggest live intermediate is one (block_docs, m, n_q, l)
 VMEM tile, multi-query rerank is batched through one kernel launch, and
 the compiled HLO contains no 4-D score tensor (asserted in
-tests/test_backend_dispatch.py).
+tests/test_backend_dispatch.py).  On the packed layout both backends
+score per bucket — the packed reference path's biggest tensor is
+(n_q, n_docs_b, l, cap_b), already keep_fraction-smaller than the dense
+one, and the fused path's tiles shrink the same way (the autotuner keys
+on each bucket's shape).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 
@@ -36,6 +53,7 @@ from repro.core import backend as backend_lib
 from repro.core.scoring import NEG_INF
 from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_multi_op,
                                               colbert_maxsim_rerank_op)
+from repro.serve.index import PackedIndex
 from repro.sharding import constrain
 
 
@@ -52,7 +70,16 @@ class TokenIndex:
     def with_keep(self, keep):
         return TokenIndex(self.d_embs, self.d_masks, keep & self.d_masks)
 
+    def pack(self, **kw) -> PackedIndex:
+        """Compact the kept tokens into the packed serving artifact
+        (``repro.serve.index.PackedIndex``) — the step that turns the
+        reported savings below into actually-freed bytes.  Keyword args
+        are ``PackedIndex.pack``'s (compression, granularity, ...)."""
+        return PackedIndex.pack(self.d_embs, self.d_masks, self.keep, **kw)
+
     def storage(self) -> dict:
+        """*Reported* (logical) sizes — this dense view keeps holding
+        every pruned token; ``pack().storage()`` measures real bytes."""
         total = int(self.d_masks.sum())
         kept = int((self.keep & self.d_masks).sum())
         dim = self.d_embs.shape[-1]
@@ -100,53 +127,78 @@ def _maxsim_scores_fused(d_embs, active_mask, q_embs, q_masks, *,
     return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
 
-def _resolve_serving_blocks(index, q_embs, block_docs, block_q):
-    """Fill ``None`` chunking knobs from the shape-aware autotuner
-    (``repro.core.tuning`` via the backend seam); explicit values win."""
-    if block_docs is None or block_q is None:
-        n_docs, m = index.d_masks.shape
-        cfg = backend_lib.tuned("serving", n_q=q_embs.shape[0],
-                                n_docs=n_docs, m=m, l=q_embs.shape[1],
-                                dim=q_embs.shape[-1])
-        block_docs = cfg.block_docs if block_docs is None else block_docs
-        block_q = cfg.block_q if block_q is None else block_q
-    return block_docs, block_q
+def _score_block(d_embs, active_mask, q_embs, q_masks, *, backend,
+                 block_docs, block_q):
+    """Score one dense doc array on the resolved backend; ``None``
+    chunking knobs resolve per THIS array's shape (the autotuner keys on
+    bucket shape, so packed buckets each get their own blocks)."""
+    if backend == backend_lib.FUSED:
+        n_docs, m = active_mask.shape
+        block_docs, block_q = backend_lib.tuned_serving_blocks(
+            q_embs.shape[0], n_docs, m, q_embs.shape[1], q_embs.shape[-1],
+            block_docs, block_q)
+        return _maxsim_scores_fused(d_embs, active_mask, q_embs, q_masks,
+                                    block_docs=block_docs, block_q=block_q)
+    return _maxsim_scores_reference(d_embs, active_mask, q_embs, q_masks)
 
 
-def maxsim_scores(index: TokenIndex, q_embs: jnp.ndarray,
+def _maxsim_scores_packed(index: PackedIndex, q_embs, q_masks, *, backend,
+                          block_docs, block_q):
+    """Per-bucket sweep over the packed layout: each capacity bucket is
+    a dense (n_docs_b, cap_b, dim) array scored exactly like a small
+    corpus, then scattered to global doc positions via the bucket's
+    doc-id remap.  Bit-identical to the masked path on the fp layout
+    (max over kept tokens is subset-invariant)."""
+    out = jnp.zeros((q_embs.shape[0], index.n_docs), jnp.float32)
+    for b in index.buckets:
+        e = constrain(b.dense_embs(index.dim), *index.shard_axes)
+        s = _score_block(e, b.masks, q_embs, q_masks, backend=backend,
+                         block_docs=block_docs, block_q=block_q)
+        out = out.at[:, b.doc_ids].set(s)
+    return out
+
+
+def maxsim_scores(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray,
                   q_masks: jnp.ndarray | None = None, *,
                   backend: str | None = None, block_docs: int | None = None,
                   block_q: int | None = None) -> jnp.ndarray:
     """(n_q, n_docs) exact MaxSim over the pruned index.
 
-    Both backends are exact; they differ only in what they materialize
-    (see module docstring).  ``backend=None`` resolves to fused on TPU,
-    reference elsewhere.  ``block_docs``/``block_q`` default to ``None``
-    — picked by the shape-aware autotuner; pass ints to pin them.
+    Both backends and both index layouts are exact; they differ only in
+    what they materialize (see module docstring).  ``backend=None``
+    resolves to fused on TPU, reference elsewhere.  ``block_docs``/
+    ``block_q`` default to ``None`` — picked by the shape-aware
+    autotuner (per bucket shape on the packed layout); ints pin them.
     """
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
-    if backend == backend_lib.FUSED:
-        block_docs, block_q = _resolve_serving_blocks(index, q_embs,
-                                                      block_docs, block_q)
-        return _maxsim_scores_fused(index.d_embs, index.active_mask,
-                                    q_embs, q_masks, block_docs=block_docs,
-                                    block_q=block_q)
-    return _maxsim_scores_reference(index.d_embs, index.active_mask,
-                                    q_embs, q_masks)
+    if isinstance(index, PackedIndex):
+        return _maxsim_scores_packed(index, q_embs, q_masks, backend=backend,
+                                     block_docs=block_docs, block_q=block_q)
+    return _score_block(index.d_embs, index.active_mask, q_embs, q_masks,
+                        backend=backend, block_docs=block_docs,
+                        block_q=block_q)
 
 
-def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
-           n_first: int = 64, end_to_end: bool = False,
+def _gather_view(index: TokenIndex | PackedIndex):
+    """(embs, masks) with one uniform token axis for the per-query
+    candidate gather of the two-stage rerank.  Dense layout: the arrays
+    themselves.  Packed layout: the cap_max-wide padded scratch view —
+    still compacted relative to m, built lazily and cached."""
+    if isinstance(index, PackedIndex):
+        return index.padded()
+    return index.d_embs, index.active_mask
+
+
+def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
+           k: int = 10, n_first: int = 64, end_to_end: bool = False,
            q_masks: jnp.ndarray | None = None,
            backend: str | None = None, block_docs: int | None = None,
            block_q: int | None = None):
     """Two-stage (or e2e) retrieval. Returns (top_idx, top_scores, full).
     ``block_docs``/``block_q`` default to autotuned (see maxsim_scores)."""
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
-    if backend == backend_lib.FUSED:
-        block_docs, block_q = _resolve_serving_blocks(index, q_embs,
-                                                      block_docs, block_q)
-    n_docs = index.d_embs.shape[0]
+    n_docs = (index.n_docs if isinstance(index, PackedIndex)
+              else index.d_embs.shape[0])
     if end_to_end or n_first >= n_docs:
         scores = maxsim_scores(index, q_embs, q_masks, backend=backend,
                                block_docs=block_docs, block_q=block_q)
@@ -161,12 +213,17 @@ def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
     _, cand = jax.lax.top_k(first, n_first)          # (n_q, n_first)
 
     # Gather candidate docs and rerank with exact MaxSim.  The gather is
-    # the index lookup; only the *scoring* differs per backend.
-    d_sub = index.d_embs[cand]                       # (n_q, n_first, m, dim)
-    m_sub = index.active_mask[cand]
+    # the index lookup (cap_max-wide on the packed layout); only the
+    # *scoring* differs per backend.
+    g_embs, g_masks = _gather_view(index)
+    d_sub = g_embs[cand]                             # (n_q, n_first, m, dim)
+    m_sub = g_masks[cand]
     if backend == backend_lib.FUSED:
         # Batched multi-query rerank: every query's candidate block goes
         # through one fused kernel launch; no (n_q, n_first, l, m) tensor.
+        block_docs, _ = backend_lib.tuned_serving_blocks(
+            q_embs.shape[0], n_docs, g_masks.shape[1], q_embs.shape[1],
+            q_embs.shape[-1], block_docs, block_q)
         rerank = colbert_maxsim_rerank_op(q_embs, d_sub, m_sub, q_masks,
                                           block_d=block_docs)
     else:
@@ -178,8 +235,9 @@ def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
         rerank = best.sum(-1)                        # (n_q, n_first)
     top_scores, local = jax.lax.top_k(rerank, min(k, n_first))
     top_idx = jnp.take_along_axis(cand, local, axis=1)
-    # densify to full score matrix for metric computation
-    full = jnp.full((q_embs.shape[0], n_docs), -1e9, rerank.dtype)
+    # densify to full score matrix for metric computation; non-candidates
+    # get the same NEG_INF sentinel masked scoring uses.
+    full = jnp.full((q_embs.shape[0], n_docs), NEG_INF, rerank.dtype)
     full = jax.vmap(lambda f, c, r: f.at[c].set(r))(full, cand, rerank)
     return top_idx, top_scores, full
 
@@ -187,17 +245,27 @@ def search(index: TokenIndex, q_embs: jnp.ndarray, *, k: int = 10,
 class RetrievalServer:
     """Batched request serving over a pruned index (examples/serve).
 
-    ``backend`` is resolved once at construction.  ``block_docs``/
-    ``block_q`` default to ``None`` — autotuned per incoming query-batch
-    shape (resolution happens eagerly in :meth:`query_batch`, OUTSIDE
-    the jitted closure; one closure is built and cached per (n_q, l)
-    shape, so steady-state traffic with a fixed batch shape pays
-    resolution exactly once).
+    ``index`` is either layout: the dense masked ``TokenIndex`` or the
+    compacted ``PackedIndex`` artifact (typically loaded via
+    ``repro.serve.index_io``).  ``backend`` is resolved once at
+    construction.  ``block_docs``/``block_q`` default to ``None`` —
+    autotuned per doc-array shape (per bucket on the packed layout);
+    :meth:`_closure_for` warms the tuner cache eagerly, OUTSIDE the
+    jitted closure, so steady-state traffic with a fixed batch shape
+    pays resolution exactly once.
+
+    One closure is built per (n_q, l) query-batch shape and kept in a
+    small LRU (``max_cached_closures``, default 32): under varied
+    traffic shapes the cache stays bounded — evicting a shape only costs
+    a re-jit on its next appearance, while the unbounded dict the server
+    used to keep grew a compiled executable (plus its baked-in index
+    constants) per distinct shape for the life of the process.
     """
 
-    def __init__(self, index: TokenIndex, *, k: int = 10, n_first: int = 64,
-                 backend: str | None = None, block_docs: int | None = None,
-                 block_q: int | None = None):
+    def __init__(self, index: TokenIndex | PackedIndex, *, k: int = 10,
+                 n_first: int = 64, backend: str | None = None,
+                 block_docs: int | None = None, block_q: int | None = None,
+                 max_cached_closures: int = 32):
         self.index = index
         self.k = k
         self.n_first = n_first
@@ -205,23 +273,60 @@ class RetrievalServer:
                                                    allow=backend_lib.SERVING)
         self._block_docs = block_docs
         self._block_q = block_q
-        self._search = {}                       # (n_q, l) -> jitted closure
+        self._max_cached = max(1, int(max_cached_closures))
+        self._search = collections.OrderedDict()  # (n_q, l) -> jitted closure
 
     @staticmethod
     def _run(index, q, **kw):
         return search(index, q, **kw)[:2]
 
+    def _warm_index(self):
+        """Materialize the packed index's derived serving views (pooled
+        first-stage vectors, the cap_max-wide gather view) eagerly,
+        outside jit — built inside a trace they would be uncacheable
+        tracers, recomputed per closure."""
+        if not isinstance(self.index, PackedIndex):
+            return
+        if self.n_first < self.index.n_docs:      # two-stage path
+            self.index.pooled()
+            self.index.padded()
+
+    def _warm_tuner(self, q_embs):
+        """Resolve every tuned block this query shape will need, outside
+        jit (measured mode must never race inside a trace); the in-jit
+        resolutions then hit the tuning cache."""
+        if self.backend != backend_lib.FUSED:
+            return
+        if self._block_docs is not None and self._block_q is not None:
+            return
+        n_q, l = q_embs.shape[:2]
+        dim = q_embs.shape[-1]
+        if isinstance(self.index, PackedIndex):
+            for b in self.index.buckets:
+                backend_lib.tuned_serving_blocks(
+                    n_q, b.n_docs, b.cap, l, dim,
+                    self._block_docs, self._block_q)
+            n_docs, m = self.index.n_docs, max(self.index.cap_max, 1)
+        else:
+            n_docs, m = self.index.d_masks.shape
+        backend_lib.tuned_serving_blocks(n_q, n_docs, m, l, dim,
+                                         self._block_docs, self._block_q)
+
     def _closure_for(self, q_embs):
         key = q_embs.shape[:2]
         fn = self._search.get(key)
         if fn is None:
-            bd, bq = self._block_docs, self._block_q
-            if self.backend == backend_lib.FUSED:
-                bd, bq = _resolve_serving_blocks(self.index, q_embs, bd, bq)
+            self._warm_index()
+            self._warm_tuner(q_embs)
             fn = jax.jit(functools.partial(
                 self._run, self.index, k=self.k, n_first=self.n_first,
-                backend=self.backend, block_docs=bd, block_q=bq))
+                backend=self.backend, block_docs=self._block_docs,
+                block_q=self._block_q))
             self._search[key] = fn
+            if len(self._search) > self._max_cached:
+                self._search.popitem(last=False)     # evict LRU shape
+        else:
+            self._search.move_to_end(key)
         return fn
 
     def query_batch(self, q_embs: jnp.ndarray):

@@ -62,6 +62,22 @@ def _resolve_compression(compression: str | None) -> str:
     return compression
 
 
+def atomic_json_dump(path: str, obj) -> None:
+    """Write ``obj`` as JSON at ``path`` atomically: stage to a
+    pid-unique tmp file, fsync, rename over the target (POSIX-atomic).
+    Readers see the old file or the new one, never a torn write.
+    Shared by the packed-index manifest (serve/index_io) and the
+    autotuner cache dump (core/tuning)."""
+    tmp = f"{path}.tmp.{os.getpid()}.{next(_tmp_counter)}"
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def _tree_paths(tree):
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in leaves_with_paths]

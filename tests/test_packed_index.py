@@ -1,0 +1,289 @@
+"""Packed index lifecycle: compaction, parity, compression, persistence.
+
+Covers the contract the packed layout promises (repro.serve.index):
+  * packing is a pure re-layout — per-backend scores and global top-k
+    over the packed index are IDENTICAL to the masked index, including
+    documents pruned down to zero tokens;
+  * ``storage()["bytes_stored"]`` measures real array bytes
+    (~keep_fraction x the dense fp32 index; ~4x smaller again int8);
+  * the int8 codec roundtrips within its per-block quantization step;
+  * save -> load (repro.serve.index_io) -> serve reproduces the
+    in-memory artifact bit for bit;
+  * RetrievalServer accepts both layouts and bounds its jitted-closure
+    cache (LRU).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scoring import NEG_INF
+from repro.serve import index_io
+from repro.serve.index import PackedIndex
+from repro.serve.retrieval import (RetrievalServer, TokenIndex,
+                                   maxsim_scores, search)
+from repro.sharding import axis_rules
+from repro.train import checkpoint
+
+
+def _pruned_corpus(seed, n_docs, m, dim, keep_p=0.5, empty_docs=()):
+    """Ragged masked corpus + bernoulli keep, with selected docs pruned
+    to zero tokens (the empty-after-prune edge)."""
+    k = jax.random.PRNGKey(seed)
+    d = jax.random.normal(k, (n_docs, m, dim)) * 0.5
+    n_real = jax.random.randint(jax.random.fold_in(k, 1), (n_docs,),
+                                1, m + 1)
+    masks = jnp.arange(m)[None, :] < n_real[:, None]
+    keep = jax.random.bernoulli(jax.random.fold_in(k, 2), keep_p,
+                                (n_docs, m))
+    for i in empty_docs:
+        keep = keep.at[i].set(False)
+    return TokenIndex.build(d, masks).with_keep(keep)
+
+
+def _queries(seed, n_q, l, dim):
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (n_q, l, dim))
+    qm = jax.random.randint(jax.random.fold_in(k, 1), (n_q,), 1, l + 1)
+    return q, jnp.arange(l)[None, :] < qm[:, None]
+
+
+class TestPacking:
+    def test_layout_invariants(self):
+        masked = _pruned_corpus(0, 29, 24, 8, empty_docs=(3, 17))
+        packed = masked.pack()
+        # every doc lands in exactly one bucket
+        ids = np.concatenate([np.asarray(b.doc_ids) for b in packed.buckets])
+        np.testing.assert_array_equal(np.sort(ids), np.arange(29))
+        for b in packed.buckets:
+            mk = np.asarray(b.masks)
+            # pow2 capacities, clamped at the original doc length
+            assert b.cap & (b.cap - 1) == 0 or b.cap == 24
+            # prefix-dense: kept tokens compacted to the front
+            counts = mk.sum(1)
+            np.testing.assert_array_equal(
+                mk, np.arange(b.cap)[None, :] < counts[:, None])
+        assert packed.tokens_kept == int(masked.active_mask.sum())
+        # compaction preserves the tokens themselves
+        pe, pm = packed.padded()
+        act = np.asarray(masked.active_mask)
+        de = np.asarray(masked.d_embs)
+        for i in (0, 3, 11):
+            np.testing.assert_array_equal(np.asarray(pe[i])[np.asarray(pm[i])],
+                                          de[i][act[i]])
+
+    def test_empty_corpus(self):
+        packed = PackedIndex.pack(np.zeros((0, 8, 4)), np.zeros((0, 8), bool))
+        assert packed.buckets == [] and packed.cap_max == 0
+        assert maxsim_scores(packed, jnp.ones((2, 3, 4)),
+                             backend="reference").shape == (2, 0)
+
+    def test_int_granularity(self):
+        masked = _pruned_corpus(1, 16, 20, 8)
+        packed = masked.pack(granularity=4, min_width=4)
+        assert all(b.cap % 4 == 0 for b in packed.buckets)
+        s_m = maxsim_scores(masked, _queries(5, 3, 4, 8)[0],
+                            backend="reference")
+        s_p = maxsim_scores(packed, _queries(5, 3, 4, 8)[0],
+                            backend="reference")
+        np.testing.assert_array_equal(np.asarray(s_m), np.asarray(s_p))
+
+    def test_bytes_stored_matches_keep_fraction(self):
+        """The acceptance claim: device bytes ~ keep_fraction x dense
+        fp32 bytes.  Exactly half the tokens kept (scattered positions)
+        so the pow2 capacity is tight."""
+        n_docs, m, dim = 64, 32, 16
+        k = jax.random.PRNGKey(7)
+        d = jax.random.normal(k, (n_docs, m, dim))
+        masks = jnp.ones((n_docs, m), bool)
+        rng = np.random.default_rng(7)
+        keep = np.zeros((n_docs, m), bool)
+        for i in range(n_docs):
+            keep[i, rng.choice(m, m // 2, replace=False)] = True
+        masked = TokenIndex.build(d, masks).with_keep(jnp.asarray(keep))
+        st = masked.pack().storage()
+        dense = n_docs * m * dim * 4
+        assert st["bytes_dense_fp32"] == dense
+        # embeddings dominate; masks/doc_ids add a few % on top of 0.5x
+        assert 0.5 * dense <= st["bytes_stored"] <= 0.56 * dense
+        st8 = masked.pack(compression="int8").storage()
+        assert st8["bytes_stored"] <= 0.16 * dense    # ~4x smaller again
+        # and bytes_stored is really the sum of held arrays
+        packed = masked.pack()
+        assert st["bytes_stored"] == sum(b.nbytes() for b in packed.buckets)
+
+    def test_sharding_spec_resolves_candidates(self):
+        packed = _pruned_corpus(2, 8, 12, 4).pack()
+        from jax.sharding import PartitionSpec as P
+        assert packed.spec() == P(None, None, None)   # no rules active
+        with axis_rules({"candidates": ("model",)}):
+            assert packed.spec() == P("model", None, None)
+
+
+class TestScoringParity:
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_e2e_identical_topk(self, backend):
+        masked = _pruned_corpus(3, 41, 24, 8, empty_docs=(0, 40))
+        packed = masked.pack()
+        q, qm = _queries(4, 6, 5, 8)
+        s_m = maxsim_scores(masked, q, qm, backend=backend)
+        s_p = maxsim_scores(packed, q, qm, backend=backend)
+        # same backend, re-laid-out operands: bitwise (max over kept
+        # tokens is subset/order-invariant)
+        np.testing.assert_array_equal(np.asarray(s_m), np.asarray(s_p))
+        i_m = jax.lax.top_k(s_m, 10)[1]
+        i_p = jax.lax.top_k(s_p, 10)[1]
+        np.testing.assert_array_equal(np.asarray(i_m), np.asarray(i_p))
+
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_two_stage_identical_topk(self, backend):
+        masked = _pruned_corpus(5, 37, 20, 8, empty_docs=(9,))
+        packed = masked.pack()
+        q, qm = _queries(6, 4, 5, 8)
+        i_m, s_m, full_m = search(masked, q, k=5, n_first=16, q_masks=qm,
+                                  backend=backend)
+        i_p, s_p, full_p = search(packed, q, k=5, n_first=16, q_masks=qm,
+                                  backend=backend)
+        np.testing.assert_array_equal(np.asarray(i_m), np.asarray(i_p))
+        np.testing.assert_allclose(np.asarray(s_m), np.asarray(s_p),
+                                   atol=1e-5)
+
+    def test_densified_matrix_uses_neg_inf_sentinel(self):
+        masked = _pruned_corpus(8, 30, 16, 8)
+        q, _ = _queries(9, 3, 4, 8)
+        for idx in (masked, masked.pack()):
+            _, _, full = search(idx, q, k=4, n_first=8)
+            full = np.asarray(full)
+            # exactly n_first candidates per query scored; the rest hold
+            # the shared NEG_INF sentinel, not an ad-hoc fill value
+            assert ((full == NEG_INF).sum(1) == 30 - 8).all()
+
+    def test_empty_after_prune_doc_never_outranks_real(self):
+        masked = _pruned_corpus(10, 12, 10, 6, empty_docs=(4,))
+        packed = masked.pack()
+        q, _ = _queries(11, 3, 4, 6)
+        s = np.asarray(maxsim_scores(packed, q, backend="reference"))
+        real = np.asarray(masked.active_mask).sum(1) > 0
+        assert not real[4]
+        assert (s[:, ~real] < s[:, real].min()).all()
+
+    def test_explicit_blocks_win(self):
+        masked = _pruned_corpus(12, 18, 16, 8)
+        packed = masked.pack()
+        q, _ = _queries(13, 4, 4, 8)
+        a = maxsim_scores(packed, q, backend="fused", block_docs=4,
+                          block_q=2)
+        b = maxsim_scores(packed, q, backend="fused")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+class TestInt8:
+    def test_roundtrip_within_quantization_step(self):
+        masked = _pruned_corpus(20, 24, 20, 8)
+        p32 = masked.pack()
+        p8 = masked.pack(compression="int8")
+        for b32, b8 in zip(p32.buckets, p8.buckets):
+            e32 = np.asarray(b32.dense_embs(p32.dim))
+            e8 = np.asarray(b8.dense_embs(p8.dim))
+            # per-block symmetric int8: error bounded by half a step of
+            # the block's scale, globally by max_abs/127
+            step = np.abs(e32).max() / 127.0
+            assert np.abs(e32 - e8).max() <= step * 0.5 + 1e-7
+
+    def test_scores_and_topk_close(self):
+        masked = _pruned_corpus(21, 33, 24, 8, empty_docs=(2,))
+        p8 = masked.pack(compression="int8")
+        q, qm = _queries(22, 5, 6, 8)
+        s_m = np.asarray(maxsim_scores(masked, q, qm, backend="reference"))
+        s_8 = np.asarray(maxsim_scores(p8, q, qm, backend="reference"))
+        real = np.asarray(masked.active_mask).sum(1) > 0
+        np.testing.assert_allclose(s_8[:, real], s_m[:, real],
+                                   atol=5e-2, rtol=5e-2)
+
+
+class TestPersistence:
+    def test_save_load_serve_roundtrip(self, tmp_path):
+        masked = _pruned_corpus(30, 26, 18, 8, empty_docs=(7,))
+        packed = masked.pack()
+        path = os.path.join(tmp_path, "index")
+        assert not index_io.has_index(path)
+        index_io.save_index(path, packed)
+        assert index_io.has_index(path)
+        loaded = index_io.load_index(path)
+        assert loaded.storage() == packed.storage()
+        q, qm = _queries(31, 4, 5, 8)
+        s_mem = maxsim_scores(packed, q, qm, backend="reference")
+        s_disk = maxsim_scores(loaded, q, qm, backend="reference")
+        np.testing.assert_array_equal(np.asarray(s_mem), np.asarray(s_disk))
+
+    @pytest.mark.parametrize("compression", ["none", "int8"])
+    def test_roundtrip_both_codecs(self, tmp_path, compression):
+        packed = _pruned_corpus(32, 15, 12, 6).pack(compression=compression)
+        path = os.path.join(tmp_path, "idx")
+        index_io.save_index(path, packed)
+        loaded = index_io.load_index(path)
+        assert loaded.compression == compression
+        for a, b in zip(packed.buckets, loaded.buckets):
+            np.testing.assert_array_equal(np.asarray(a.dense_embs(packed.dim)),
+                                          np.asarray(b.dense_embs(loaded.dim)))
+            np.testing.assert_array_equal(np.asarray(a.masks),
+                                          np.asarray(b.masks))
+
+    def test_async_save(self, tmp_path):
+        packed = _pruned_corpus(33, 10, 12, 6).pack()
+        path = os.path.join(tmp_path, "idx")
+        index_io.save_index(path, packed, async_save=True)
+        checkpoint.wait_pending()
+        assert index_io.has_index(path)
+        loaded = index_io.load_index(path)
+        assert loaded.tokens_kept == packed.tokens_kept
+
+    def test_newer_format_refused(self, tmp_path):
+        packed = _pruned_corpus(34, 6, 10, 4).pack()
+        path = os.path.join(tmp_path, "idx")
+        index_io.save_index(path, packed)
+        import json
+        man_path = os.path.join(path, index_io.MANIFEST)
+        with open(man_path) as f:
+            man = json.load(f)
+        man["format"] = index_io.FORMAT + 1
+        with open(man_path, "w") as f:
+            json.dump(man, f)
+        with pytest.raises(IOError):
+            index_io.load_index(path)
+
+    def test_missing_body_raises(self, tmp_path):
+        with pytest.raises((IOError, FileNotFoundError)):
+            index_io.load_index(os.path.join(tmp_path, "nothing"))
+
+
+class TestServer:
+    def test_packed_server_matches_masked(self):
+        masked = _pruned_corpus(40, 34, 16, 8, empty_docs=(5,))
+        packed = masked.pack()
+        q, _ = _queries(41, 6, 4, 8)
+        sm = RetrievalServer(masked, k=5, n_first=12)
+        sp = RetrievalServer(packed, k=5, n_first=12)
+        i_m, s_m = sm.query_batch(q)
+        i_p, s_p = sp.query_batch(q)
+        np.testing.assert_array_equal(i_m, i_p)
+        np.testing.assert_allclose(s_m, s_p, atol=1e-5)
+
+    def test_closure_cache_is_bounded_lru(self):
+        packed = _pruned_corpus(42, 12, 12, 6).pack()
+        server = RetrievalServer(packed, k=3, n_first=6,
+                                 max_cached_closures=2)
+        shapes = [(1, 4), (2, 4), (3, 4)]
+        for n_q, l in shapes:
+            server.query_batch(jnp.ones((n_q, l, 6)))
+        assert len(server._search) == 2
+        assert (1, 4) not in server._search          # LRU-evicted
+        # evicted shapes still serve (re-jit, not an error)
+        idx, _ = server.query_batch(jnp.ones((1, 4, 6)))
+        assert idx.shape == (1, 3)
+        # and a cache hit refreshes recency instead of growing the cache
+        server.query_batch(jnp.ones((3, 4, 6)))
+        assert len(server._search) == 2

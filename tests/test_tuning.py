@@ -179,3 +179,60 @@ class TestConsumersConsultTuner:
         voronoi.pruning_order_shortlist(d, jnp.ones((10,), bool), S,
                                         shortlist=6, rescan_every=4,
                                         block_s=32, block_t=16)
+
+
+class TestPersistedCache:
+    def test_dump_load_roundtrip(self, tmp_path):
+        path = str(tmp_path / "tune.json")
+        a = tuning.tune("pruning", n_samples=2048, m=48, dim=128)
+        b = tuning.tune("serving", n_q=16, n_docs=256, m=128, l=32, dim=128)
+        assert tuning.dump_cache(path) == 2
+        tuning.clear_cache()
+        assert tuning.cache_info() == {}
+        assert tuning.load_cache(path) == 2
+        # a reload serves the persisted configs without recomputation
+        assert tuning.tune("pruning", n_samples=2048, m=48, dim=128) == a
+        assert tuning.tune("serving", n_q=16, n_docs=256, m=128, l=32,
+                           dim=128) == b
+
+    def test_load_validates_entries(self, tmp_path):
+        path = str(tmp_path / "tune.json")
+        tuning.tune("pruning", n_samples=64, m=9, dim=4)
+        tuning.dump_cache(path)
+        import json
+        with open(path) as f:
+            payload = json.load(f)
+        payload["entries"][0]["config"]["shortlist"] = 1   # breaks K >= R+1
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        tuning.clear_cache()
+        with pytest.raises(ValueError, match="exactness"):
+            tuning.load_cache(path)
+
+    def test_newer_format_refused(self, tmp_path):
+        path = str(tmp_path / "tune.json")
+        import json
+        with open(path, "w") as f:
+            json.dump({"format": tuning._CACHE_FORMAT + 1, "entries": []}, f)
+        with pytest.raises(IOError):
+            tuning.load_cache(path)
+
+    def test_env_hook_loads_and_dumps(self, tmp_path, monkeypatch):
+        """REPRO_AUTOTUNE_CACHE: measured results land in the shared
+        file; a fresh process (cleared cache) resolves from it without
+        re-measuring."""
+        path = str(tmp_path / "shared.json")
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+        races = []
+        pinned = tuning.KernelConfig(shortlist=6, rescan_every=5)
+        monkeypatch.setattr(tuning, "_measure_pruning",
+                            lambda shape, base: races.append(1) or pinned)
+        monkeypatch.setenv("REPRO_AUTOTUNE", "measure")
+        got = tuning.tune("pruning", n_samples=64, m=9, dim=4)
+        assert races == [1] and got == pinned
+        import os
+        assert os.path.exists(path)          # race auto-dumped
+        tuning.clear_cache()                 # "new process"
+        got2 = tuning.tune("pruning", n_samples=64, m=9, dim=4)
+        assert races == [1]                  # shared pass, no second race
+        assert got2 == pinned
