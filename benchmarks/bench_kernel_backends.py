@@ -5,11 +5,14 @@ routes — iterative Voronoi pruning (all four backends + the bucketed
 corpus pipeline + the ragged-corpus comparison) and MaxSim serving —
 plus the packed-vs-masked index-layout comparison (same pruned corpus
 served from the dense masked `TokenIndex` and from the compacted
-`PackedIndex`, throughput AND measured bytes), prints the harness CSV
-lines, and APPENDS a timestamped entry to
-``BENCH_kernel_backends.json`` at the repo root so the perf trajectory
-of the kernel-backed paths accumulates PR over PR instead of being
-overwritten.
+`PackedIndex`, throughput AND measured bytes) and the serving-dataflow
+comparison (materialize-then-top-k vs the streaming per-chunk merge of
+``topk_search``: q/s, peak live temp bytes of the compiled
+executables, and whether the streaming HLO holds any corpus-sized
+score tensor), prints the harness CSV lines, and APPENDS a timestamped
+entry to ``BENCH_kernel_backends.json`` at the repo root so the perf
+trajectory of the kernel-backed paths accumulates PR over PR instead
+of being overwritten.
 
 Shapes are CPU-scaled but chosen so the *serving* comparison is
 meaningful off-TPU too: at the rerank shape the reference einsum's 4-D
@@ -22,15 +25,18 @@ either way.
 
 ``python -m benchmarks.bench_kernel_backends --check`` re-reads the
 last trajectory entry and fails (exit 1) if batched pruning regressed
-below the same run's reference-path docs/sec, or if packed serving
-dropped below the masked path at the same shape — the throughput smoke
-scripts/smoke.sh runs after recording.
+below the same run's reference-path docs/sec, if packed serving
+dropped below the masked path, if streaming serving dropped below the
+materializing path (or its results diverged), or if a corpus-sized
+(n_q, n_docs) score tensor reappeared in the compiled streaming
+serving HLO — the smoke scripts/smoke.sh runs after recording.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import re
 import sys
 import time
 
@@ -40,7 +46,8 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.bench_speedup import run_pruning_backends, run_ragged_pruning
-from repro.serve.retrieval import TokenIndex, maxsim_scores
+from repro.serve.retrieval import (TokenIndex, maxsim_scores, search,
+                                   topk_search)
 
 OUT_PATH = os.path.abspath(os.path.join(os.path.dirname(__file__),
                                         os.pardir,
@@ -124,6 +131,63 @@ def run_packed_serving(n_q=32, n_docs=256, m=128, l=32, dim=128,
     }
 
 
+def _peak_temp_bytes(compiled):
+    """Peak live temp bytes of a compiled executable (buffer-assignment
+    view; None when the backend exposes no memory analysis)."""
+    try:
+        ma = compiled.memory_analysis()
+        return None if ma is None else int(ma.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def run_streaming_serving(n_q=32, n_docs=256, m=128, l=32, dim=128, k=10):
+    """Serving-dataflow comparison at the bench shape: the
+    materialize-then-top-k path (full (n_q, n_docs) score matrix +
+    global lax.top_k) vs the streaming per-chunk merge (topk_search).
+    Records q/s, peak live temp bytes of the compiled executables, a
+    results-identical sanity bit, and whether the streaming compiled
+    HLO is free of any corpus-sized (n_q, n_docs) tensor — the gate
+    ``--check`` enforces so the dense matrix cannot silently
+    reappear on the serving path.
+    Returns {materializing|streaming: q_per_s, ...}."""
+    key = jax.random.PRNGKey(0)
+    d = jax.random.normal(key, (n_docs, m, dim))
+    masks = jnp.ones((n_docs, m), bool)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (n_q, l, dim))
+    index = TokenIndex.build(d, masks)
+
+    f_mat = jax.jit(lambda qq: search(index, qq, k=k, end_to_end=True)[:2])
+    f_str = jax.jit(lambda qq: topk_search(index, qq, k=k))
+    i_mat, s_mat = (np.asarray(x) for x in f_mat(q))
+    i_str, s_str = (np.asarray(x) for x in f_str(q))
+    identical = bool((i_mat == i_str).all() and (s_mat == s_str).all())
+
+    t_mat, _ = common.timeit(lambda: f_mat(q), repeat=2)
+    t_str, _ = common.timeit(lambda: f_str(q), repeat=2)
+    # One AOT lower+compile per path, shared by the HLO gate and the
+    # memory analysis (AOT compiles don't share the jit cache; don't pay
+    # them twice).  Pattern covers the StableHLO spelling (32x256x...)
+    # and compiled-HLO shapes of ANY rank led by (n_q, n_docs) —
+    # f32[32,256] and f32[32,256,...] both count as corpus-sized.
+    lowered = f_str.lower(q)
+    comp_str = lowered.compile()
+    comp_mat = f_mat.lower(q).compile()
+    pat = re.compile(rf"{n_q}x{n_docs}x|\[{n_q},{n_docs}[\],]")
+    hlo_clean = not (pat.search(lowered.as_text())
+                     or pat.search(comp_str.as_text()))
+    return {
+        "materializing": n_q / t_mat,
+        "streaming": n_q / t_str,
+        "speedup_streaming_over_materializing": t_mat / t_str,
+        "peak_temp_bytes_materializing": _peak_temp_bytes(comp_mat),
+        "peak_temp_bytes_streaming": _peak_temp_bytes(comp_str),
+        "results_identical": identical,
+        "hlo_no_corpus_matrix": bool(hlo_clean),
+        "shape": dict(n_q=n_q, n_docs=n_docs, m=m, l=l, dim=dim, k=k),
+    }
+
+
 def load_trajectory(path: str = OUT_PATH) -> list[dict]:
     """Read the trajectory entries; a legacy single-record dict (PR 1
     wrote one overwritten object) is adopted as the first entry."""
@@ -181,6 +245,28 @@ def check_last(path: str = OUT_PATH) -> None:
             f"{last.get('packed_serving_shape')}")
     print(f"throughput smoke OK: packed serving {pk:.2f} q/s vs masked "
           f"{mk:.2f} q/s ({pk / mk:.2f}x at the bench shape)")
+    stream = last.get("streaming_serving_q_per_s", {})
+    st, mt = stream.get("streaming"), stream.get("materializing")
+    if st is None or mt is None:
+        raise SystemExit(f"{path}: last entry predates streaming top-k "
+                         "serving; re-run the bench")
+    if st < mt:
+        raise SystemExit(
+            f"THROUGHPUT REGRESSION: streaming serving {st:.2f} q/s fell "
+            f"below the materializing path {mt:.2f} q/s at the bench "
+            f"shape {last.get('streaming_serving_shape')}")
+    if not last.get("streaming_hlo_no_corpus_matrix", False):
+        raise SystemExit(
+            "HLO REGRESSION: a corpus-sized (n_q, n_docs) score tensor "
+            "reappeared in the compiled streaming serving path "
+            f"(shape {last.get('streaming_serving_shape')})")
+    if not last.get("streaming_results_identical", False):
+        raise SystemExit(
+            "PARITY REGRESSION: streaming serving top-k diverged from "
+            "the materializing path at the bench shape")
+    print(f"throughput smoke OK: streaming serving {st:.2f} q/s vs "
+          f"materializing {mt:.2f} q/s ({st / mt:.2f}x, HLO clean, "
+          f"results identical)")
 
 
 def main():
@@ -188,6 +274,7 @@ def main():
     ragged = run_ragged_pruning()
     rerank = run_rerank_backends(**RERANK)
     layout = run_packed_serving()
+    stream = run_streaming_serving()
 
     for name in PRUNING_BACKENDS:
         common.csv_line(f"kernel_backends/pruning_{name}",
@@ -224,6 +311,21 @@ def main():
         f"speedup={layout['speedup_packed_over_masked']:.2f}x;"
         f"bytes_ratio={layout['bytes_ratio_packed_over_dense']:.3f} of "
         f"dense at keep={layout['shape']['keep_fraction']}")
+    for name in ("materializing", "streaming"):
+        common.csv_line(f"kernel_backends/serving_dataflow_{name}",
+                        1e6 / stream[name],
+                        f"q_per_s={stream[name]:.2f}")
+    pb_m = stream["peak_temp_bytes_materializing"]
+    pb_s = stream["peak_temp_bytes_streaming"]
+    stream_ok = (stream["speedup_streaming_over_materializing"] >= 1.0
+                 and stream["hlo_no_corpus_matrix"]
+                 and stream["results_identical"])
+    common.csv_line(
+        "kernel_backends/CLAIM_streaming_topk_no_score_matrix", 0.0,
+        f"holds={stream_ok};"
+        f"speedup={stream['speedup_streaming_over_materializing']:.2f}x;"
+        f"peak_temp_bytes={pb_s}/{pb_m};"
+        f"hlo_clean={stream['hlo_no_corpus_matrix']}")
 
     entry = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -250,10 +352,24 @@ def main():
         "packed_bytes": {k: layout[k] for k in
                          ("bytes_masked_resident", "bytes_packed_stored",
                           "bytes_ratio_packed_over_dense")},
+        "streaming_serving_q_per_s": {k: stream[k] for k in
+                                      ("materializing", "streaming")},
+        "streaming_serving_shape": stream["shape"],
+        "streaming_speedup_over_materializing":
+            stream["speedup_streaming_over_materializing"],
+        "streaming_peak_temp_bytes": {
+            "materializing": stream["peak_temp_bytes_materializing"],
+            "streaming": stream["peak_temp_bytes_streaming"]},
+        "streaming_hlo_no_corpus_matrix": stream["hlo_no_corpus_matrix"],
+        "streaming_results_identical": stream["results_identical"],
         "claim_chunked_serving_beats_reference": bool(wins),
         "claim_bucketed_pruning_2x_reference": bool(prune_speedup >= 2.0),
         "claim_packed_index_shrinks_and_keeps_throughput":
             bool(layout["speedup_packed_over_masked"] >= 1.0),
+        "claim_streaming_topk_no_score_matrix": bool(
+            stream["speedup_streaming_over_materializing"] >= 1.0
+            and stream["hlo_no_corpus_matrix"]
+            and stream["results_identical"]),
     }
     append_entry(entry)
 

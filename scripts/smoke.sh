@@ -22,4 +22,11 @@ python -m repro.launch.serve --arch colbert --index-dir "$index_dir"
 test -f "$index_dir/packed_index.json"
 python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
   | grep -q "loaded packed index"
+# sharded serving: load the same artifact and serve it over a 2-device
+# candidates mesh on the e2e route (--n-first 0), so the query batch
+# really runs the shard_map streaming merge, not just the banner.
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+  python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
+  --mesh host --n-first 0 \
+  | grep -E "2 candidate shards|route: e2e" | wc -l | grep -q 2
 echo "smoke OK"

@@ -79,6 +79,7 @@ __all__ = [
     "resolve_backend",
     "tuned",
     "tuned_serving_blocks",
+    "tuned_streaming_blocks",
 ]
 
 REFERENCE = "reference"
@@ -184,3 +185,30 @@ def tuned_serving_blocks(n_q: int, n_docs: int, m: int, l: int, dim: int,
         block_docs = cfg.block_docs if block_docs is None else block_docs
         block_q = cfg.block_q if block_q is None else block_q
     return block_docs, block_q
+
+
+def tuned_streaming_blocks(n_q: int, n_docs: int, m: int, l: int, dim: int,
+                           k: int, *, n_shards: int = 1,
+                           block_docs: int | None = None,
+                           block_q: int | None = None,
+                           chunk_docs: int | None = None
+                           ) -> tuple[int, int, int]:
+    """Resolve the streaming top-k sweep's ``(block_docs, block_q,
+    chunk_docs)`` for one doc array (bucket) of shape (n_docs, m, dim).
+
+    The tuning key extends the serving key with the merge fan-in ``k``
+    and the candidate-axis shard count ``n_shards`` — under sharded
+    serving each shard scores only ``ceil(n_docs / n_shards)`` docs of
+    the bucket, and the knobs (doc block, per-merge-step chunk) are
+    sized for that SHARD-LOCAL slice, not the bucket's global doc
+    count.  Explicit values win; ``None``s come from the autotuner.
+    Call OUTSIDE jit (the server's ``_warm_tuner`` pre-resolves every
+    key its closures will ask for).
+    """
+    if block_docs is None or block_q is None or chunk_docs is None:
+        cfg = tuned("serving", n_q=n_q, n_docs=n_docs, m=m, l=l, dim=dim,
+                    k=k, n_shards=n_shards)
+        block_docs = cfg.block_docs if block_docs is None else block_docs
+        block_q = cfg.block_q if block_q is None else block_q
+        chunk_docs = cfg.chunk_docs if chunk_docs is None else chunk_docs
+    return block_docs, block_q, chunk_docs

@@ -40,8 +40,11 @@ the bucket-local "never removed" sentinels back to corpus-global
 conventions; see `_scatter_bucket`.
 
 Multi-host note: buckets are embarrassingly parallel across the `data`
-mesh axis like the flat batch path; `global_keep_masks` itself still
-merges on one host (ROADMAP open item).
+mesh axis like the flat batch path, and `global_keep_masks` now shards
+its merge over `data` too (bitwise-selection cut, O(log) scalar
+collectives — see voronoi._global_keep_masks_sharded) whenever the
+active sharding rules carry a mesh, so prune -> pack -> serve is
+distributed end to end.
 """
 
 from __future__ import annotations

@@ -62,7 +62,9 @@ __all__ = [
 
 _ENV_VAR = "REPRO_AUTOTUNE"
 _CACHE_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
-_CACHE_FORMAT = 1
+# 2: KernelConfig grew ``chunk_docs`` (streaming top-k serving); format-1
+# files load fine (the field defaults), format-2 files refuse old readers.
+_CACHE_FORMAT = 2
 
 # Per-core VMEM is ~16 MB on current TPUs; budget half of it so the
 # pipelined double-buffering of grid blocks still fits.
@@ -83,7 +85,9 @@ class KernelConfig:
 
     Pruning consumers read ``block_s``/``block_t`` (kernel tile sizes)
     and ``shortlist``/``rescan_every`` (shortlist schedule); serving
-    consumers read ``block_docs``/``block_q``.  A single config type
+    consumers read ``block_docs``/``block_q``, and the streaming top-k
+    path additionally reads ``chunk_docs`` (the doc-axis slab each
+    shard scores-then-reduces per merge step).  A single config type
     keeps the backend seam one function wide.
     """
 
@@ -93,6 +97,7 @@ class KernelConfig:
     block_q: int = 16
     shortlist: int = 8
     rescan_every: int = 7
+    chunk_docs: int = 256
 
     def validate(self) -> "KernelConfig":
         if self.shortlist < self.rescan_every + 1:
@@ -172,6 +177,13 @@ def _serving_heuristic(shape: dict, platform: str,
     m = int(shape.get("m", 128))
     l = int(shape.get("l", 32))
     dim = int(shape.get("dim", 128))
+    # Streaming top-k callers (repro.serve.retrieval.topk_search) extend
+    # the key with the merge fan-in ``k`` and the candidate-axis shard
+    # count ``n_shards``: knobs are then sized for the SHARD-LOCAL slice
+    # of the bucket, not its global doc count.
+    k = int(shape.get("k", 0))
+    n_shards = max(1, int(shape.get("n_shards", 1)))
+    n_local = -(-n_docs // n_shards)
 
     block_q = min(_pow2_at_least(max(n_q, 1)), 32)
     # Doc block: largest power of two whose (docs + queries + scores)
@@ -183,9 +195,28 @@ def _serving_heuristic(shape: dict, platform: str,
                                   + block_docs * m * block_q * l
                                   ) > vmem_budget:
         block_docs //= 2
-    block_docs = min(block_docs, _pow2_at_least(max(n_docs, 1)))
+    block_docs = min(block_docs, _pow2_at_least(max(n_local, 1)))
+
+    # Streaming chunk: the doc slab scored-then-reduced per merge step.
+    # On TPU the fused path's live state per chunk is only the
+    # (n_q, chunk) score strip, so big chunks amortize the per-chunk
+    # top-k; off-TPU the reference scorer materializes the
+    # (n_q, chunk, l, m) slab, so the chunk shrinks until that slab sits
+    # comfortably inside the working-set budget.  Chunks never drop
+    # below ~2k (each chunk must feed the merge at least k candidates
+    # to keep the fan-in small) nor exceed the shard-local doc count.
+    cap = _pow2_at_least(max(n_local, 1))
+    if platform == "tpu":
+        chunk = min(cap, 2048)
+    else:
+        chunk = 256
+        while chunk > 8 and 4 * n_q * chunk * l * m > vmem_budget // 2:
+            chunk //= 2
+    chunk = max(chunk, min(_pow2_at_least(max(2 * k, 1)), cap))
+    chunk = min(chunk, cap)
     return KernelConfig(block_docs=max(block_docs, 1),
-                        block_q=max(block_q, 1)).validate()
+                        block_q=max(block_q, 1),
+                        chunk_docs=max(chunk, 1)).validate()
 
 
 def heuristic_config(kind: str, *, platform: str | None = None,

@@ -601,19 +601,15 @@ def prune_to_size(d_emb: jax.Array, d_mask: jax.Array, samples: jax.Array,
     return keep_mask_from_order(rank, d_mask, target)
 
 
-def global_keep_masks(ranks: jax.Array, errs: jax.Array, d_masks: jax.Array,
-                      keep_fraction: float) -> jax.Array:
-    """Corpus-level pruning (§4.2 "Global Pruning").
+def _monotone_merge_errs(ranks: jax.Array, errs: jax.Array,
+                         d_masks: jax.Array) -> jax.Array:
+    """Per-document admissible merge keys for global pruning (§4.2).
 
-    Per-document orders are merged by the error each removal introduces;
-    the cheapest removals corpus-wide are applied until the global token
-    budget is met.  To keep every document's own order admissible we
-    monotonize each doc's error sequence with a running max before the
-    merge (a later-removed token never merges before an earlier one).
-    Every document always retains >= 1 token (err inf on the survivor).
-
-    ranks/errs/d_masks: (n_docs, m).  Returns keep masks (n_docs, m).
-    """
+    Each doc's err-at-removal sequence is monotonized with a running max
+    along its own removal order (a later-removed token never merges
+    before an earlier one); dead/survivor slots get +inf.  Pure per-doc
+    math — embarrassingly parallel over the doc axis, which is what the
+    sharded merge exploits."""
     n_docs, m = ranks.shape
     # err in doc-removal order, running-max, scattered back per token.
     step_err = jnp.full((n_docs, m + 1), jnp.inf, errs.dtype)
@@ -624,8 +620,122 @@ def global_keep_masks(ranks: jax.Array, errs: jax.Array, d_masks: jax.Array,
     # monotone threshold along the removal order
     step_err = jax.lax.associative_scan(jnp.maximum, step_err, axis=1)
     mono_err = jnp.take_along_axis(step_err, safe_rank, axis=1)
-    mono_err = jnp.where(d_masks & jnp.isfinite(errs), mono_err, jnp.inf)
+    return jnp.where(d_masks & jnp.isfinite(errs), mono_err, jnp.inf)
 
+
+_F32_INF_BITS = 0x7f800000  # +inf: the top of the nonneg-float bit order
+
+
+def _global_keep_masks_sharded(ranks, errs, d_masks, keep_fraction, *,
+                               mesh, axis):
+    """Distributed §4.2 merge under ``shard_map`` over the doc axis.
+
+    Replacing the reference path's corpus-wide ``argsort`` (which would
+    all-gather every shard's errors), the global budget cut becomes a
+    *selection* problem: the n_prune-th smallest merge key.  Errors are
+    nonnegative f32 (gaps, running-maxed, +inf sentinels), whose IEEE
+    bit patterns order identically as int32 — so a 31-step bitwise
+    binary search, each step one scalar psum of a local count, finds the
+    exact threshold with O(log) collective traffic.  Stable tie-breaking
+    (the reference argsort prunes equal-valued keys in flat-index order)
+    is reproduced by an exclusive scan of per-shard tie counts: shard i
+    prunes its first ``clip(r - ties_before_i, 0, local_ties)`` ties in
+    local flat order, which IS global flat order because shard_map
+    slices the doc axis contiguously.  Bit-identical to the reference
+    (asserted in tests/test_sharded_serving.py).
+    """
+    n_docs, m = ranks.shape
+    n_shards = mesh.shape[axis]
+    pad = (-n_docs) % n_shards
+    if pad:
+        # Padded docs are all-masked -> +inf keys appended AFTER every
+        # real entry in flat order; since n_prune <= n_total <= the real
+        # entry count, the stable tie cut can never reach them.
+        ranks = jnp.pad(ranks, ((0, pad), (0, 0)), constant_values=m)
+        errs = jnp.pad(errs, ((0, pad), (0, 0)),
+                       constant_values=jnp.inf)
+        d_masks = jnp.pad(d_masks, ((0, pad), (0, 0)))
+
+    def body(rk, er, dm):
+        mono = _monotone_merge_errs(rk, er, dm).astype(jnp.float32)
+        mono = jnp.where(mono == 0, jnp.float32(0), mono)  # -0.0 -> +0.0
+        bits = jax.lax.bitcast_convert_type(mono, jnp.int32).reshape(-1)
+        n_total = jax.lax.psum(jnp.sum(dm), axis)
+        n_keep = jnp.ceil(keep_fraction * n_total).astype(jnp.int32)
+        n_prune = jnp.maximum(n_total - n_keep, 0)
+
+        def step(_, lh):
+            lo, hi = lh
+            mid = lo + (hi - lo) // 2
+            c = jax.lax.psum(jnp.sum((bits <= mid).astype(jnp.int32)),
+                             axis)
+            big = c >= n_prune
+            return jnp.where(big, lo, mid + 1), jnp.where(big, mid, hi)
+
+        t, _ = jax.lax.fori_loop(
+            0, 31, step, (jnp.int32(0), jnp.int32(_F32_INF_BITS)))
+        c_lt = jax.lax.psum(jnp.sum((bits < t).astype(jnp.int32)), axis)
+        r = n_prune - c_lt                      # ties still to prune
+        eq = bits == t
+        local_eq = jnp.sum(eq.astype(jnp.int32))
+        eq_counts = jax.lax.all_gather(local_eq, axis)   # (n_shards,)
+        sidx = jax.lax.axis_index(axis)
+        eq_before = jnp.sum(jnp.where(jnp.arange(n_shards) < sidx,
+                                      eq_counts, 0))
+        take = jnp.clip(r - eq_before, 0, local_eq)
+        eq_rank = jnp.cumsum(eq.astype(jnp.int32)) - 1   # local flat order
+        pruned = (bits < t) | (eq & (eq_rank < take))
+        return dm & ~pruned.reshape(dm.shape)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    keep = shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None),) * 3,
+                     out_specs=P(axis, None),
+                     check_rep=False)(ranks, errs, d_masks)
+    return keep[:n_docs]
+
+
+def global_keep_masks(ranks: jax.Array, errs: jax.Array, d_masks: jax.Array,
+                      keep_fraction: float, *,
+                      sharded: bool | None = None) -> jax.Array:
+    """Corpus-level pruning (§4.2 "Global Pruning").
+
+    Per-document orders are merged by the error each removal introduces;
+    the cheapest removals corpus-wide are applied until the global token
+    budget is met.  To keep every document's own order admissible we
+    monotonize each doc's error sequence with a running max before the
+    merge (a later-removed token never merges before an earlier one).
+    Every document always retains >= 1 token (err inf on the survivor).
+
+    ``sharded`` selects the distributed merge
+    (:func:`_global_keep_masks_sharded`): the per-doc monotonization
+    shards over the ``data`` mesh axis and the global cut runs as a
+    bitwise selection with O(log) scalar collectives — no corpus-wide
+    sort, no gathered error array.  ``None`` (default) auto-enables it
+    when the active sharding rules carry a mesh (``"__mesh__"``) whose
+    ``data`` axis is wider than 1; ``True`` requires one; results are
+    bit-identical either way.
+
+    ranks/errs/d_masks: (n_docs, m).  Returns keep masks (n_docs, m).
+    """
+    if sharded is None or sharded:
+        from repro.sharding.specs import current_rules
+        mesh = (current_rules() or {}).get("__mesh__")
+        ok = (mesh is not None
+              and "data" in getattr(mesh, "axis_names", ())
+              and mesh.shape["data"] > 1)
+        if sharded and not ok:
+            raise ValueError(
+                "global_keep_masks(sharded=True) needs active sharding "
+                "rules carrying a '__mesh__' with a data axis wider "
+                "than 1 (see sharding.serve_rules / axis_rules)")
+        if ok:
+            return _global_keep_masks_sharded(ranks, errs, d_masks,
+                                              keep_fraction, mesh=mesh,
+                                              axis="data")
+    n_docs, m = ranks.shape
+    mono_err = _monotone_merge_errs(ranks, errs, d_masks)
     n_total = jnp.sum(d_masks)
     n_keep = jnp.ceil(keep_fraction * n_total).astype(jnp.int32)
     n_prune = jnp.maximum(n_total - n_keep, 0)

@@ -23,3 +23,12 @@ def make_host_mesh():
     n = len(jax.devices())
     data = max(1, n // 1)
     return jax.make_mesh((data, 1), ("data", "model"))
+
+
+def make_serve_mesh():
+    """Serving mesh: every local device on the `model` axis — the axis
+    the serving rule set (``sharding.serve_rules``) places the corpus
+    doc axis ("candidates") over, so the streaming top-k merge shards
+    each capacity bucket across the whole host."""
+    n = max(1, len(jax.devices()))
+    return jax.make_mesh((1, n), ("data", "model"))

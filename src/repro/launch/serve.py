@@ -12,16 +12,19 @@
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro import sharding as shlib
 from repro.core import backend as backend_lib
 from repro.core import pruning_pipeline
 from repro.core.sampling import sample_sphere
 from repro.data import synthetic
+from repro.launch import mesh as mesh_lib
 from repro.models import colbert as colbert_lib
 from repro.models import transformer as tfm
 from repro.serve import index_io
@@ -33,7 +36,9 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
                     ckpt_dir: str | None = None, seed: int = 0,
                     backend: str | None = None,
                     index_dir: str | None = None,
-                    compress: str = "none"):
+                    compress: str = "none",
+                    mesh: str = "none",
+                    n_first: int = 64):
     cfg = configs.get("colbert").smoke
     params = colbert_lib.init_params(jax.random.PRNGKey(seed), cfg)
     if ckpt_dir:
@@ -84,14 +89,36 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
             print(f"[serve] saved + reloaded packed index at {index_dir}")
     # shortlist is a pruning-only path; serving falls back to the default.
     serve_backend = backend if backend in backend_lib.SERVING else None
-    server = RetrievalServer(packed, k=10, backend=serve_backend)
-    print(f"[serve] scoring backend: {server.backend}")
-    q_emb, _ = colbert_lib.encode_queries(params, cfg, corpus.q_ids)
-    t0 = time.time()
-    idx, scores = server.query_batch(q_emb)
-    dt = time.time() - t0
-    print(f"[serve] {n_queries} queries in {dt*1e3:.1f} ms "
-          f"({dt/n_queries*1e3:.2f} ms/q)")
+    # --mesh host: every local device on the candidates axis; the server
+    # closures trace under serve_rules, so the streaming top-k merge
+    # shards each capacity bucket and all-gathers only (n_q, k)
+    # candidates per shard (DESIGN_BACKENDS.md §Sharded serving).  The
+    # sharded merge runs on the e2e exact-sweep route — pass
+    # --n-first >= the corpus size (or 0) to take it; a smaller n_first
+    # serves the two-stage rerank, whose first stage streams but stays
+    # shard-local.
+    ctx = contextlib.nullcontext()
+    if mesh == "host":
+        serve_mesh = mesh_lib.make_serve_mesh()
+        n_shards = serve_mesh.shape["model"]
+        print(f"[serve] sharded serving mesh: {serve_mesh} "
+              f"({n_shards} candidate shard{'s' if n_shards != 1 else ''})")
+        ctx = shlib.axis_rules(shlib.serve_rules(serve_mesh))
+    if n_first <= 0:
+        n_first = packed.n_docs                  # e2e exact-sweep route
+    route = "e2e" if n_first >= packed.n_docs else "two-stage"
+    with ctx:
+        server = RetrievalServer(packed, k=10, n_first=n_first,
+                                 backend=serve_backend)
+        print(f"[serve] route: {route} (n_first={n_first}, "
+              f"n_docs={packed.n_docs})")
+        print(f"[serve] scoring backend: {server.backend}")
+        q_emb, _ = colbert_lib.encode_queries(params, cfg, corpus.q_ids)
+        t0 = time.time()
+        idx, scores = server.query_batch(q_emb)
+        dt = time.time() - t0
+        print(f"[serve] {n_queries} queries in {dt*1e3:.1f} ms "
+              f"({dt/n_queries*1e3:.2f} ms/q)")
     return idx, scores
 
 
@@ -130,11 +157,20 @@ def main():
                          "it first (repro.serve.index_io)")
     ap.add_argument("--compress", default="none", choices=["none", "int8"],
                     help="token compression when packing a new index")
+    ap.add_argument("--mesh", default="none", choices=["none", "host"],
+                    help="'host': shard serving over every local device "
+                         "(candidates axis; streaming top-k merge under "
+                         "sharding.serve_rules)")
+    ap.add_argument("--n-first", type=int, default=64,
+                    help="first-stage candidate count; >= corpus size "
+                         "(or 0) serves the e2e exact sweep — the route "
+                         "the sharded streaming merge runs on")
     args = ap.parse_args()
     if args.arch == "colbert":
         serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir,
                         backend=args.backend, index_dir=args.index_dir,
-                        compress=args.compress)
+                        compress=args.compress, mesh=args.mesh,
+                        n_first=args.n_first)
     else:
         serve_lm(args.arch, n_tokens=args.tokens)
 

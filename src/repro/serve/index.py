@@ -93,6 +93,28 @@ class PackedBucket:
         arrs = (self.doc_ids, self.masks, self.embs, self.q8, self.scales)
         return sum(int(a.nbytes) for a in arrs if a is not None)
 
+    def shard_view(self, dim: int, n_shards: int, pad_id: int):
+        """(embs, masks, doc_ids) with the doc axis padded up to a
+        multiple of ``n_shards`` so the bucket places evenly over the
+        candidates mesh axis (streaming sharded serving).
+
+        Pad rows are all-masked docs carrying the sentinel ``pad_id``
+        (callers use ``n_docs``, one past every real id) — the streaming
+        merge forces their candidate scores to -inf, so a pad can never
+        displace a real document, including real empty-after-prune docs
+        whose finite sentinel scores sit above -inf.  The doc-id remap
+        rides along with the shard: each shard maps its local top-k hits
+        straight to corpus-global ids before the merge tree ever sees
+        them.
+        """
+        e, mk, ids = self.dense_embs(dim), self.masks, self.doc_ids
+        pad = (-self.n_docs) % max(n_shards, 1)
+        if pad:
+            e = jnp.pad(e, ((0, pad), (0, 0), (0, 0)))
+            mk = jnp.pad(mk, ((0, pad), (0, 0)))
+            ids = jnp.pad(ids, (0, pad), constant_values=pad_id)
+        return e, mk, ids
+
     def __repr__(self):  # keep test failure output readable
         return (f"PackedBucket(cap={self.cap}, n_docs={self.n_docs}, "
                 f"compressed={self.embs is None})")

@@ -38,6 +38,19 @@ score per bucket — the packed reference path's biggest tensor is
 (n_q, n_docs_b, l, cap_b), already keep_fraction-smaller than the dense
 one, and the fused path's tiles shrink the same way (the autotuner keys
 on each bucket's shape).
+
+Above both backends sits the **streaming top-k** dataflow
+(:func:`topk_search`; DESIGN_BACKENDS.md §Sharded serving): instead of
+scattering bucket scores into an (n_q, n_docs) matrix and running one
+global ``lax.top_k``, every bucket/chunk/shard reduces its scores to
+(n_q, k) (score, doc-id) candidates immediately and sort-merges flow up
+a tournament tree — identical results, no corpus-sized tensor in the
+compiled HLO, and under ``sharding.serve_rules(mesh)`` the doc axis of
+every bucket places over the candidates mesh axis with one k-wide
+all-gather per shard.  ``search(..., return_full=False)`` — the
+``RetrievalServer`` default — serves through it; ``return_full=True``
+keeps the materializing path for metrics code that needs the densified
+matrix.
 """
 
 from __future__ import annotations
@@ -51,10 +64,11 @@ import jax.numpy as jnp
 
 from repro.core import backend as backend_lib
 from repro.core.scoring import NEG_INF
+from repro.core.tuning import _pow2_at_least
 from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_multi_op,
                                               colbert_maxsim_rerank_op)
 from repro.serve.index import PackedIndex
-from repro.sharding import constrain
+from repro.sharding import constrain, mesh_axes_for
 
 
 @dataclasses.dataclass
@@ -179,6 +193,237 @@ def maxsim_scores(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray,
                         block_q=block_q)
 
 
+# ----------------------------------------------------------------------
+# Streaming top-k serving (the merge-tree dataflow; DESIGN_BACKENDS.md
+# §Sharded serving).  Scores flow *up* a merge tree instead of *into* a
+# dense (n_q, n_docs) matrix: every capacity bucket (and every
+# candidates-axis shard of it) reduces its chunk scores to (n_q, k)
+# candidates immediately, and a tournament of sort-merges produces the
+# global top-k — bit-identical to ``lax.top_k`` over the materialized
+# matrix, with no corpus-sized tensor anywhere in the compiled HLO.
+# ----------------------------------------------------------------------
+
+
+def _merge_topk(scores, ids, k: int):
+    """Exact top-k merge of candidate (scores, ids) columns.
+
+    Sorting by the two keys (-score, id) reproduces ``lax.top_k``'s
+    contract over the full matrix exactly: descending score, ties to the
+    lowest doc id — which is what the materialized path's tie-breaking
+    (lowest column index == lowest doc id) resolves to.  Negation is
+    exact in fp, so merged scores are bit-identical, not just close.
+    """
+    neg, sid = jax.lax.sort((-scores, ids), num_keys=2, dimension=1)
+    return sid[:, :k], -neg[:, :k]
+
+
+def _stream_chunk_topk(n: int, chunk: int, k: int, score_slab,
+                       doc_ids=None, pad_from: int | None = None):
+    """The streaming reduce loop every candidate producer shares: sweep
+    the doc axis in ``chunk``-sized slabs, reduce each slab's scores
+    (``score_slab(start, stop) -> (n_q, stop - start)``) to its local
+    top-k (scores, global-doc-id) columns, concatenate.  Only the
+    (n_q, <= n_chunks * k) candidates outlive a chunk; the score strip
+    is free for XLA to recycle per chunk.
+
+    ``doc_ids=None`` means the axis is already in corpus-global order.
+    ``pad_from`` marks sentinel ids at/above it as shard-padding: their
+    candidates are forced to -inf so a pad can never displace a real
+    doc (real empty-after-prune docs score a finite sentinel, strictly
+    above -inf).  Per-chunk ``lax.top_k`` tie-breaking (lowest local
+    index) agrees with the global order because doc ids ascend within
+    every bucket (``bucket_plan`` emits ``np.flatnonzero`` index sets)
+    and pads sit at the tail.
+    """
+    vals, ids = [], []
+    for s0 in range(0, n, chunk):
+        s = score_slab(s0, min(s0 + chunk, n))
+        kb = min(k, s.shape[1])
+        v, loc = jax.lax.top_k(s, kb)
+        i = (s0 + loc if doc_ids is None
+             else doc_ids[s0:s0 + chunk][loc]).astype(jnp.int32)
+        if pad_from is not None:
+            v = jnp.where(i >= pad_from, -jnp.inf, v)
+        vals.append(v)
+        ids.append(i)
+    return jnp.concatenate(vals, axis=1), jnp.concatenate(ids, axis=1)
+
+
+def _chunk_candidates(embs, masks, doc_ids, q_embs, q_masks, k: int, *,
+                      backend, block_docs, block_q, chunk_docs,
+                      pad_from: int | None = None):
+    """One doc array's exact-MaxSim candidates via the shared streaming
+    reduce loop, scoring each slab with the per-backend scorers."""
+    return _stream_chunk_topk(
+        masks.shape[0], chunk_docs, k,
+        lambda a, b: _score_block(embs[a:b], masks[a:b], q_embs, q_masks,
+                                  backend=backend, block_docs=block_docs,
+                                  block_q=block_q),
+        doc_ids=doc_ids, pad_from=pad_from)
+
+
+def _view_shapes(index: TokenIndex | PackedIndex):
+    """(global_docs, cap) per bucket view — the single source of the
+    shapes both :func:`_index_views` slices and the autotuner keys on."""
+    if isinstance(index, PackedIndex):
+        return [(b.n_docs, b.cap) for b in index.buckets]
+    return [index.d_masks.shape]
+
+
+def _index_views(index: TokenIndex | PackedIndex, n_shards: int = 1):
+    """Per-bucket (embs, masks, doc_ids) views with the doc axis padded
+    to place evenly over ``n_shards`` candidate shards."""
+    if isinstance(index, PackedIndex):
+        return [b.shard_view(index.dim, n_shards, index.n_docs)
+                for b in index.buckets]
+    n_docs, m = index.d_masks.shape
+    e, mk = index.d_embs, index.active_mask
+    ids = jnp.arange(n_docs, dtype=jnp.int32)
+    pad = (-n_docs) % max(n_shards, 1)
+    if pad:
+        e = jnp.pad(e, ((0, pad), (0, 0), (0, 0)))
+        mk = jnp.pad(mk, ((0, pad), (0, 0)))
+        ids = jnp.pad(ids, (0, pad), constant_values=n_docs)
+    return [(e, mk, ids if (pad or n_shards > 1) else None)]
+
+
+def _streaming_plan(index, n_q, l, dim, k, *, n_shards, block_docs,
+                    block_q, chunk_docs):
+    """Resolve (block_docs, block_q, chunk_docs) per bucket — one tuner
+    key per shard-local bucket shape.  Shared by :func:`topk_search`
+    (closure build) and ``RetrievalServer._warm_tuner`` (eager warm
+    outside jit), so in-trace resolutions always hit the cache."""
+    return [backend_lib.tuned_streaming_blocks(
+        n_q, nd, cap, l, dim, k, n_shards=n_shards, block_docs=block_docs,
+        block_q=block_q, chunk_docs=chunk_docs)
+        for nd, cap in _view_shapes(index)]
+
+
+def _topk_search_local(index, q_embs, q_masks, k, *, backend, plan):
+    views = _index_views(index)
+    vals, ids = [], []
+    for (e, mk, di), (bd, bq, cd) in zip(views, plan):
+        v, i = _chunk_candidates(e, mk, di, q_embs, q_masks, k,
+                                 backend=backend, block_docs=bd,
+                                 block_q=bq, chunk_docs=cd)
+        vals.append(v)
+        ids.append(i)
+    vals = jnp.concatenate(vals, axis=1)
+    ids = jnp.concatenate(ids, axis=1)
+    return _merge_topk(vals, ids, min(k, vals.shape[1]))
+
+
+def _topk_search_sharded(index, q_embs, q_masks, k, *, backend, plan,
+                         mesh, axes, n_shards):
+    """Distributed streaming top-k under ``shard_map``: every bucket's
+    doc axis is placed over the candidates mesh axes, each shard reduces
+    its local slice to (n_q, k) candidates, and one small all-gather of
+    those candidates (k * n_shards columns — never corpus-sized) feeds
+    the final merge.  Replicated output; bit-identical to the
+    single-device paths (the candidate set surviving each merge stage is
+    a superset of the true top-k, and every merge uses the same
+    (-score, id) total order)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    views = _index_views(index, n_shards)
+    n_docs = (index.n_docs if isinstance(index, PackedIndex)
+              else index.d_masks.shape[0])
+    if q_masks is None:
+        q_masks = jnp.ones(q_embs.shape[:2], bool)
+
+    def body(views, q, qm):
+        vals, ids = [], []
+        for (e, mk, di), (bd, bq, cd) in zip(views, plan):
+            v, i = _chunk_candidates(e, mk, di, q, qm, k, backend=backend,
+                                     block_docs=bd, block_q=bq,
+                                     chunk_docs=cd, pad_from=n_docs)
+            vals.append(v)
+            ids.append(i)
+        vals = jnp.concatenate(vals, axis=1)
+        ids = jnp.concatenate(ids, axis=1)
+        kl = min(k, vals.shape[1])
+        i, v = _merge_topk(vals, ids, kl)
+        if kl < k:      # k > docs-in-shard: pad so the gather is square
+            v = jnp.pad(v, ((0, 0), (0, k - kl)),
+                        constant_values=-jnp.inf)
+            i = jnp.pad(i, ((0, 0), (0, k - kl)), constant_values=n_docs)
+        gv = jax.lax.all_gather(v, axes)             # (n_shards, n_q, k)
+        gi = jax.lax.all_gather(i, axes)
+        gv = jnp.moveaxis(gv, 0, 1).reshape(v.shape[0], -1)
+        gi = jnp.moveaxis(gi, 0, 1).reshape(v.shape[0], -1)
+        # Root merge truncates to min(k, n_docs): with k > total docs
+        # the gathered columns still contain -inf/sentinel shard pads,
+        # and the single-device path returns only the real docs.
+        return _merge_topk(gv, gi, min(k, n_docs))
+
+    ax = axes if len(axes) > 1 else axes[0]
+    vspec = (P(ax, None, None), P(ax, None), P(ax))
+    out = shard_map(body, mesh=mesh,
+                    in_specs=([vspec] * len(views), P(None, None, None),
+                              P(None, None)),
+                    out_specs=(P(None, None), P(None, None)),
+                    check_rep=False)(views, q_embs, q_masks)
+    return out
+
+
+def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
+                k: int = 10, q_masks: jnp.ndarray | None = None,
+                backend: str | None = None, block_docs: int | None = None,
+                block_q: int | None = None, chunk_docs: int | None = None):
+    """Streaming exact top-k MaxSim: ``(top_idx, top_scores)``, each
+    (n_q, k), identical — ids and fp scores — to ``lax.top_k`` over
+    :func:`maxsim_scores`, without ever holding an (n_q, n_docs) score
+    matrix (asserted on the compiled HLO in tests/test_sharded_serving).
+
+    Dataflow: each capacity bucket (each ``chunk_docs`` slab of it, each
+    candidates-axis shard of it when the active sharding rules carry a
+    mesh — ``sharding.serve_rules(mesh)``) scores its local docs with
+    the normal per-backend scorers and immediately reduces to (n_q, k)
+    (score, global-doc-id) candidates; sort-merges by the (-score, id)
+    total order combine candidates up the tree, and under a mesh one
+    k-wide all-gather per shard feeds the root merge.  ``chunk_docs``
+    (and the usual serving blocks) default to the shape-aware autotuner,
+    keyed on the shard-local bucket shape.
+    """
+    backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
+    n_q, l = q_embs.shape[:2]
+    dim = q_embs.shape[-1]
+    n_docs = (index.n_docs if isinstance(index, PackedIndex)
+              else index.d_masks.shape[0])
+    if n_docs == 0:
+        return (jnp.zeros((n_q, 0), jnp.int32),
+                jnp.zeros((n_q, 0), jnp.float32))
+    mesh, axes, n_shards = mesh_axes_for("candidates")
+    plan = _streaming_plan(index, n_q, l, dim, k, n_shards=n_shards,
+                           block_docs=block_docs, block_q=block_q,
+                           chunk_docs=chunk_docs)
+    if mesh is not None and n_shards > 1:
+        return _topk_search_sharded(index, q_embs, q_masks, k,
+                                    backend=backend, plan=plan, mesh=mesh,
+                                    axes=axes, n_shards=n_shards)
+    return _topk_search_local(index, q_embs, q_masks, k, backend=backend,
+                              plan=plan)
+
+
+def _streaming_first_stage(index, q_embs, n_first: int):
+    """Chunked first-stage candidate selection: the pooled single-vector
+    scores stream through the same sort-merge as the exact path, so the
+    serving closure never holds the (n_q, n_docs) first-stage matrix
+    either.  Candidate ids come back in ``lax.top_k`` order (descending
+    score, ties to the lowest doc id) — identical to the materializing
+    stage 1."""
+    pooled = index.pooled()                           # (n_docs, dim)
+    pooled = constrain(pooled, "candidates", None)
+    q_pool = q_embs.mean(1)
+    n_docs = pooled.shape[0]
+    chunk = max(64, _pow2_at_least(2 * n_first))
+    vals, ids = _stream_chunk_topk(
+        n_docs, chunk, n_first, lambda a, b: q_pool @ pooled[a:b].T)
+    cand, _ = _merge_topk(vals, ids, n_first)
+    return cand
+
+
 def _gather_view(index: TokenIndex | PackedIndex):
     """(embs, masks) with one uniform token axis for the per-query
     candidate gather of the two-stage rerank.  Dense layout: the arrays
@@ -189,32 +434,11 @@ def _gather_view(index: TokenIndex | PackedIndex):
     return index.d_embs, index.active_mask
 
 
-def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
-           k: int = 10, n_first: int = 64, end_to_end: bool = False,
-           q_masks: jnp.ndarray | None = None,
-           backend: str | None = None, block_docs: int | None = None,
-           block_q: int | None = None):
-    """Two-stage (or e2e) retrieval. Returns (top_idx, top_scores, full).
-    ``block_docs``/``block_q`` default to autotuned (see maxsim_scores)."""
-    backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
-    n_docs = (index.n_docs if isinstance(index, PackedIndex)
-              else index.d_embs.shape[0])
-    if end_to_end or n_first >= n_docs:
-        scores = maxsim_scores(index, q_embs, q_masks, backend=backend,
-                               block_docs=block_docs, block_q=block_q)
-        scores = constrain(scores, "batch", "candidates")
-        top_scores, top_idx = jax.lax.top_k(scores, k)
-        return top_idx, top_scores, scores
-
-    pooled = index.pooled()                          # (n_docs, dim)
-    pooled = constrain(pooled, "candidates", None)
-    q_pool = q_embs.mean(1)
-    first = q_pool @ pooled.T                        # (n_q, n_docs)
-    _, cand = jax.lax.top_k(first, n_first)          # (n_q, n_first)
-
-    # Gather candidate docs and rerank with exact MaxSim.  The gather is
-    # the index lookup (cap_max-wide on the packed layout); only the
-    # *scoring* differs per backend.
+def _rerank_candidates(index, q_embs, q_masks, cand, *, backend,
+                       block_docs, block_q, n_docs):
+    """Exact MaxSim rerank of each query's own candidate set.  The
+    gather is the index lookup (cap_max-wide on the packed layout); only
+    the *scoring* differs per backend."""
     g_embs, g_masks = _gather_view(index)
     d_sub = g_embs[cand]                             # (n_q, n_first, m, dim)
     m_sub = g_masks[cand]
@@ -224,17 +448,65 @@ def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
         block_docs, _ = backend_lib.tuned_serving_blocks(
             q_embs.shape[0], n_docs, g_masks.shape[1], q_embs.shape[1],
             q_embs.shape[-1], block_docs, block_q)
-        rerank = colbert_maxsim_rerank_op(q_embs, d_sub, m_sub, q_masks,
-                                          block_d=block_docs)
+        return colbert_maxsim_rerank_op(q_embs, d_sub, m_sub, q_masks,
+                                        block_d=block_docs)
+    s = jnp.einsum("qld,qnmd->qnlm", q_embs, d_sub)
+    s = jnp.where(m_sub[:, :, None, :], s, NEG_INF)
+    best = s.max(-1)
+    if q_masks is not None:
+        best = jnp.where(q_masks[:, None, :], best, 0.0)
+    return best.sum(-1)                              # (n_q, n_first)
+
+
+def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
+           k: int = 10, n_first: int = 64, end_to_end: bool = False,
+           q_masks: jnp.ndarray | None = None,
+           backend: str | None = None, block_docs: int | None = None,
+           block_q: int | None = None, chunk_docs: int | None = None,
+           return_full: bool = True):
+    """Two-stage (or e2e) retrieval.
+
+    ``return_full=True`` (the metrics/benchmark contract) returns
+    (top_idx, top_scores, full) where ``full`` is the densified
+    (n_q, n_docs) score matrix — and therefore takes the materializing
+    path.  ``return_full=False`` (the serving default through
+    ``RetrievalServer``) returns only (top_idx, top_scores) and streams:
+    the e2e path routes through :func:`topk_search`, the two-stage path
+    through the chunked first stage — no (n_q, n_docs) tensor is built
+    on either.  Results are identical either way.  ``block_docs``/
+    ``block_q``/``chunk_docs`` default to autotuned (see maxsim_scores /
+    topk_search).
+    """
+    backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
+    n_docs = (index.n_docs if isinstance(index, PackedIndex)
+              else index.d_embs.shape[0])
+    if end_to_end or n_first >= n_docs:
+        if not return_full:
+            return topk_search(index, q_embs, k=k, q_masks=q_masks,
+                               backend=backend, block_docs=block_docs,
+                               block_q=block_q, chunk_docs=chunk_docs)
+        scores = maxsim_scores(index, q_embs, q_masks, backend=backend,
+                               block_docs=block_docs, block_q=block_q)
+        scores = constrain(scores, "batch", "candidates")
+        top_scores, top_idx = jax.lax.top_k(scores, k)
+        return top_idx, top_scores, scores
+
+    if not return_full:
+        cand = _streaming_first_stage(index, q_embs, n_first)
     else:
-        s = jnp.einsum("qld,qnmd->qnlm", q_embs, d_sub)
-        s = jnp.where(m_sub[:, :, None, :], s, NEG_INF)
-        best = s.max(-1)
-        if q_masks is not None:
-            best = jnp.where(q_masks[:, None, :], best, 0.0)
-        rerank = best.sum(-1)                        # (n_q, n_first)
+        pooled = index.pooled()                      # (n_docs, dim)
+        pooled = constrain(pooled, "candidates", None)
+        q_pool = q_embs.mean(1)
+        first = q_pool @ pooled.T                    # (n_q, n_docs)
+        _, cand = jax.lax.top_k(first, n_first)      # (n_q, n_first)
+
+    rerank = _rerank_candidates(index, q_embs, q_masks, cand,
+                                backend=backend, block_docs=block_docs,
+                                block_q=block_q, n_docs=n_docs)
     top_scores, local = jax.lax.top_k(rerank, min(k, n_first))
     top_idx = jnp.take_along_axis(cand, local, axis=1)
+    if not return_full:
+        return top_idx, top_scores
     # densify to full score matrix for metric computation; non-candidates
     # get the same NEG_INF sentinel masked scoring uses.
     full = jnp.full((q_embs.shape[0], n_docs), NEG_INF, rerank.dtype)
@@ -248,11 +520,19 @@ class RetrievalServer:
     ``index`` is either layout: the dense masked ``TokenIndex`` or the
     compacted ``PackedIndex`` artifact (typically loaded via
     ``repro.serve.index_io``).  ``backend`` is resolved once at
-    construction.  ``block_docs``/``block_q`` default to ``None`` —
-    autotuned per doc-array shape (per bucket on the packed layout);
-    :meth:`_closure_for` warms the tuner cache eagerly, OUTSIDE the
-    jitted closure, so steady-state traffic with a fixed batch shape
-    pays resolution exactly once.
+    construction.  Serving runs ``search(..., return_full=False)`` — the
+    streaming top-k dataflow: the e2e exact path goes through
+    :func:`topk_search` (per-bucket/per-shard merge, sharded over the
+    candidates mesh axis when the active ``sharding.serve_rules`` carry
+    a mesh), and no (n_q, n_docs) score matrix is ever densified on the
+    serving path (that matrix is the metrics benchmarks' opt-in,
+    ``return_full=True``).
+
+    ``block_docs``/``block_q``/``chunk_docs`` default to ``None`` —
+    autotuned per doc-array shape (per shard-local bucket shape on the
+    packed layout); :meth:`_closure_for` warms the tuner cache eagerly,
+    OUTSIDE the jitted closure, so steady-state traffic with a fixed
+    batch shape pays resolution exactly once.
 
     One closure is built per (n_q, l) query-batch shape and kept in a
     small LRU (``max_cached_closures``, default 32): under varied
@@ -265,6 +545,7 @@ class RetrievalServer:
     def __init__(self, index: TokenIndex | PackedIndex, *, k: int = 10,
                  n_first: int = 64, backend: str | None = None,
                  block_docs: int | None = None, block_q: int | None = None,
+                 chunk_docs: int | None = None,
                  max_cached_closures: int = 32):
         self.index = index
         self.k = k
@@ -273,12 +554,13 @@ class RetrievalServer:
                                                    allow=backend_lib.SERVING)
         self._block_docs = block_docs
         self._block_q = block_q
+        self._chunk_docs = chunk_docs
         self._max_cached = max(1, int(max_cached_closures))
         self._search = collections.OrderedDict()  # (n_q, l) -> jitted closure
 
     @staticmethod
     def _run(index, q, **kw):
-        return search(index, q, **kw)[:2]
+        return search(index, q, return_full=False, **kw)
 
     def _warm_index(self):
         """Materialize the packed index's derived serving views (pooled
@@ -295,12 +577,25 @@ class RetrievalServer:
         """Resolve every tuned block this query shape will need, outside
         jit (measured mode must never race inside a trace); the in-jit
         resolutions then hit the tuning cache."""
+        n_q, l = q_embs.shape[:2]
+        dim = q_embs.shape[-1]
+        n_docs = (self.index.n_docs if isinstance(self.index, PackedIndex)
+                  else self.index.d_masks.shape[0])
+        if self.n_first >= n_docs:
+            # e2e route only: topk_search is the sole consumer of the
+            # streaming keys, and resolving them (chunk_docs per
+            # shard-local bucket shape — needed on BOTH backends, the
+            # merge chunking is backend-agnostic) here means the
+            # closure's in-trace resolutions always hit the cache.
+            _, _, n_shards = mesh_axes_for("candidates")
+            _streaming_plan(self.index, n_q, l, dim, self.k,
+                            n_shards=n_shards, block_docs=self._block_docs,
+                            block_q=self._block_q,
+                            chunk_docs=self._chunk_docs)
         if self.backend != backend_lib.FUSED:
             return
         if self._block_docs is not None and self._block_q is not None:
             return
-        n_q, l = q_embs.shape[:2]
-        dim = q_embs.shape[-1]
         if isinstance(self.index, PackedIndex):
             for b in self.index.buckets:
                 backend_lib.tuned_serving_blocks(
@@ -313,7 +608,13 @@ class RetrievalServer:
                                          self._block_docs, self._block_q)
 
     def _closure_for(self, q_embs):
-        key = q_embs.shape[:2]
+        # The traced dataflow bakes in the ambient sharding context
+        # (topk_search resolves mesh/axes at trace time), so the mesh
+        # and candidate axes join the cache key — a closure traced
+        # outside a mesh must not keep serving single-device once the
+        # caller enters serve_rules(mesh), nor vice versa.
+        mesh, axes, _ = mesh_axes_for("candidates")
+        key = q_embs.shape[:2] + (mesh, axes)
         fn = self._search.get(key)
         if fn is None:
             self._warm_index()
@@ -321,7 +622,7 @@ class RetrievalServer:
             fn = jax.jit(functools.partial(
                 self._run, self.index, k=self.k, n_first=self.n_first,
                 backend=self.backend, block_docs=self._block_docs,
-                block_q=self._block_q))
+                block_q=self._block_q, chunk_docs=self._chunk_docs))
             self._search[key] = fn
             if len(self._search) > self._max_cached:
                 self._search.popitem(last=False)     # evict LRU shape

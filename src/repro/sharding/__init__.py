@@ -8,12 +8,15 @@ from repro.sharding.specs import (
     lm_rules_ep_moe,
     lm_train_rules,
     logical_to_spec,
+    mesh_axes_for,
     recsys_rules,
     recsys_rules_rowsharded,
+    serve_rules,
     spec_for,
 )
 
 __all__ = ["axis_rules", "constrain", "current_rules", "gnn_rules",
            "lm_decode_rules", "lm_prefill_rules", "lm_rules_ep_moe",
-           "lm_train_rules", "logical_to_spec", "recsys_rules",
-           "recsys_rules_rowsharded", "spec_for"]
+           "lm_train_rules", "logical_to_spec", "mesh_axes_for",
+           "recsys_rules", "recsys_rules_rowsharded", "serve_rules",
+           "spec_for"]

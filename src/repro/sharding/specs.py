@@ -62,6 +62,19 @@ def spec_for(*logical_axes: str | None) -> P:
     return logical_to_spec(tuple(logical_axes))
 
 
+def _outside_mesh_context(err: Exception) -> bool:
+    """True when a ``with_sharding_constraint`` failure happened because
+    no mesh context is active (the benign case ``constrain`` no-ops).
+    Checked structurally against the thread's mesh state so a JAX
+    message reword can't flip meshless hosts into raising; the error
+    text is only a fallback when the internal probe is unavailable."""
+    try:
+        from jax._src.mesh import thread_resources
+        return bool(thread_resources.env.physical_mesh.empty)
+    except Exception:
+        return "non-empty mesh" in str(err)
+
+
 def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
     """Apply a sharding constraint by logical axis names (no-op w/o rules)."""
     rules = current_rules()
@@ -70,9 +83,43 @@ def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
     spec = logical_to_spec(tuple(logical_axes), rules)
     try:
         return jax.lax.with_sharding_constraint(x, spec)
-    except Exception:
-        # Outside a mesh context (e.g. pure CPU eval) constraints are moot.
-        return x
+    except RuntimeError as e:
+        # Outside a mesh context (e.g. pure CPU eval) constraints are moot
+        # — but ONLY that case may be swallowed.  Genuine sharding errors
+        # (wrong-rank specs, divisibility failures) used to vanish into a
+        # blanket ``except Exception`` here; they re-raise now.
+        if _outside_mesh_context(e):
+            return x
+        raise
+
+
+def mesh_axes_for(logical: str, rules: dict | None = None):
+    """Resolve one logical axis to ``(mesh, mesh_axes, n_shards)`` under
+    the active rules.
+
+    ``with_sharding_constraint`` only needs a *spec*; explicit SPMD code
+    (``shard_map`` callers like the streaming top-k merge) needs the
+    concrete mesh too, which rule sets carry under the ``"__mesh__"``
+    key (the convention the a2a embedding exchange established).
+    Returns ``(None, (), 1)`` when no mesh is carried or the logical
+    axis is replicated; mesh axes missing from the mesh are dropped.
+    """
+    rules = rules if rules is not None else (current_rules() or {})
+    mesh = rules.get("__mesh__")
+    if mesh is None:
+        return None, (), 1
+    axes = rules.get(logical)
+    if axes is None:
+        return None, (), 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in getattr(mesh, "axis_names", ()))
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if not axes or n <= 1:
+        return None, (), 1
+    return mesh, axes, n
 
 
 # Canonical rule sets -------------------------------------------------------
@@ -170,4 +217,31 @@ def recsys_rules_rowsharded(multi_pod: bool) -> dict:
     r = recsys_rules(multi_pod)
     r["table_axis"] = None
     r["table_rows"] = ("model",)
+    return r
+
+
+def serve_rules(mesh=None) -> dict:
+    """Retrieval-serving rule set (sharded-bucket serving).
+
+    Queries are replicated (every shard scores its local docs against
+    the whole query batch); the corpus doc axis — logical "candidates",
+    which both the dense index and every packed capacity bucket carry as
+    their leading axis — shards over the ``model`` mesh axis.  A serving
+    mesh (``launch.mesh.make_serve_mesh``) puts every device on that
+    axis, so "candidates" spans the whole host/pod.
+
+    Passing ``mesh`` embeds it under ``"__mesh__"`` so explicit-SPMD
+    consumers (the streaming top-k merge's ``shard_map``, the sharded
+    ``global_keep_masks`` merge) can reach the concrete mesh; without it
+    the rules still drive ``constrain`` specs but the streaming merge
+    stays single-device.
+    """
+    r = {
+        "batch": None,
+        "candidates": ("model",),
+        "embed": None,
+        "seq": None,
+    }
+    if mesh is not None:
+        r["__mesh__"] = mesh
     return r
