@@ -188,6 +188,124 @@ def run_streaming_serving(n_q=32, n_docs=256, m=128, l=32, dim=128, k=10):
     }
 
 
+# Grid-placement bench shape: small enough that the 2x2 forced-device
+# subprocess stays fast, big enough for several capacity buckets.
+GRID = dict(n_q=8, n_docs=96, m=32, l=8, dim=32, k=10, hosts=2)
+
+
+def run_grid_serving(**shape):
+    """Multi-host placement comparison (DESIGN_BACKENDS.md §Placement):
+    the flat single-tier candidates layout vs the 2-D grid (buckets
+    pinned to host groups, per-group merge + cross-group candidate
+    exchange), on a 4-device forced grid in a subprocess.  Records q/s
+    for both layouts, the wire bytes the candidate exchange moves
+    (total and the cross-host share — the number placement exists to
+    shrink), a results-identical bit against the single-device oracle,
+    and whether the compiled per-group HLO is free of corpus-sized
+    tensors.  ``--check`` gates the parity and HLO bits.
+
+    Returns ``{"skipped": reason}`` when the platform cannot form a
+    >= 2x1 grid (e.g. a TPU backend with < 4 devices, where the forced
+    host-platform flag does not apply)."""
+    import subprocess
+    shape = GRID | shape
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                      os.pardir))]
+        + [os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        os.pardir, "src"))]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_kernel_backends",
+         "--grid-worker", json.dumps(shape)],
+        env=env, capture_output=True, text=True, timeout=540)
+    if out.returncode != 0:
+        raise RuntimeError(f"grid bench worker failed:\n{out.stderr[-2000:]}")
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("GRID_RESULT ")][-1]
+    return json.loads(line[len("GRID_RESULT "):])
+
+
+def _grid_worker(shape: dict) -> dict:
+    """Runs inside the forced-device subprocess; prints one
+    ``GRID_RESULT {json}`` line."""
+    import re as re_
+
+    from repro.launch.mesh import default_serve_hosts, make_serve_mesh
+    from repro.serve.retrieval import topk_search, topk_search_group
+    from repro.sharding import PlacementPlan, axis_rules, serve_rules
+
+    hosts = int(shape["hosts"])
+    n_dev = len(jax.devices())
+    if n_dev < 2 * hosts or default_serve_hosts() < 2:
+        return {"skipped": f"needs {2 * hosts} devices, have {n_dev}"}
+    n_q, n_docs, m, l, dim, k = (shape[x] for x in
+                                 ("n_q", "n_docs", "m", "l", "dim", "k"))
+    key = jax.random.PRNGKey(0)
+    d = jax.random.normal(key, (n_docs, m, dim))
+    n_real = jax.random.randint(jax.random.fold_in(key, 1), (n_docs,),
+                                1, m + 1)
+    masks = jnp.arange(m)[None] < n_real[:, None]
+    keep = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.6,
+                                (n_docs, m))
+    packed = TokenIndex.build(d, masks).with_keep(keep).pack()
+    q = jax.random.normal(jax.random.fold_in(key, 3), (n_q, l, dim))
+
+    i_ref, s_ref = topk_search(packed, q, k=k)      # single-device oracle
+    flat_mesh = make_serve_mesh()                   # every device, one tier
+    grid_mesh = make_serve_mesh(hosts=hosts)
+    placement = PlacementPlan.for_index(packed, hosts)
+    n_cand = grid_mesh.shape["candidates"]
+
+    with axis_rules(serve_rules(flat_mesh)):
+        f_flat = jax.jit(lambda qq: topk_search(packed, qq, k=k))
+        i_f, s_f = f_flat(q)
+        t_flat, _ = common.timeit(lambda: f_flat(q), repeat=2)
+    with axis_rules(serve_rules(grid_mesh, placement=placement)):
+        i_g, s_g = topk_search(packed, q, k=k)      # eager: x-group hop
+        t_grid, _ = common.timeit(lambda: topk_search(packed, q, k=k),
+                                  repeat=2)
+        pat = re_.compile(rf"{n_q}x{n_docs}x|\[{n_q},{n_docs}[\],]")
+        hlo_clean = True
+        for g in range(hosts):
+            low = jax.jit(lambda qq, g=g: topk_search_group(
+                packed, qq, group=g, k=k)).lower(q)
+            if pat.search(low.as_text()) or pat.search(
+                    low.compile().as_text()):
+                hlo_clean = False
+    identical = all(
+        bool((np.asarray(a) == np.asarray(b)).all())
+        for a, b in ((i_ref, i_f), (s_ref, s_f), (i_ref, i_g),
+                     (s_ref, s_g)))
+
+    # Candidate-exchange wire bytes per query batch (8 = f32 score +
+    # i32 id).  Flat: every shard all-gathers its (n_q, k) block to
+    # every other; with shards laid out in host rows of n_cand, the
+    # receives from outside a device's row cross hosts.  Grid: tier-1
+    # gathers stay inside a group (intra-host); tier-2 ships one
+    # (n_q, k) block per group — the only cross-host bytes.
+    cand = n_q * k * 8
+    bytes_flat = n_dev * (n_dev - 1) * cand
+    bytes_flat_cross = n_dev * (n_dev - n_cand) * cand
+    bytes_grid = hosts * n_cand * (n_cand - 1) * cand + hosts * cand
+    bytes_grid_cross = hosts * cand
+    return {
+        "flat": n_q / t_flat,
+        "grid": n_q / t_grid,
+        "speedup_grid_over_flat": t_flat / t_grid,
+        "results_identical": identical,
+        "hlo_no_corpus_matrix": bool(hlo_clean),
+        "exchange_bytes": {"flat": bytes_flat, "grid": bytes_grid,
+                           "flat_cross_host": bytes_flat_cross,
+                           "grid_cross_host": bytes_grid_cross},
+        "cross_host_bytes_ratio_flat_over_grid":
+            bytes_flat_cross / bytes_grid_cross,
+        "shape": dict(shape, n_devices=n_dev, n_cand=n_cand),
+    }
+
+
 def load_trajectory(path: str = OUT_PATH) -> list[dict]:
     """Read the trajectory entries; a legacy single-record dict (PR 1
     wrote one overwritten object) is adopted as the first entry."""
@@ -267,6 +385,27 @@ def check_last(path: str = OUT_PATH) -> None:
     print(f"throughput smoke OK: streaming serving {st:.2f} q/s vs "
           f"materializing {mt:.2f} q/s ({st / mt:.2f}x, HLO clean, "
           f"results identical)")
+    grid = last.get("grid_serving")
+    if grid is None:
+        raise SystemExit(f"{path}: last entry predates grid placement "
+                         "serving; re-run the bench")
+    if grid.get("skipped"):
+        print(f"grid placement smoke SKIPPED: {grid['skipped']}")
+        return
+    if not grid.get("results_identical", False):
+        raise SystemExit(
+            "PARITY REGRESSION: grid-placed serving diverged from the "
+            f"single-device oracle at shape {grid.get('shape')}")
+    if not grid.get("hlo_no_corpus_matrix", False):
+        raise SystemExit(
+            "HLO REGRESSION: a corpus-sized tensor appeared in a "
+            f"compiled per-group grid program (shape {grid.get('shape')})")
+    xb = grid["exchange_bytes"]
+    print(f"grid placement smoke OK: grid {grid['grid']:.2f} q/s vs flat "
+          f"{grid['flat']:.2f} q/s; cross-host exchange "
+          f"{xb['grid_cross_host']} B vs {xb['flat_cross_host']} B "
+          f"({grid['cross_host_bytes_ratio_flat_over_grid']:.1f}x less, "
+          f"parity + HLO clean)")
 
 
 def main():
@@ -275,6 +414,7 @@ def main():
     rerank = run_rerank_backends(**RERANK)
     layout = run_packed_serving()
     stream = run_streaming_serving()
+    grid = run_grid_serving()
 
     for name in PRUNING_BACKENDS:
         common.csv_line(f"kernel_backends/pruning_{name}",
@@ -326,6 +466,22 @@ def main():
         f"speedup={stream['speedup_streaming_over_materializing']:.2f}x;"
         f"peak_temp_bytes={pb_s}/{pb_m};"
         f"hlo_clean={stream['hlo_no_corpus_matrix']}")
+    if grid.get("skipped"):
+        common.csv_line("kernel_backends/serving_grid_skipped", 0.0,
+                        f"reason={grid['skipped']}")
+    else:
+        for name in ("flat", "grid"):
+            common.csv_line(f"kernel_backends/serving_placement_{name}",
+                            1e6 / grid[name], f"q_per_s={grid[name]:.2f}")
+        grid_ok = (grid["results_identical"]
+                   and grid["hlo_no_corpus_matrix"])
+        common.csv_line(
+            "kernel_backends/CLAIM_grid_placement_shrinks_cross_host_bytes",
+            0.0,
+            f"holds={grid_ok};cross_host_bytes_ratio="
+            f"{grid['cross_host_bytes_ratio_flat_over_grid']:.1f}x;"
+            f"parity={grid['results_identical']};"
+            f"hlo_clean={grid['hlo_no_corpus_matrix']}")
 
     entry = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -370,12 +526,21 @@ def main():
             stream["speedup_streaming_over_materializing"] >= 1.0
             and stream["hlo_no_corpus_matrix"]
             and stream["results_identical"]),
+        "grid_serving": grid,
+        "claim_grid_placement_parity_and_clean_hlo": bool(
+            grid.get("skipped")
+            or (grid["results_identical"]
+                and grid["hlo_no_corpus_matrix"])),
     }
     append_entry(entry)
 
 
 if __name__ == "__main__":
-    if "--check" in sys.argv[1:]:
+    argv = sys.argv[1:]
+    if "--grid-worker" in argv:
+        shape = json.loads(argv[argv.index("--grid-worker") + 1])
+        print("GRID_RESULT " + json.dumps(_grid_worker(shape)))
+    elif "--check" in argv:
         check_last()
     else:
         main()

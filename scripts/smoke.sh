@@ -2,10 +2,11 @@
 # Tier-1 smoke: the exact ROADMAP verify command plus the kernel
 # micro-benches (Pallas interpreter off-TPU), the backend-dispatch perf
 # record, the throughput gates (fails if batched bucketed pruning
-# regresses below the reference path, or packed serving below the
-# masked path, at the bench shapes), and the packed-index lifecycle
-# roundtrip (prune -> pack -> save on the first serve run, load -> query
-# on the second — the offline/online split a real deployment uses).
+# regresses below the reference path, if packed serving drops below the
+# masked path, or if grid-placed serving loses parity/HLO cleanliness,
+# at the bench shapes), and the packed-index lifecycle roundtrip
+# (prune -> pack -> save on the first serve run, load -> query on the
+# second — the offline/online split a real deployment uses).
 # Run from anywhere; zstandard is optional (checkpointing falls back to
 # uncompressed bodies).
 set -euo pipefail
@@ -15,6 +16,14 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m pytest -x -q
 python -m benchmarks.run kernels kernel_backends
 python -m benchmarks.bench_kernel_backends --check
+
+# 4-device grid parity subset (tests/_grid_cases.py, the same case
+# bodies the test_placement.py subprocess fixtures run): every push
+# exercises the multi-host merge-tree tier — per-group candidate
+# reduction + cross-group exchange — bit-identical to the dense oracle.
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src:tests${PYTHONPATH:+:$PYTHONPATH} \
+  python -c "import _grid_cases; _grid_cases.main()" | grep -q GRID_CASES_OK
 
 index_dir="$(mktemp -d)/packed_index"
 trap 'rm -rf "$(dirname "$index_dir")"' EXIT
@@ -29,4 +38,14 @@ XLA_FLAGS=--xla_force_host_platform_device_count=2 \
   python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
   --mesh host --n-first 0 \
   | grep -E "2 candidate shards|route: e2e" | wc -l | grep -q 2
+# grid placement lifecycle: sharded prune -> placement-split artifact
+# (per-host-group sub-manifests) -> grid serving with the per-group
+# merge + cross-group candidate exchange on a fresh 2x2 device grid.
+grid_dir="$(dirname "$index_dir")/grid_index"
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  python -m repro.launch.serve --arch colbert --index-dir "$grid_dir" \
+  --mesh grid --n-first 0 \
+  | grep -E "host-group bodies|grid serving mesh|route: e2e" | wc -l \
+  | grep -q 3
+test -f "$grid_dir/packed_index.group0.json"
 echo "smoke OK"

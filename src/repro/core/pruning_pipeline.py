@@ -39,11 +39,17 @@ The per-bucket ``(rank == width) -> m`` / order-padding fixups translate
 the bucket-local "never removed" sentinels back to corpus-global
 conventions; see `_scatter_bucket`.
 
-Multi-host note: buckets are embarrassingly parallel across the `data`
-mesh axis like the flat batch path, and `global_keep_masks` now shards
-its merge over `data` too (bitwise-selection cut, O(log) scalar
-collectives — see voronoi._global_keep_masks_sharded) whenever the
-active sharding rules carry a mesh, so prune -> pack -> serve is
+Multi-host note: the bucket *plan* stays host-side (it is
+data-dependent layout), but the per-bucket compute no longer does —
+when the active sharding rules carry a mesh with a ``data`` axis wider
+than 1 (or ``sharded=True`` forces it), each bucket's doc axis is
+placed over ``data`` under ``shard_map`` and every shard runs the
+selected backend on its local slice (per-document pruning is
+embarrassingly parallel, so results stay bit-identical — asserted
+against the unsharded path in tests/test_placement.py).
+`global_keep_masks` shards its merge over `data` the same way
+(bitwise-selection cut, O(log) scalar collectives — see
+voronoi._global_keep_masks_sharded), so prune -> pack -> serve is
 distributed end to end.
 """
 
@@ -54,6 +60,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_lib
 from repro.core import voronoi
 from repro.core.tuning import _pow2_at_least
 
@@ -143,19 +150,53 @@ def _scatter_bucket(ranks, errs, orders, bucket, local, m: int):
     orders[bucket.indices, :o.shape[1]] = o
 
 
+def _bucket_order_sharded(e, k, samples, mesh, **kw):
+    """One bucket's pruning orders under ``shard_map`` over ``data``:
+    the doc axis is padded to a multiple of the shard count with
+    all-masked documents (the pipeline already translates their
+    sentinel outputs, and pad rows are dropped on the way out), every
+    shard runs the normal batch path on its local slice, and the
+    outputs shard straight back over ``data``.  Per-document pruning
+    touches no cross-document state, so this is bit-identical to the
+    unsharded dispatch."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n_b = e.shape[0]
+    n_shards = mesh.shape["data"]
+    pad = (-n_b) % n_shards
+    if pad:
+        e = jnp.pad(e, ((0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, pad), (0, 0)))
+
+    def body(eb, kb, s):
+        return voronoi.pruning_order_batch(eb, kb, s, **kw)
+
+    r, er, o = shard_map(body, mesh=mesh,
+                         in_specs=(P("data", None, None), P("data", None),
+                                   P(None, None)),
+                         out_specs=(P("data", None),) * 3,
+                         check_rep=False)(e, k, samples)
+    return r[:n_b], er[:n_b], o[:n_b]
+
+
 def pruning_order_bucketed(d_embs, d_masks, samples, *, step_size: int = 1,
                            fast: bool = False, bf16_scores: bool = False,
                            shortlist: bool = False,
                            backend: str | None = None,
                            granularity: int | str = "pow2",
                            min_width: int = 8,
-                           plan: list[Bucket] | None = None):
+                           plan: list[Bucket] | None = None,
+                           sharded: bool | None = None):
     """Length-bucketed equivalent of `voronoi.pruning_order_batch`.
 
     Same signature semantics and bit-identical (ranks, errs, orders);
     see the module docstring for the why and the exactness argument.
     ``plan`` overrides the computed :func:`bucket_plan` (reuse it when
-    pruning several sample sets over one corpus).
+    pruning several sample sets over one corpus).  ``sharded`` selects
+    the ``shard_map``-over-``data`` bucket compute (:func:`_data_mesh`
+    policy: auto under a data mesh, forced with ``True``); the plan
+    itself is always computed once, host-side.
     """
     n_docs, m = d_masks.shape
     order_len = _order_len(m, step_size)
@@ -168,6 +209,16 @@ def pruning_order_bucketed(d_embs, d_masks, samples, *, step_size: int = 1,
     if plan is None:
         plan = bucket_plan(effective_lengths(d_masks), m,
                            granularity=granularity, min_width=min_width)
+    from repro.sharding.specs import data_mesh_for
+    mesh = data_mesh_for(sharded, who="pruning_order_bucketed")
+    # Only non-reference backends consume the pruning tuner's knobs —
+    # skipping the warm for reference keeps measured mode
+    # (REPRO_AUTOTUNE=measure) from racing kernels nobody will run.
+    needs_tuner = (mesh is not None
+                   and voronoi.resolve_pruning_backend(
+                       backend, shortlist=shortlist, fast=fast,
+                       bf16_scores=bf16_scores, step_size=step_size)
+                   != backend_lib.REFERENCE)
 
     # Stream buckets: slice + dispatch everything first (async dispatch
     # overlaps bucket i's compute with bucket i+1's staging — the
@@ -177,9 +228,19 @@ def pruning_order_bucketed(d_embs, d_masks, samples, *, step_size: int = 1,
         idx = jnp.asarray(bucket.indices)
         e = jnp.take(d_embs, idx, axis=0)[:, :bucket.width]
         k = jnp.take(d_masks, idx, axis=0)[:, :bucket.width]
-        out = voronoi.pruning_order_batch(
-            e, k, samples, step_size=step_size, fast=fast,
-            bf16_scores=bf16_scores, shortlist=shortlist, backend=backend)
+        kw = dict(step_size=step_size, fast=fast, bf16_scores=bf16_scores,
+                  shortlist=shortlist, backend=backend)
+        if mesh is not None:
+            if needs_tuner:
+                # Warm the tuner for this bucket shape OUTSIDE the
+                # trace: the in-trace knob resolutions then hit the
+                # cache (measured mode must never race inside shard_map
+                # tracing).
+                backend_lib.tuned("pruning", n_samples=samples.shape[0],
+                                  m=bucket.width, dim=d_embs.shape[-1])
+            out = _bucket_order_sharded(e, k, samples, mesh, **kw)
+        else:
+            out = voronoi.pruning_order_batch(e, k, samples, **kw)
         in_flight.append((bucket, out))
     for bucket, out in in_flight:
         _scatter_bucket(ranks, errs, orders, bucket, out, m)
@@ -189,12 +250,19 @@ def pruning_order_bucketed(d_embs, d_masks, samples, *, step_size: int = 1,
 def prune_corpus(d_embs, d_masks, samples, keep_fraction: float, *,
                  backend: str | None = None, shortlist: bool = False,
                  step_size: int = 1, granularity: int | str = "pow2",
-                 min_width: int = 8):
+                 min_width: int = 8, sharded: bool | None = None):
     """Corpus-level pruning, end to end: bucketed per-doc orders merged
     into global keep masks (§4.2) under a corpus-wide token budget.
-    Returns (keep_masks (n_docs, m), ranks, errs)."""
+    Returns (keep_masks (n_docs, m), ranks, errs).
+
+    ``sharded`` distributes BOTH halves over the ``data`` mesh axis —
+    the per-bucket orders (:func:`pruning_order_bucketed`) and the
+    global merge (``voronoi.global_keep_masks``) — with the same
+    auto/force/off policy; results are bit-identical either way."""
     ranks, errs, _ = pruning_order_bucketed(
         d_embs, d_masks, samples, backend=backend, shortlist=shortlist,
-        step_size=step_size, granularity=granularity, min_width=min_width)
-    keep = voronoi.global_keep_masks(ranks, errs, d_masks, keep_fraction)
+        step_size=step_size, granularity=granularity, min_width=min_width,
+        sharded=sharded)
+    keep = voronoi.global_keep_masks(ranks, errs, d_masks, keep_fraction,
+                                     sharded=sharded)
     return keep, ranks, errs

@@ -509,6 +509,25 @@ def pruning_order_shortlist(d_emb: jax.Array, d_mask: jax.Array,
         block_s=block_s, block_t=block_t)
 
 
+def resolve_pruning_backend(backend: str | None, *, shortlist: bool = False,
+                            fast: bool = False, bf16_scores: bool = False,
+                            step_size: int = 1) -> str:
+    """:func:`pruning_order_batch`'s backend-resolution policy
+    (shortlist aliasing, fast/bf16 implying reference, the per-
+    step_size allow set), factored out so the bucketed pipeline can
+    consult the same answer — e.g. to skip tuner warms on the
+    reference path — without drifting from the batch entry point."""
+    if backend == backend_lib.SHORTLIST:
+        backend, shortlist = None, True
+    if backend is None and shortlist and step_size == 1:
+        backend = backend_lib.SHORTLIST
+    elif backend is None and (fast or bf16_scores):
+        backend = backend_lib.REFERENCE
+    allow = (backend_lib.PRUNING if step_size == 1
+             else (backend_lib.REFERENCE, backend_lib.FUSED))
+    return backend_lib.resolve_backend(backend, allow=allow)
+
+
 def pruning_order_batch(d_embs: jax.Array, d_masks: jax.Array,
                         samples: jax.Array, *, step_size: int = 1,
                         fast: bool = False, bf16_scores: bool = False,
@@ -541,15 +560,9 @@ def pruning_order_batch(d_embs: jax.Array, d_masks: jax.Array,
         return pruning_pipeline.pruning_order_bucketed(
             d_embs, d_masks, samples, step_size=step_size, fast=fast,
             bf16_scores=bf16_scores, shortlist=shortlist, backend=backend)
-    if backend == backend_lib.SHORTLIST:
-        backend, shortlist = None, True
-    if backend is None and shortlist and step_size == 1:
-        backend = backend_lib.SHORTLIST
-    elif backend is None and (fast or bf16_scores):
-        backend = backend_lib.REFERENCE
-    allow = (backend_lib.PRUNING if step_size == 1
-             else (backend_lib.REFERENCE, backend_lib.FUSED))
-    backend = backend_lib.resolve_backend(backend, allow=allow)
+    backend = resolve_pruning_backend(backend, shortlist=shortlist,
+                                      fast=fast, bf16_scores=bf16_scores,
+                                      step_size=step_size)
     n, m, dim = samples.shape[0], d_embs.shape[1], d_embs.shape[-1]
     if backend in (backend_lib.FUSED, backend_lib.SHORTLIST_TOPK) and (
             fast or bf16_scores):
@@ -719,21 +732,12 @@ def global_keep_masks(ranks: jax.Array, errs: jax.Array, d_masks: jax.Array,
 
     ranks/errs/d_masks: (n_docs, m).  Returns keep masks (n_docs, m).
     """
-    if sharded is None or sharded:
-        from repro.sharding.specs import current_rules
-        mesh = (current_rules() or {}).get("__mesh__")
-        ok = (mesh is not None
-              and "data" in getattr(mesh, "axis_names", ())
-              and mesh.shape["data"] > 1)
-        if sharded and not ok:
-            raise ValueError(
-                "global_keep_masks(sharded=True) needs active sharding "
-                "rules carrying a '__mesh__' with a data axis wider "
-                "than 1 (see sharding.serve_rules / axis_rules)")
-        if ok:
-            return _global_keep_masks_sharded(ranks, errs, d_masks,
-                                              keep_fraction, mesh=mesh,
-                                              axis="data")
+    from repro.sharding.specs import data_mesh_for
+    mesh = data_mesh_for(sharded, who="global_keep_masks")
+    if mesh is not None:
+        return _global_keep_masks_sharded(ranks, errs, d_masks,
+                                          keep_fraction, mesh=mesh,
+                                          axis="data")
     n_docs, m = ranks.shape
     mono_err = _monotone_merge_errs(ranks, errs, d_masks)
     n_total = jnp.sum(d_masks)

@@ -25,10 +25,40 @@ def make_host_mesh():
     return jax.make_mesh((data, 1), ("data", "model"))
 
 
-def make_serve_mesh():
-    """Serving mesh: every local device on the `model` axis — the axis
-    the serving rule set (``sharding.serve_rules``) places the corpus
-    doc axis ("candidates") over, so the streaming top-k merge shards
-    each capacity bucket across the whole host."""
+def make_serve_mesh(hosts: int = 1):
+    """Serving mesh.
+
+    ``hosts=1`` (default): the flat host mesh — every local device on
+    the ``model`` axis, which the serving rule set
+    (``sharding.serve_rules``) places the corpus doc axis
+    ("candidates") over, so the streaming top-k merge shards each
+    capacity bucket across the whole host.
+
+    ``hosts>1``: the multi-host placement grid — a 2-D
+    ``hosts x candidates`` mesh where each row of devices is one host
+    group.  A ``sharding.PlacementPlan`` pins every packed capacity
+    bucket to one group; the bucket's doc axis spans that group's
+    ``candidates`` devices, and the streaming merge exchanges one
+    ``(n_q, k)`` candidate block per *group* instead of per shard
+    (DESIGN_BACKENDS.md §Placement).  The device count must divide
+    evenly into rows.
+    """
     n = max(1, len(jax.devices()))
-    return jax.make_mesh((1, n), ("data", "model"))
+    if hosts <= 1:
+        return jax.make_mesh((1, n), ("data", "model"))
+    if n % hosts:
+        raise ValueError(
+            f"make_serve_mesh(hosts={hosts}): {n} devices do not divide "
+            f"into {hosts} host groups")
+    return jax.make_mesh((hosts, n // hosts), ("hosts", "candidates"))
+
+
+def default_serve_hosts() -> int:
+    """Auto host-group count for ``--mesh grid``: the largest power of
+    two ``h`` with ``h * h <= n_devices`` that divides the device count
+    (4 devices -> a 2x2 grid; 1-2 devices -> 1, i.e. the flat mesh)."""
+    n = max(1, len(jax.devices()))
+    h = 1
+    while 2 * h * (2 * h) <= n and n % (2 * h) == 0:
+        h *= 2
+    return h

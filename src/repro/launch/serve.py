@@ -38,7 +38,8 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
                     index_dir: str | None = None,
                     compress: str = "none",
                     mesh: str = "none",
-                    n_first: int = 64):
+                    n_first: int = 64,
+                    hosts: int = 0):
     cfg = configs.get("colbert").smoke
     params = colbert_lib.init_params(jax.random.PRNGKey(seed), cfg)
     if ckpt_dir:
@@ -49,6 +50,8 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
     corpus = synthetic.token_corpus(seed, n_docs=256, n_q=n_queries,
                                     vocab=cfg.vocab, m=cfg.doc_len,
                                     l=cfg.query_len)
+    if mesh == "grid" and hosts <= 0:
+        hosts = mesh_lib.default_serve_hosts()
     if index_dir and index_io.has_index(index_dir):
         # Online half of the lifecycle: the pruning job already ran and
         # the artifact is authoritative — this run's pruning/packing
@@ -75,18 +78,32 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
         samples = sample_sphere(jax.random.PRNGKey(1), 2048, cfg.out_dim)
         # Length-bucketed corpus pruning: short documents run in narrow
         # shape buckets instead of paying full-doc_len padding per step.
-        keep, ranks, errs = pruning_pipeline.prune_corpus(
-            d_emb, d_mask, samples, keep_fraction, backend=backend)
+        # Under a multi-device mesh the whole job distributes: each
+        # bucket's doc axis shards over `data` (shard_map) and the §4.2
+        # global merge runs its bitwise-selection cut — bit-identical to
+        # the single-device path either way.
+        prune_ctx = contextlib.nullcontext()
+        if mesh in ("host", "grid") and len(jax.devices()) > 1:
+            data_mesh = mesh_lib.make_host_mesh()
+            print(f"[serve] sharded pruning over data={data_mesh.shape['data']}")
+            prune_ctx = shlib.axis_rules({"__mesh__": data_mesh})
+        with prune_ctx:
+            keep, ranks, errs = pruning_pipeline.prune_corpus(
+                d_emb, d_mask, samples, keep_fraction, backend=backend)
         pruned = index.with_keep(keep)
         print(f"[serve] masked (reported): {pruned.storage()}")
         packed = pruned.pack(compression=compress)
         print(f"[serve] packed (measured): {packed.storage()}")
         if index_dir:
-            index_io.save_index(index_dir, packed)
+            placement = (shlib.PlacementPlan.for_index(packed, hosts)
+                         if mesh == "grid" and hosts > 1 else None)
+            index_io.save_index(index_dir, packed, placement=placement)
             # Serve what is on disk, not what is in memory: the reload
             # exercises the exact artifact a later job would start from.
             packed = index_io.load_index(index_dir)
-            print(f"[serve] saved + reloaded packed index at {index_dir}")
+            print(f"[serve] saved + reloaded packed index at {index_dir}"
+                  + (f" ({placement.n_groups} host-group bodies)"
+                     if placement else ""))
     # shortlist is a pruning-only path; serving falls back to the default.
     serve_backend = backend if backend in backend_lib.SERVING else None
     # --mesh host: every local device on the candidates axis; the server
@@ -104,6 +121,38 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
         print(f"[serve] sharded serving mesh: {serve_mesh} "
               f"({n_shards} candidate shard{'s' if n_shards != 1 else ''})")
         ctx = shlib.axis_rules(shlib.serve_rules(serve_mesh))
+    elif mesh == "grid" and hosts > 1:
+        # --mesh grid: the multi-host placement layout.  Buckets pin to
+        # host groups (PlacementPlan), each group's row of the
+        # hosts x candidates mesh serves its own buckets, and only
+        # (n_q, k) candidate blocks cross groups (DESIGN_BACKENDS.md
+        # §Placement).  A saved artifact's plan is authoritative: the
+        # mesh follows ITS group count when the device count can form
+        # that grid; otherwise the plan is rebalanced for this machine
+        # (with a warning — the artifact on disk keeps its layout).
+        placement = index_dir and index_io.load_placement(index_dir)
+        if placement and placement.n_groups != hosts:
+            if len(jax.devices()) % placement.n_groups == 0:
+                print(f"[serve] --hosts {hosts} overridden by the "
+                      f"artifact's placement ({placement.n_groups} "
+                      "host groups)")
+                hosts = placement.n_groups
+            else:
+                print(f"[serve] WARNING: artifact placement has "
+                      f"{placement.n_groups} host groups but "
+                      f"{len(jax.devices())} devices cannot form that "
+                      f"grid; rebalancing for {hosts} groups")
+                placement = None
+        placement = placement or shlib.PlacementPlan.for_index(packed,
+                                                               hosts)
+        serve_mesh = mesh_lib.make_serve_mesh(hosts=hosts)
+        print(f"[serve] grid serving mesh: {dict(serve_mesh.shape)} "
+              f"(placement groups={list(placement.groups)})")
+        ctx = shlib.axis_rules(shlib.serve_rules(serve_mesh,
+                                                 placement=placement))
+    elif mesh == "grid":
+        print("[serve] --mesh grid needs >= 2 host groups of >= 1 device; "
+              "serving unsharded (set --hosts or add devices)")
     if n_first <= 0:
         n_first = packed.n_docs                  # e2e exact-sweep route
     route = "e2e" if n_first >= packed.n_docs else "two-stage"
@@ -157,10 +206,18 @@ def main():
                          "it first (repro.serve.index_io)")
     ap.add_argument("--compress", default="none", choices=["none", "int8"],
                     help="token compression when packing a new index")
-    ap.add_argument("--mesh", default="none", choices=["none", "host"],
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "host", "grid"],
                     help="'host': shard serving over every local device "
                          "(candidates axis; streaming top-k merge under "
-                         "sharding.serve_rules)")
+                         "sharding.serve_rules).  'grid': the multi-host "
+                         "placement layout — a hosts x candidates device "
+                         "grid, capacity buckets pinned to host groups "
+                         "(PlacementPlan), per-group merge + cross-group "
+                         "candidate exchange; pruning shards over data")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="host-group count for --mesh grid (0 = auto: "
+                         "largest pow2 grid the device count supports)")
     ap.add_argument("--n-first", type=int, default=64,
                     help="first-stage candidate count; >= corpus size "
                          "(or 0) serves the e2e exact sweep — the route "
@@ -170,7 +227,7 @@ def main():
         serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir,
                         backend=args.backend, index_dir=args.index_dir,
                         compress=args.compress, mesh=args.mesh,
-                        n_first=args.n_first)
+                        n_first=args.n_first, hosts=args.hosts)
     else:
         serve_lm(args.arch, n_tokens=args.tokens)
 

@@ -106,13 +106,26 @@ class PackedBucket:
         rides along with the shard: each shard maps its local top-k hits
         straight to corpus-global ids before the merge tree ever sees
         them.
+
+        A bucket with **zero** documents (a host group that owns no
+        bucket, or a group view of an index whose buckets all live
+        elsewhere) still emits one explicit pad row per shard, carrying
+        the reserved id ``-1``: an all-empty shard used to produce a
+        0-row view whose candidate reduction emitted NaN-free but
+        id-garbage rows — an all-masked pad scores the same finite
+        sentinel as a real empty-after-prune document and, carrying a
+        low id, would *beat* it on the tie-break.  The streaming merge
+        audits for both sentinels (``id >= pad_id`` and ``id < 0``) and
+        forces their candidates to -inf (tests/test_placement.py).
         """
         e, mk, ids = self.dense_embs(dim), self.masks, self.doc_ids
-        pad = (-self.n_docs) % max(n_shards, 1)
+        n_shards = max(n_shards, 1)
+        pad = (-self.n_docs) % n_shards if self.n_docs else n_shards
         if pad:
             e = jnp.pad(e, ((0, pad), (0, 0), (0, 0)))
             mk = jnp.pad(mk, ((0, pad), (0, 0)))
-            ids = jnp.pad(ids, (0, pad), constant_values=pad_id)
+            ids = jnp.pad(ids, (0, pad),
+                          constant_values=pad_id if self.n_docs else -1)
         return e, mk, ids
 
     def __repr__(self):  # keep test failure output readable

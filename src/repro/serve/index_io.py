@@ -5,19 +5,39 @@ The on-disk artifact a pruning job hands to serving:
     <dir>/packed_index.json            versioned manifest (layout metadata)
     <dir>/step_000000000/{...}         bucket arrays via repro.train.checkpoint
 
+With a multi-host :class:`repro.sharding.PlacementPlan`
+(``save_index(..., placement=...)``) the body splits by host group
+instead, so each group of a serving grid restores ONLY the buckets
+placed on it:
+
+    <dir>/packed_index.json            manifest + the placement plan
+    <dir>/packed_index.group0.json     group 0's self-describing sub-manifest
+    <dir>/group_0000/step_.../{...}    group 0's bucket arrays
+    ...
+
+``load_index(dir)`` reassembles the full index from every group (the
+single-host/differential-oracle view); ``load_index(dir, group=g)``
+reads only group ``g``'s sub-manifest and body — the host-group load
+path.  Group sub-indexes keep corpus-global ``n_docs`` and doc ids, so
+their candidates merge across hosts without renumbering.
+
 The body rides the existing ``train/checkpoint`` writer, inheriting its
 guarantees for free: atomic rename commit, per-leaf crc32 verification
 on load, optional zstd, and the async save path (device->host copy now,
 disk write on a daemon thread — ``save_index(..., async_save=True)``;
 ``repro.train.checkpoint.wait_pending()`` joins it).  The manifest is
 our own layer: it records the *layout* (bucket capacities and sizes,
-compression, dims) that the checkpoint's flat leaf list cannot express,
-and is what makes restore self-describing — ``load_index`` rebuilds the
-leaf pytree structure from it before asking the checkpoint layer to
-fill it.  Manifest writes are tmp+fsync+rename atomic like the body.
+compression, dims, placement) that the checkpoint's flat leaf list
+cannot express, and is what makes restore self-describing —
+``load_index`` rebuilds the leaf pytree structure from it before asking
+the checkpoint layer to fill it.  Manifest writes are tmp+fsync+rename
+atomic like the body.
 
 ``FORMAT`` is bumped on any layout change; ``load_index`` refuses
-newer-format manifests loudly instead of misreading them.
+newer-format manifests loudly instead of misreading them.  Placement-
+less saves still write format-1 manifests (byte-layout unchanged since
+PR 3), so older readers keep working on artifacts that don't use the
+new layout; placed saves write format 2.
 """
 
 from __future__ import annotations
@@ -28,88 +48,208 @@ import os
 import jax.numpy as jnp
 
 from repro.serve.index import COMPRESSIONS, PackedBucket, PackedIndex
+from repro.sharding import PlacementPlan
 from repro.train import checkpoint
 
-__all__ = ["FORMAT", "MANIFEST", "has_index", "load_index", "save_index"]
+__all__ = ["FORMAT", "MANIFEST", "has_index", "load_index",
+           "load_placement", "save_index"]
 
-FORMAT = 1
+# 2: the manifest grew "placement" and the body may split into
+# per-host-group sub-manifests + bodies; format-1 artifacts load fine.
+FORMAT = 2
 MANIFEST = "packed_index.json"
 
 
-def _body_tree(index: PackedIndex) -> dict:
+def _group_manifest(g: int) -> str:
+    return f"packed_index.group{g}.json"
+
+
+def _group_dir(path: str, g: int) -> str:
+    return os.path.join(path, f"group_{g:04d}")
+
+
+def _bucket_leaf(index: PackedIndex, b: PackedBucket) -> dict:
+    leaf = {"doc_ids": b.doc_ids, "masks": b.masks}
+    if index.compression == "int8":
+        leaf |= {"q8": b.q8, "scales": b.scales}
+    else:
+        leaf |= {"embs": b.embs}
+    return leaf
+
+
+def _body_tree(index: PackedIndex, buckets=None) -> dict:
     """The pytree the checkpoint layer serializes.  Key sets differ by
     compression; the manifest records which, so load rebuilds the same
-    structure."""
-    buckets = []
-    for b in index.buckets:
-        leaf = {"doc_ids": b.doc_ids, "masks": b.masks}
-        if index.compression == "int8":
-            leaf |= {"q8": b.q8, "scales": b.scales}
-        else:
-            leaf |= {"embs": b.embs}
-        buckets.append(leaf)
-    return {"buckets": buckets}
+    structure.  ``buckets`` narrows to a host group's subset."""
+    buckets = index.buckets if buckets is None else buckets
+    return {"buckets": [_bucket_leaf(index, b) for b in buckets]}
 
 
-def save_index(path: str, index: PackedIndex, *,
-               async_save: bool = False) -> str:
-    """Persist ``index`` under ``path``.  Returns the manifest path.
-    ``async_save`` stages to host now and writes on a daemon thread
-    (join with ``checkpoint.wait_pending()`` before handing the
-    directory to another job)."""
-    os.makedirs(path, exist_ok=True)
-    manifest = {
-        "format": FORMAT,
+def _meta(index: PackedIndex) -> dict:
+    return {
         "kind": "packed_index",
         "n_docs": index.n_docs,
         "m": index.m,
         "dim": index.dim,
         "tokens_total": index.tokens_total,
         "compression": index.compression,
+    }
+
+
+def save_index(path: str, index: PackedIndex, *,
+               placement: PlacementPlan | None = None,
+               async_save: bool = False) -> str:
+    """Persist ``index`` under ``path``.  Returns the manifest path.
+
+    ``placement`` splits the body by host group (one sub-manifest +
+    checkpoint body per non-empty group) so each group of a serving
+    grid loads only its buckets; the plan itself rides in the main
+    manifest and every sub-manifest.  ``async_save`` stages to host now
+    and writes on a daemon thread (join with
+    ``checkpoint.wait_pending()`` before handing the directory to
+    another job)."""
+    os.makedirs(path, exist_ok=True)
+    saver = checkpoint.save_async if async_save else checkpoint.save
+    manifest = _meta(index) | {
+        "format": 1 if placement is None else FORMAT,
         "buckets": [{"cap": b.cap, "n_docs": b.n_docs}
                     for b in index.buckets],
     }
+    if placement is not None:
+        placement.validate(len(index.buckets))
+        manifest["placement"] = placement.to_manifest()
+        for g in range(placement.n_groups):
+            picked = placement.buckets_of(g)
+            sub = _meta(index) | {
+                "format": FORMAT,
+                "kind": "packed_index_group",
+                "group": g,
+                "placement": placement.to_manifest(),
+                "buckets": [{"cap": index.buckets[i].cap,
+                             "n_docs": index.buckets[i].n_docs,
+                             "index": i} for i in picked],
+            }
+            checkpoint.atomic_json_dump(
+                os.path.join(path, _group_manifest(g)), sub)
+            if picked:
+                saver(_group_dir(path, g), 0,
+                      _body_tree(index, [index.buckets[i] for i in picked]),
+                      keep=1)
+    else:
+        saver(path, 0, _body_tree(index), keep=1)
     final = os.path.join(path, MANIFEST)
     checkpoint.atomic_json_dump(final, manifest)
-    saver = checkpoint.save_async if async_save else checkpoint.save
-    saver(path, 0, _body_tree(index), keep=1)
     return final
 
 
+def _read_manifest(path: str, name: str) -> dict:
+    with open(os.path.join(path, name)) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") not in ("packed_index", "packed_index_group"):
+        raise IOError(f"{path}/{name}: manifest is not a packed index")
+    if manifest.get("format", 0) > FORMAT:
+        raise IOError(f"{path}/{name}: manifest format "
+                      f"{manifest['format']} is newer than this reader "
+                      f"(format {FORMAT})")
+    if manifest["compression"] not in COMPRESSIONS:
+        raise IOError(f"{path}/{name}: unknown compression "
+                      f"{manifest['compression']!r}")
+    return manifest
+
+
 def has_index(path: str) -> bool:
-    """True when ``path`` holds a loadable artifact (manifest + at least
-    one committed checkpoint step)."""
-    return (os.path.exists(os.path.join(path, MANIFEST))
-            and bool(checkpoint.list_steps(path)))
+    """True when ``path`` holds a loadable artifact (manifest + a
+    committed checkpoint step for the body — every non-empty group's
+    body under a placement)."""
+    if not os.path.exists(os.path.join(path, MANIFEST)):
+        return False
+    try:
+        manifest = _read_manifest(path, MANIFEST)
+    except (IOError, json.JSONDecodeError, KeyError):
+        return False
+    placement = manifest.get("placement")
+    if placement is None:
+        return bool(checkpoint.list_steps(path))
+    groups = {int(g) for g in placement["groups"]}
+    return all(bool(checkpoint.list_steps(_group_dir(path, g)))
+               for g in groups)
 
 
-def load_index(path: str) -> PackedIndex:
+def load_placement(path: str) -> PlacementPlan | None:
+    """The placement plan a saved artifact was split by (None for
+    placement-less format-1 artifacts)."""
+    manifest = _read_manifest(path, MANIFEST)
+    plc = manifest.get("placement")
+    return None if plc is None else PlacementPlan.from_manifest(plc)
+
+
+def _restore_buckets(root: str, manifest: dict) -> list[PackedBucket]:
+    """Restore one checkpoint body's bucket list as described by its
+    manifest's ``buckets`` entries (crc-verified by the checkpoint
+    layer; raises ``IOError`` when no restorable step exists)."""
+    metas = manifest["buckets"]
+    if not metas:
+        return []
+    keys = (("doc_ids", "masks", "q8", "scales")
+            if manifest["compression"] == "int8"
+            else ("doc_ids", "masks", "embs"))
+    like = {"buckets": [{k: 0 for k in keys} for _ in metas]}
+    _, tree = checkpoint.restore_latest(root, like)
+    if tree is None:
+        raise IOError(f"{root}: no restorable packed-index body")
+    buckets = []
+    for meta, leaf in zip(metas, tree["buckets"]):
+        arrs = {k: jnp.asarray(v) for k, v in leaf.items()}
+        buckets.append(PackedBucket(cap=int(meta["cap"]), **arrs))
+    return buckets
+
+
+def _index_of(manifest: dict, buckets: list[PackedBucket]) -> PackedIndex:
+    return PackedIndex(n_docs=int(manifest["n_docs"]),
+                       m=int(manifest["m"]), dim=int(manifest["dim"]),
+                       tokens_total=int(manifest["tokens_total"]),
+                       compression=manifest["compression"],
+                       buckets=buckets)
+
+
+def load_index(path: str, *, group: int | None = None) -> PackedIndex:
     """Restore a :class:`PackedIndex` saved by :func:`save_index`.
+
+    ``group=g`` restores ONLY host group ``g``'s buckets via its
+    sub-manifest — the multi-host load path: the returned index keeps
+    corpus-global ``n_docs``/doc ids, ready to serve that group's tier
+    of the grid merge via ``topk_search_group(..., placement=
+    PlacementPlan(n_groups, (g,) * len(sub.buckets)))`` — the explicit
+    all-mine placement; the serving layer refuses to derive a default
+    plan for a partial view (it would scatter the group's buckets and
+    silently drop documents).  ``group=None`` on a placed artifact
+    reassembles every group's buckets back into the full index, in the
+    original bucket order.
 
     The checkpoint layer verifies per-leaf crc32s and walks past corrupt
     steps; a directory with no restorable body raises ``IOError``.
     """
-    with open(os.path.join(path, MANIFEST)) as f:
-        manifest = json.load(f)
-    if manifest.get("kind") != "packed_index":
-        raise IOError(f"{path}: manifest is not a packed index")
-    if manifest.get("format", 0) > FORMAT:
-        raise IOError(f"{path}: manifest format {manifest['format']} is "
-                      f"newer than this reader (format {FORMAT})")
-    compression = manifest["compression"]
-    if compression not in COMPRESSIONS:
-        raise IOError(f"{path}: unknown compression {compression!r}")
-    keys = (("doc_ids", "masks", "q8", "scales") if compression == "int8"
-            else ("doc_ids", "masks", "embs"))
-    like = {"buckets": [{k: 0 for k in keys} for _ in manifest["buckets"]]}
-    _, tree = checkpoint.restore_latest(path, like)
-    if tree is None:
-        raise IOError(f"{path}: no restorable packed-index body")
-    buckets = []
-    for meta, leaf in zip(manifest["buckets"], tree["buckets"]):
-        arrs = {k: jnp.asarray(v) for k, v in leaf.items()}
-        buckets.append(PackedBucket(cap=int(meta["cap"]), **arrs))
-    return PackedIndex(n_docs=int(manifest["n_docs"]),
-                       m=int(manifest["m"]), dim=int(manifest["dim"]),
-                       tokens_total=int(manifest["tokens_total"]),
-                       compression=compression, buckets=buckets)
+    manifest = _read_manifest(path, MANIFEST)
+    placement = manifest.get("placement")
+    if group is not None:
+        if placement is None:
+            raise IOError(f"{path}: artifact has no placement; "
+                          f"load_index(group={group}) needs one "
+                          "(save_index(..., placement=...))")
+        sub = _read_manifest(path, _group_manifest(group))
+        buckets = (_restore_buckets(_group_dir(path, group), sub)
+                   if sub["buckets"] else [])
+        return _index_of(sub, buckets)
+    if placement is None:
+        return _index_of(manifest, _restore_buckets(path, manifest))
+    plan = PlacementPlan.from_manifest(placement)
+    plan.validate(len(manifest["buckets"]))
+    by_index: dict[int, PackedBucket] = {}
+    for g in range(plan.n_groups):
+        sub = _read_manifest(path, _group_manifest(g))
+        restored = (_restore_buckets(_group_dir(path, g), sub)
+                    if sub["buckets"] else [])
+        for meta, bucket in zip(sub["buckets"], restored):
+            by_index[int(meta["index"])] = bucket
+    buckets = [by_index[i] for i in range(len(manifest["buckets"]))]
+    return _index_of(manifest, buckets)

@@ -68,7 +68,8 @@ from repro.core.tuning import _pow2_at_least
 from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_multi_op,
                                               colbert_maxsim_rerank_op)
 from repro.serve.index import PackedIndex
-from repro.sharding import constrain, mesh_axes_for
+from repro.sharding import (PlacementPlan, constrain, grid_axes_for,
+                            mesh_axes_for)
 
 
 @dataclasses.dataclass
@@ -227,13 +228,17 @@ def _stream_chunk_topk(n: int, chunk: int, k: int, score_slab,
     is free for XLA to recycle per chunk.
 
     ``doc_ids=None`` means the axis is already in corpus-global order.
-    ``pad_from`` marks sentinel ids at/above it as shard-padding: their
-    candidates are forced to -inf so a pad can never displace a real
-    doc (real empty-after-prune docs score a finite sentinel, strictly
-    above -inf).  Per-chunk ``lax.top_k`` tie-breaking (lowest local
-    index) agrees with the global order because doc ids ascend within
-    every bucket (``bucket_plan`` emits ``np.flatnonzero`` index sets)
-    and pads sit at the tail.
+    ``pad_from`` marks sentinel ids at/above it as shard-padding; ids
+    below 0 are the zero-doc-bucket pads (``PackedBucket.shard_view``
+    emits id ``-1`` rows when a bucket holds no documents at all).
+    Both audits force the pad's candidates to -inf so a pad can never
+    displace a real doc — real empty-after-prune docs score a finite
+    sentinel, strictly above -inf, and without the negative-id audit an
+    all-empty shard's pad row would *tie* such a doc and beat it on the
+    lowest-id tie-break.  Per-chunk ``lax.top_k`` tie-breaking (lowest
+    local index) agrees with the global order because doc ids ascend
+    within every bucket (``bucket_plan`` emits ``np.flatnonzero`` index
+    sets) and pads sit at the tail.
     """
     vals, ids = [], []
     for s0 in range(0, n, chunk):
@@ -242,8 +247,10 @@ def _stream_chunk_topk(n: int, chunk: int, k: int, score_slab,
         v, loc = jax.lax.top_k(s, kb)
         i = (s0 + loc if doc_ids is None
              else doc_ids[s0:s0 + chunk][loc]).astype(jnp.int32)
+        is_pad = i < 0
         if pad_from is not None:
-            v = jnp.where(i >= pad_from, -jnp.inf, v)
+            is_pad = is_pad | (i >= pad_from)
+        v = jnp.where(is_pad, -jnp.inf, v)
         vals.append(v)
         ids.append(i)
     return jnp.concatenate(vals, axis=1), jnp.concatenate(ids, axis=1)
@@ -288,15 +295,28 @@ def _index_views(index: TokenIndex | PackedIndex, n_shards: int = 1):
 
 
 def _streaming_plan(index, n_q, l, dim, k, *, n_shards, block_docs,
-                    block_q, chunk_docs):
+                    block_q, chunk_docs, n_groups=1):
     """Resolve (block_docs, block_q, chunk_docs) per bucket — one tuner
-    key per shard-local bucket shape.  Shared by :func:`topk_search`
-    (closure build) and ``RetrievalServer._warm_tuner`` (eager warm
-    outside jit), so in-trace resolutions always hit the cache."""
+    key per shard-local bucket shape (placement-aware: ``n_groups``
+    joins the key under a grid mesh, where a bucket's shards span only
+    its own host group).  Shared by :func:`topk_search` (closure build)
+    and ``RetrievalServer._warm_tuner`` (eager warm outside jit), so
+    in-trace resolutions always hit the cache."""
     return [backend_lib.tuned_streaming_blocks(
-        n_q, nd, cap, l, dim, k, n_shards=n_shards, block_docs=block_docs,
-        block_q=block_q, chunk_docs=chunk_docs)
+        n_q, nd, cap, l, dim, k, n_shards=n_shards, n_groups=n_groups,
+        block_docs=block_docs, block_q=block_q, chunk_docs=chunk_docs)
         for nd, cap in _view_shapes(index)]
+
+
+def _real_docs(index: TokenIndex | PackedIndex) -> int:
+    """Documents actually present in this (possibly group-sliced) view —
+    ``sum(b.n_docs)`` for packed, the full doc axis for dense.  Group
+    views keep the *global* ``n_docs`` (their doc ids are global), so
+    this, not ``index.n_docs``, bounds how many real candidates the
+    view can produce."""
+    if isinstance(index, PackedIndex):
+        return sum(b.n_docs for b in index.buckets)
+    return index.d_masks.shape[0]
 
 
 def _topk_search_local(index, q_embs, q_masks, k, *, backend, plan):
@@ -310,7 +330,9 @@ def _topk_search_local(index, q_embs, q_masks, k, *, backend, plan):
         ids.append(i)
     vals = jnp.concatenate(vals, axis=1)
     ids = jnp.concatenate(ids, axis=1)
-    return _merge_topk(vals, ids, min(k, vals.shape[1]))
+    # Zero-doc buckets contribute (-inf, -1) sentinel columns; the cap
+    # at the view's real doc count keeps them out of the output.
+    return _merge_topk(vals, ids, min(k, _real_docs(index), vals.shape[1]))
 
 
 def _topk_search_sharded(index, q_embs, q_masks, k, *, backend, plan,
@@ -367,6 +389,198 @@ def _topk_search_sharded(index, q_embs, q_masks, k, *, backend, plan,
     return out
 
 
+# ----------------------------------------------------------------------
+# Multi-host bucket placement (the grid tier; DESIGN_BACKENDS.md
+# §Placement).  Under a 2-D hosts x candidates grid mesh each capacity
+# bucket is pinned to one host group (sharding.PlacementPlan) and its
+# doc axis spans that group's candidates devices only.  Each group runs
+# what is effectively its own serving program — the per-group tier below
+# is a single shard_map over the group's device row — and the merge tree
+# gains one tier: a (n_q, k) candidate block per GROUP is exchanged and
+# root-merged, instead of one block per shard crossing hosts.  This
+# mirrors a real multi-controller deployment, where host groups run
+# independent programs over the buckets they loaded
+# (index_io sub-manifests) and only k-wide candidates travel between
+# hosts.
+# ----------------------------------------------------------------------
+
+
+def _group_view(index: TokenIndex | PackedIndex,
+                placement: PlacementPlan, group: int):
+    """The slice of ``index`` host group ``group`` owns: a PackedIndex
+    carrying only the group's buckets (doc ids and ``n_docs`` stay
+    corpus-global — the remap and the pad sentinel must agree across
+    groups), the whole index for the dense layout's single bucket, or
+    ``None`` for a group that owns nothing."""
+    if isinstance(index, PackedIndex):
+        picked = [index.buckets[i] for i in placement.buckets_of(group)]
+        if not picked:
+            return None
+        return PackedIndex(n_docs=index.n_docs, m=index.m, dim=index.dim,
+                           tokens_total=index.tokens_total,
+                           compression=index.compression, buckets=picked)
+    return index if placement.group_of(0) == group else None
+
+
+def _resolve_placement(index, placement: PlacementPlan | None,
+                       n_groups: int) -> PlacementPlan:
+    n_buckets = (len(index.buckets) if isinstance(index, PackedIndex)
+                 else 1)
+    if placement is None:
+        covered = _real_docs(index)
+        n_docs = (index.n_docs if isinstance(index, PackedIndex)
+                  else covered)
+        if covered < n_docs:
+            # A group-loaded partial view (index_io.load_index(group=g)):
+            # deriving a fresh balanced plan would scatter the group's
+            # own buckets across groups and silently drop documents from
+            # every merge — the caller must say which group these
+            # buckets serve.
+            raise ValueError(
+                f"index is a partial (group-loaded) view covering "
+                f"{covered} of {n_docs} documents; pass an explicit "
+                "placement (e.g. PlacementPlan(n_groups, (group,) * "
+                "n_buckets)) instead of relying on the derived default")
+        return PlacementPlan.for_index(index, n_groups)
+    if placement.n_groups != n_groups:
+        raise ValueError(
+            f"placement has {placement.n_groups} host groups, the active "
+            f"grid mesh has {n_groups}")
+    return placement.validate(n_buckets)
+
+
+def topk_search_group(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray,
+                      *, group: int, k: int = 10,
+                      q_masks: jnp.ndarray | None = None,
+                      backend: str | None = None,
+                      placement: PlacementPlan | None = None,
+                      block_docs: int | None = None,
+                      block_q: int | None = None,
+                      chunk_docs: int | None = None):
+    """One host group's tier of the grid merge tree: ``(ids, scores)``
+    candidates, each ``(n_q, min(k, n_docs))``, from the buckets the
+    placement pins to ``group`` — sentinel-padded (``-inf`` scores, id
+    ``-1``) up to that width when the group holds fewer candidates,
+    including a group that owns no buckets at all.
+
+    Requires active grid rules (``sharding.serve_rules`` with a
+    ``make_serve_mesh(hosts=...)`` mesh).  This is the computation one
+    host group runs in a multi-controller deployment: a single
+    ``shard_map`` over the group's device row, jittable on its own —
+    the HLO-cleanliness assertions lower exactly this function.  The
+    cross-group exchange and root merge live in :func:`topk_search`.
+    """
+    backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
+    mesh, n_groups, n_cand, rules_placement = grid_axes_for()
+    if mesh is None:
+        raise ValueError(
+            "topk_search_group needs active grid serving rules "
+            "(sharding.serve_rules with a hosts x candidates mesh from "
+            "launch.mesh.make_serve_mesh(hosts=...))")
+    if not 0 <= group < n_groups:
+        raise ValueError(f"group {group} outside [0, {n_groups})")
+    placement = _resolve_placement(
+        index, placement if placement is not None else rules_placement,
+        n_groups)
+    n_q, l = q_embs.shape[:2]
+    dim = q_embs.shape[-1]
+    n_docs = (index.n_docs if isinstance(index, PackedIndex)
+              else index.d_masks.shape[0])
+    w = min(k, n_docs)
+    sub = _group_view(index, placement, group)
+    if sub is None:
+        return (jnp.full((n_q, w), -1, jnp.int32),
+                jnp.full((n_q, w), -jnp.inf, jnp.float32))
+    plan = _streaming_plan(sub, n_q, l, dim, k, n_shards=n_cand,
+                           n_groups=n_groups, block_docs=block_docs,
+                           block_q=block_q, chunk_docs=chunk_docs)
+    if n_cand > 1:
+        import numpy as np
+        from jax.sharding import Mesh
+        submesh = Mesh(np.asarray(mesh.devices)[group], ("candidates",))
+        i, v = _topk_search_sharded(sub, q_embs, q_masks, k,
+                                    backend=backend, plan=plan,
+                                    mesh=submesh, axes=("candidates",),
+                                    n_shards=n_cand)
+    else:
+        i, v = _topk_search_local(sub, q_embs, q_masks, k, backend=backend,
+                                  plan=plan)
+    pad = w - i.shape[1]
+    if pad > 0:     # fewer real candidates in this group than w
+        i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
+        v = jnp.pad(v, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    return i, v
+
+
+def _group_search_traceable(index, q_embs, q_masks, *, group, k, backend,
+                            placement, block_docs, block_q, chunk_docs):
+    """Positional-arg adapter so one group's tier jits with (q, qm) as
+    the only traced inputs (index and knobs ride as closure constants,
+    the RetrievalServer closure pattern)."""
+    return topk_search_group(index, q_embs, group=group, k=k,
+                             q_masks=q_masks, backend=backend,
+                             placement=placement, block_docs=block_docs,
+                             block_q=block_q, chunk_docs=chunk_docs)
+
+
+def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
+                      n_groups, placement, block_docs, block_q,
+                      chunk_docs):
+    """The grid merge tree: every host group reduces its own buckets to
+    a ``(n_q, w)`` candidate block (:func:`topk_search_group`, one
+    shard_map over the group's device row), the blocks are exchanged —
+    the ONLY cross-group traffic, k-wide, never corpus-sized — and one
+    root sort-merge produces the replicated global top-k.  Bit-identical
+    to the single-host dense oracle: groups partition the corpus (every
+    doc lives in exactly one bucket, every bucket in exactly one group),
+    each tier keeps a superset of the global top-k, and every merge uses
+    the same ``(-score, id)`` total order.
+
+    The exchange fetches each group's block off its devices (the
+    multi-controller simulation of the cross-host hop), so this path
+    cannot run under an enclosing jit — per-group compute still
+    compiles inside its own shard_map, and a single-controller caller
+    that wants one jitted program uses the flat ``--mesh host`` layout
+    instead.  The per-group programs ARE jitted, cached on the index
+    object per (query shape, k, backend, placement, mesh) so repeated
+    query batches pay tracing once, like the server's closure cache."""
+    if isinstance(q_embs, jax.core.Tracer):
+        raise ValueError(
+            "grid-placed topk_search performs a cross-group candidate "
+            "exchange between per-group programs and cannot be traced "
+            "under an enclosing jit; call it eagerly (RetrievalServer "
+            "does this automatically under grid rules)")
+    placement = _resolve_placement(index, placement, n_groups)
+    cache = index.__dict__.setdefault("_grid_cache", collections.OrderedDict())
+    key = (q_embs.shape, None if q_masks is None else q_masks.shape, k,
+           backend, placement, mesh, block_docs, block_q, chunk_docs)
+    fns = cache.get(key)
+    if fns is None:
+        fns = [jax.jit(functools.partial(
+            _group_search_traceable, index, group=g, k=k, backend=backend,
+            placement=placement, block_docs=block_docs, block_q=block_q,
+            chunk_docs=chunk_docs)) for g in range(n_groups)]
+        cache[key] = fns
+        if len(cache) > 16:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(key)
+    # Dispatch every group's program first (they run on disjoint device
+    # rows — JAX async dispatch overlaps them), then collect: the
+    # cross-host hop moves only the (n_q, w) candidate blocks off the
+    # groups' devices.
+    blocks = [fn(q_embs, q_masks) for fn in fns]
+    vals, ids = [], []
+    for i, v in blocks:
+        ids.append(jnp.asarray(jax.device_get(i)))
+        vals.append(jnp.asarray(jax.device_get(v)))
+    gv = jnp.concatenate(vals, axis=1)
+    gi = jnp.concatenate(ids, axis=1)
+    n_docs = (index.n_docs if isinstance(index, PackedIndex)
+              else index.d_masks.shape[0])
+    return _merge_topk(gv, gi, min(k, n_docs))
+
+
 def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
                 k: int = 10, q_masks: jnp.ndarray | None = None,
                 backend: str | None = None, block_docs: int | None = None,
@@ -382,9 +596,14 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     the normal per-backend scorers and immediately reduces to (n_q, k)
     (score, global-doc-id) candidates; sort-merges by the (-score, id)
     total order combine candidates up the tree, and under a mesh one
-    k-wide all-gather per shard feeds the root merge.  ``chunk_docs``
-    (and the usual serving blocks) default to the shape-aware autotuner,
-    keyed on the shard-local bucket shape.
+    k-wide all-gather per shard feeds the root merge.  Under a
+    multi-host grid mesh (``make_serve_mesh(hosts=...)``) the tree
+    gains one more tier: each host group merges only the buckets its
+    ``sharding.PlacementPlan`` pins to it, and one (n_q, k) candidate
+    block per *group* is exchanged for the root merge
+    (:func:`topk_search_group`; DESIGN_BACKENDS.md §Placement).
+    ``chunk_docs`` (and the usual serving blocks) default to the
+    shape-aware autotuner, keyed on the shard-local bucket shape.
     """
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
     n_q, l = q_embs.shape[:2]
@@ -394,6 +613,13 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     if n_docs == 0:
         return (jnp.zeros((n_q, 0), jnp.int32),
                 jnp.zeros((n_q, 0), jnp.float32))
+    gmesh, n_groups, _, placement = grid_axes_for()
+    if gmesh is not None:
+        return _topk_search_grid(index, q_embs, q_masks, k,
+                                 backend=backend, mesh=gmesh,
+                                 n_groups=n_groups, placement=placement,
+                                 block_docs=block_docs, block_q=block_q,
+                                 chunk_docs=chunk_docs)
     mesh, axes, n_shards = mesh_axes_for("candidates")
     plan = _streaming_plan(index, n_q, l, dim, k, n_shards=n_shards,
                            block_docs=block_docs, block_q=block_q,
@@ -587,11 +813,27 @@ class RetrievalServer:
             # shard-local bucket shape — needed on BOTH backends, the
             # merge chunking is backend-agnostic) here means the
             # closure's in-trace resolutions always hit the cache.
-            _, _, n_shards = mesh_axes_for("candidates")
-            _streaming_plan(self.index, n_q, l, dim, self.k,
-                            n_shards=n_shards, block_docs=self._block_docs,
-                            block_q=self._block_q,
-                            chunk_docs=self._chunk_docs)
+            gmesh, n_groups, n_cand, placement = grid_axes_for()
+            if gmesh is not None:
+                # Grid placement: one key set per host group's bucket
+                # slice (shards span only the group's candidates row).
+                placement = _resolve_placement(self.index, placement,
+                                               n_groups)
+                for g in range(n_groups):
+                    sub = _group_view(self.index, placement, g)
+                    if sub is not None:
+                        _streaming_plan(sub, n_q, l, dim, self.k,
+                                        n_shards=n_cand, n_groups=n_groups,
+                                        block_docs=self._block_docs,
+                                        block_q=self._block_q,
+                                        chunk_docs=self._chunk_docs)
+            else:
+                _, _, n_shards = mesh_axes_for("candidates")
+                _streaming_plan(self.index, n_q, l, dim, self.k,
+                                n_shards=n_shards,
+                                block_docs=self._block_docs,
+                                block_q=self._block_q,
+                                chunk_docs=self._chunk_docs)
         if self.backend != backend_lib.FUSED:
             return
         if self._block_docs is not None and self._block_q is not None:
@@ -609,20 +851,31 @@ class RetrievalServer:
 
     def _closure_for(self, q_embs):
         # The traced dataflow bakes in the ambient sharding context
-        # (topk_search resolves mesh/axes at trace time), so the mesh
-        # and candidate axes join the cache key — a closure traced
-        # outside a mesh must not keep serving single-device once the
-        # caller enters serve_rules(mesh), nor vice versa.
+        # (topk_search resolves mesh/axes at trace time), so the mesh,
+        # candidate axes, and grid placement join the cache key — a
+        # closure traced outside a mesh must not keep serving
+        # single-device once the caller enters serve_rules(mesh), nor
+        # vice versa.
         mesh, axes, _ = mesh_axes_for("candidates")
-        key = q_embs.shape[:2] + (mesh, axes)
+        gmesh, n_groups, _, placement = grid_axes_for()
+        key = q_embs.shape[:2] + (mesh, axes, gmesh, n_groups, placement)
         fn = self._search.get(key)
         if fn is None:
             self._warm_index()
             self._warm_tuner(q_embs)
-            fn = jax.jit(functools.partial(
+            n_docs = (self.index.n_docs
+                      if isinstance(self.index, PackedIndex)
+                      else self.index.d_masks.shape[0])
+            fn = functools.partial(
                 self._run, self.index, k=self.k, n_first=self.n_first,
                 backend=self.backend, block_docs=self._block_docs,
-                block_q=self._block_q, chunk_docs=self._chunk_docs))
+                block_q=self._block_q, chunk_docs=self._chunk_docs)
+            if gmesh is None or self.n_first < n_docs:
+                # Grid-placed e2e serving stays an eager composition of
+                # per-group compiled programs (the cross-group candidate
+                # exchange cannot live inside one jit); everything else
+                # jits whole as before.
+                fn = jax.jit(fn)
             self._search[key] = fn
             if len(self._search) > self._max_cached:
                 self._search.popitem(last=False)     # evict LRU shape

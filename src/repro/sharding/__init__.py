@@ -1,8 +1,11 @@
+from repro.sharding.placement import PlacementPlan
 from repro.sharding.specs import (
     axis_rules,
     constrain,
     current_rules,
+    data_mesh_for,
     gnn_rules,
+    grid_axes_for,
     lm_decode_rules,
     lm_prefill_rules,
     lm_rules_ep_moe,
@@ -15,8 +18,9 @@ from repro.sharding.specs import (
     spec_for,
 )
 
-__all__ = ["axis_rules", "constrain", "current_rules", "gnn_rules",
-           "lm_decode_rules", "lm_prefill_rules", "lm_rules_ep_moe",
-           "lm_train_rules", "logical_to_spec", "mesh_axes_for",
-           "recsys_rules", "recsys_rules_rowsharded", "serve_rules",
-           "spec_for"]
+__all__ = ["PlacementPlan", "axis_rules", "constrain", "current_rules",
+           "data_mesh_for",
+           "gnn_rules", "grid_axes_for", "lm_decode_rules",
+           "lm_prefill_rules", "lm_rules_ep_moe", "lm_train_rules",
+           "logical_to_spec", "mesh_axes_for", "recsys_rules",
+           "recsys_rules_rowsharded", "serve_rules", "spec_for"]

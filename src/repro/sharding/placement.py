@@ -1,0 +1,149 @@
+"""Multi-host bucket placement for the packed serving index.
+
+PR 4's sharded serving spans every capacity bucket's doc axis over ONE
+flat ``candidates`` mesh axis — every device holds a slice of every
+bucket, and the streaming merge ends in one global ``(n_q, k)``
+all-gather across all shards.  Past one host that layout is wrong on
+both axes that matter at corpus scale (the ColBERTv2/PLAID lesson):
+every host must hold (and load from disk) a slice of *every* bucket,
+and the final gather crosses host boundaries once per shard.
+
+:class:`PlacementPlan` is the layout contract that fixes both.  It pins
+each capacity bucket of a ``repro.serve.index.PackedIndex`` to one
+**host group**; within its group the bucket's doc axis spans the
+group's ``candidates`` devices (the 2-D ``hosts x candidates`` grid
+mesh from ``launch.mesh.make_serve_mesh(hosts=...)``).  Consequences:
+
+* **Serving** (``repro.serve.retrieval.topk_search``): the merge tree
+  gains one tier.  Each group reduces its own buckets to ``(n_q, k)``
+  candidates with a group-local gather (intra-host traffic only); the
+  root merge then exchanges one k-wide candidate block **per group**
+  instead of one per shard — the only bytes that ever cross hosts.
+* **Storage** (``repro.serve.index_io``): the manifest records the
+  plan and each group's buckets persist under their own sub-manifest
+  and body, so a host group restores only the buckets placed on it.
+* **Exactness**: every document lives in exactly one bucket, so groups
+  partition the corpus; each merge tier keeps a superset of the true
+  top-k under the same ``(-score, doc_id)`` total order, and results
+  stay bit-identical to the single-host dense oracle — pinned down by
+  the device-grid differential harness in ``tests/test_placement.py``.
+
+The plan is host-side metadata by design (like ``bucket_plan``): it is
+data-dependent layout, exactly what fixed-shape jitted code cannot
+branch on.  It carries no jax arrays and serializes to/from the
+packed-index manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["PlacementPlan"]
+
+
+def _bucket_weights(index) -> list[int]:
+    """Per-bucket placement weights: stored bytes for a packed index
+    (duck-typed on ``buckets`` so this module never imports the serve
+    layer), one unit bucket for the dense ``TokenIndex`` view."""
+    buckets = getattr(index, "buckets", None)
+    if buckets is None:
+        return [1]
+    return [max(int(b.nbytes()), 1) for b in buckets]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    """Bucket -> host-group assignment for a packed index.
+
+    ``groups[i]`` is the host group that owns bucket ``i`` (the i-th
+    entry of ``PackedIndex.buckets``; a dense ``TokenIndex`` counts as
+    one bucket).  A group may own no buckets — the serving merge emits
+    an all-sentinel candidate block for it (tested: a corpus pinned to
+    a single group of a 2-group grid).
+    """
+
+    n_groups: int
+    groups: tuple[int, ...]
+
+    def __post_init__(self):
+        if self.n_groups < 1:
+            raise ValueError(f"n_groups={self.n_groups} < 1")
+        object.__setattr__(self, "groups", tuple(int(g) for g in self.groups))
+        bad = [g for g in self.groups if not 0 <= g < self.n_groups]
+        if bad:
+            raise ValueError(
+                f"bucket groups {bad} outside [0, {self.n_groups})")
+
+    # -- construction ----------------------------------------------------
+
+    @classmethod
+    def balanced(cls, weights, n_groups: int) -> "PlacementPlan":
+        """Greedy LPT balance: buckets descend by weight onto the
+        lightest group (ties: lowest group id; equal weights keep
+        bucket order) — deterministic, so every host derives the same
+        plan from the same manifest."""
+        order = sorted(range(len(weights)),
+                       key=lambda i: (-int(weights[i]), i))
+        load = [0] * n_groups
+        groups = [0] * len(weights)
+        for i in order:
+            g = min(range(n_groups), key=lambda j: (load[j], j))
+            groups[i] = g
+            load[g] += int(weights[i])
+        return cls(n_groups=n_groups, groups=tuple(groups))
+
+    @classmethod
+    def for_index(cls, index, n_groups: int) -> "PlacementPlan":
+        """The default plan for an index: buckets balanced over groups
+        by stored bytes (so host HBM/disk loads even out, not just
+        bucket counts)."""
+        return cls.balanced(_bucket_weights(index), n_groups)
+
+    @classmethod
+    def round_robin(cls, n_buckets: int, n_groups: int) -> "PlacementPlan":
+        return cls(n_groups=n_groups,
+                   groups=tuple(i % n_groups for i in range(n_buckets)))
+
+    @classmethod
+    def pinned(cls, n_buckets: int, n_groups: int,
+               group: int = 0) -> "PlacementPlan":
+        """Every bucket on one group (the degenerate placement the
+        differential harness sweeps: other groups serve pure sentinel
+        candidates)."""
+        return cls(n_groups=n_groups, groups=(group,) * n_buckets)
+
+    # -- queries ---------------------------------------------------------
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.groups)
+
+    def group_of(self, bucket: int) -> int:
+        return self.groups[bucket]
+
+    def buckets_of(self, group: int) -> tuple[int, ...]:
+        """Original bucket indices owned by ``group`` (ascending — the
+        order group sub-indexes and sub-manifests list them in)."""
+        if not 0 <= group < self.n_groups:
+            raise ValueError(f"group {group} outside [0, {self.n_groups})")
+        return tuple(i for i, g in enumerate(self.groups) if g == group)
+
+    def validate(self, n_buckets: int) -> "PlacementPlan":
+        """Check the plan covers exactly the index it is applied to —
+        the audit ``topk_search`` and ``index_io`` run before trusting
+        a plan that traveled via manifest or caller."""
+        if len(self.groups) != n_buckets:
+            raise ValueError(
+                f"placement covers {len(self.groups)} buckets, index has "
+                f"{n_buckets}")
+        return self
+
+    # -- manifest round-trip ---------------------------------------------
+
+    def to_manifest(self) -> dict:
+        return {"n_groups": self.n_groups, "groups": list(self.groups)}
+
+    @classmethod
+    def from_manifest(cls, d: dict) -> "PlacementPlan":
+        return cls(n_groups=int(d["n_groups"]),
+                   groups=tuple(int(g) for g in d["groups"]))

@@ -220,28 +220,82 @@ def recsys_rules_rowsharded(multi_pod: bool) -> dict:
     return r
 
 
-def serve_rules(mesh=None) -> dict:
+def serve_rules(mesh=None, placement=None) -> dict:
     """Retrieval-serving rule set (sharded-bucket serving).
 
     Queries are replicated (every shard scores its local docs against
     the whole query batch); the corpus doc axis — logical "candidates",
     which both the dense index and every packed capacity bucket carry as
-    their leading axis — shards over the ``model`` mesh axis.  A serving
-    mesh (``launch.mesh.make_serve_mesh``) puts every device on that
-    axis, so "candidates" spans the whole host/pod.
+    their leading axis — shards over the mesh's candidate-parallel axis:
+    ``model`` on the flat host mesh (``launch.mesh.make_serve_mesh()``,
+    every local device on one axis), ``candidates`` on the 2-D
+    ``hosts x candidates`` grid (``make_serve_mesh(hosts=...)``), where
+    each capacity bucket spans the candidates axis *within* the host
+    group a :class:`repro.sharding.placement.PlacementPlan` pins it to.
 
     Passing ``mesh`` embeds it under ``"__mesh__"`` so explicit-SPMD
     consumers (the streaming top-k merge's ``shard_map``, the sharded
     ``global_keep_masks`` merge) can reach the concrete mesh; without it
     the rules still drive ``constrain`` specs but the streaming merge
-    stays single-device.
+    stays single-device.  ``placement`` rides under ``"__placement__"``
+    (grid meshes only; ``topk_search`` derives the deterministic
+    bytes-balanced default when absent).
     """
+    grid = "hosts" in getattr(mesh, "axis_names", ())
     r = {
         "batch": None,
-        "candidates": ("model",),
+        "candidates": ("candidates",) if grid else ("model",),
         "embed": None,
         "seq": None,
     }
     if mesh is not None:
         r["__mesh__"] = mesh
+    if placement is not None:
+        r["__placement__"] = placement
     return r
+
+
+def data_mesh_for(sharded: bool | None, *, who: str):
+    """Resolve the ``data``-axis mesh explicit-SPMD pruning consumers
+    shard over — the one auto/force/off policy shared by
+    ``voronoi.global_keep_masks`` and
+    ``pruning_pipeline.pruning_order_bucketed`` (they promise to
+    distribute "the same way"; a single resolver keeps that true).
+
+    ``None`` auto-enables when the active rules carry a ``"__mesh__"``
+    whose ``data`` axis is wider than 1; ``True`` requires one (the
+    error names ``who``, the caller); ``False`` never shards.
+    """
+    if sharded is False:
+        return None
+    mesh = (current_rules() or {}).get("__mesh__")
+    ok = (mesh is not None
+          and "data" in getattr(mesh, "axis_names", ())
+          and mesh.shape["data"] > 1)
+    if sharded and not ok:
+        raise ValueError(
+            f"{who}(sharded=True) needs active sharding rules carrying "
+            "a '__mesh__' with a data axis wider than 1 (see "
+            "sharding.axis_rules)")
+    return mesh if ok else None
+
+
+def grid_axes_for(rules: dict | None = None):
+    """Resolve the active rules' multi-host serving grid.
+
+    Returns ``(mesh, n_groups, n_cand, placement)`` when the rules carry
+    a ``"__mesh__"`` that is a 2-D ``hosts x candidates`` grid with more
+    than one host group (``launch.mesh.make_serve_mesh(hosts=...)``);
+    ``placement`` is the rules' ``"__placement__"`` plan or None.
+    Returns ``(None, 1, 1, None)`` otherwise — flat meshes keep the
+    single-tier sharded merge, and a 1-group grid degenerates to it.
+    """
+    rules = rules if rules is not None else (current_rules() or {})
+    mesh = rules.get("__mesh__")
+    names = getattr(mesh, "axis_names", ())
+    if mesh is None or "hosts" not in names or "candidates" not in names:
+        return None, 1, 1, None
+    n_groups = mesh.shape["hosts"]
+    if n_groups <= 1:
+        return None, 1, 1, None
+    return mesh, n_groups, mesh.shape["candidates"], rules.get("__placement__")

@@ -1,0 +1,296 @@
+"""Multi-host bucket placement: the device-grid differential harness.
+
+Covers the placement layer end to end (DESIGN_BACKENDS.md §Placement):
+
+  * :class:`repro.sharding.PlacementPlan` — balance, pinning,
+    validation, manifest round-trip (pure host-side layout metadata);
+  * the 4-device ``hosts x candidates`` grid (subprocess with a forced
+    host device count, the tests/test_sharded_exec.py pattern):
+    ``topk_search`` under every backend x layout x placement is
+    **bitwise** identical — ids and fp scores — to the single-host
+    dense oracle, including empty-after-prune docs, k > docs-in-group,
+    a bucket pinned to a single group, and k > total docs; sharded
+    ``prune_corpus``/``pruning_order_bucketed`` over the ``data`` axis
+    match the single-host path bit for bit; compiled per-group HLO
+    holds no (n_q, n_docs)/full-corpus tensor; the per-group
+    sub-manifest artifact lifecycle reassembles and serves identically
+    (the case bodies live in tests/_grid_cases.py, shared with
+    scripts/smoke.sh so CI exercises the merge tier on every push);
+  * the ``PackedBucket.shard_view`` zero-doc fix: an all-empty shard
+    pads with ``(-inf, -1)`` sentinels the merge audits for, instead of
+    emitting NaN-free but id-garbage candidate rows;
+  * property sweeps (tests/_proptest.py) over ragged corpora + random
+    keep masks: PackedIndex round-trip invariants (doc-id remap total,
+    pow2 bucket capacities, measured ``bytes_stored``) under every
+    placement.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _proptest import sweep
+from repro.launch.mesh import default_serve_hosts, make_serve_mesh
+from repro.serve.index import PackedBucket, PackedIndex
+from repro.serve.retrieval import TokenIndex, maxsim_scores, topk_search
+from repro.sharding import (PlacementPlan, axis_rules, grid_axes_for,
+                            serve_rules)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_grid_case(check: str, n_devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")])
+    code = f"import _grid_cases; _grid_cases.{check}()"
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def _ragged_packed(seed, n_docs, m, dim, granularity="pow2"):
+    k = jax.random.PRNGKey(seed)
+    d = jax.random.normal(k, (n_docs, m, dim)) * 0.5
+    n_real = jax.random.randint(jax.random.fold_in(k, 1), (n_docs,),
+                                1, m + 1)
+    masks = jnp.arange(m)[None, :] < n_real[:, None]
+    keep = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.5, (n_docs, m))
+    masked = TokenIndex.build(d, masks).with_keep(keep)
+    return masked, masked.pack(granularity=granularity)
+
+
+class TestPlacementPlan:
+    def test_balanced_partitions_and_is_deterministic(self):
+        w = [100, 10, 90, 50, 60]
+        a = PlacementPlan.balanced(w, 2)
+        b = PlacementPlan.balanced(w, 2)
+        assert a == b
+        owned = sorted(i for g in range(2) for i in a.buckets_of(g))
+        assert owned == list(range(len(w)))           # exact partition
+        loads = [sum(w[i] for i in a.buckets_of(g)) for g in range(2)]
+        assert max(loads) <= sum(w) - min(loads)      # both groups used
+        assert abs(loads[0] - loads[1]) <= max(w)     # LPT balance bound
+
+    def test_pinned_and_round_robin(self):
+        p = PlacementPlan.pinned(3, 2, group=1)
+        assert p.groups == (1, 1, 1)
+        assert p.buckets_of(0) == () and p.buckets_of(1) == (0, 1, 2)
+        r = PlacementPlan.round_robin(5, 3)
+        assert r.groups == (0, 1, 2, 0, 1)
+        assert r.group_of(4) == 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="outside"):
+            PlacementPlan(n_groups=2, groups=(0, 2))
+        with pytest.raises(ValueError, match="n_groups"):
+            PlacementPlan(n_groups=0, groups=())
+        with pytest.raises(ValueError, match="covers"):
+            PlacementPlan(n_groups=2, groups=(0, 1)).validate(3)
+        with pytest.raises(ValueError, match="outside"):
+            PlacementPlan(n_groups=2, groups=(0,)).buckets_of(2)
+
+    def test_manifest_roundtrip(self):
+        p = PlacementPlan.balanced([7, 3, 5], 2)
+        assert PlacementPlan.from_manifest(p.to_manifest()) == p
+
+    def test_for_index_duck_types_dense_layout(self):
+        masked, packed = _ragged_packed(0, 12, 16, 8)
+        assert PlacementPlan.for_index(masked, 2).n_buckets == 1
+        assert (PlacementPlan.for_index(packed, 2).n_buckets
+                == len(packed.buckets))
+
+
+class TestGridPlumbing:
+    def test_make_serve_mesh_grid_needs_divisible_devices(self):
+        n = len(jax.devices())
+        with pytest.raises(ValueError, match="divide"):
+            make_serve_mesh(hosts=n + 1)
+        flat = make_serve_mesh()
+        assert "hosts" not in flat.axis_names       # hosts=1 stays flat
+
+    def test_default_serve_hosts_single_device(self):
+        # 1-2 devices can't form a >=2x1 grid worth having.
+        if len(jax.devices()) <= 2:
+            assert default_serve_hosts() == 1
+
+    def test_grid_axes_for_ignores_flat_meshes(self):
+        assert grid_axes_for() == (None, 1, 1, None)
+        mesh = make_serve_mesh()
+        with axis_rules(serve_rules(mesh)):
+            assert grid_axes_for()[0] is None       # flat mesh: no grid
+        r = serve_rules(mesh)
+        assert r["candidates"] == ("model",)
+
+    def test_serve_rules_carry_placement(self):
+        plc = PlacementPlan.pinned(2, 2)
+        r = serve_rules(make_serve_mesh(), placement=plc)
+        assert r["__placement__"] is plc
+
+    def test_group_search_requires_grid_rules(self):
+        from repro.serve.retrieval import topk_search_group
+        _, packed = _ragged_packed(1, 8, 16, 8)
+        q = jnp.ones((2, 3, 8))
+        with pytest.raises(ValueError, match="grid"):
+            topk_search_group(packed, q, group=0)
+
+
+class TestZeroDocBucketFix:
+    """The shard_view pad-sentinel audit: a bucket (or whole group) with
+    zero documents must surface as explicit (-inf, -1) pads, never as
+    NaN-free id-garbage candidates."""
+
+    def _empty_bucket(self, cap, dim):
+        return PackedBucket(cap=cap,
+                            doc_ids=jnp.zeros((0,), jnp.int32),
+                            masks=jnp.zeros((0, cap), bool),
+                            embs=jnp.zeros((0, cap, dim), jnp.float32))
+
+    def test_shard_view_pads_empty_bucket_per_shard(self):
+        b = self._empty_bucket(8, 4)
+        for n_shards in (1, 2, 4):
+            e, mk, ids = b.shard_view(4, n_shards, pad_id=99)
+            assert e.shape == (n_shards, 8, 4)
+            assert not bool(mk.any())
+            assert (np.asarray(ids) == -1).all()    # reserved empty id
+        # non-empty buckets keep the caller's pad_id sentinel
+        _, packed = _ragged_packed(2, 5, 16, 8)
+        bk = packed.buckets[0]
+        _, _, ids = bk.shard_view(8, 4, pad_id=packed.n_docs)
+        pads = np.asarray(ids)[bk.n_docs:]
+        assert (pads == packed.n_docs).all()
+
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_empty_bucket_never_displaces_real_empty_doc(self, backend):
+        """The exact failure mode: an all-masked pad row scores the same
+        finite sentinel as a real empty-after-prune doc and, with a
+        lower id, used to beat it on the tie-break.  Doc 0 is pruned
+        empty; an injected 0-doc bucket must not displace it."""
+        masked, packed = _ragged_packed(3, 6, 16, 8)
+        masked = masked.with_keep(masked.keep.at[0].set(False))
+        packed = masked.pack()
+        packed.buckets.insert(0, self._empty_bucket(8, 8))
+        q = jax.random.normal(jax.random.PRNGKey(9), (3, 4, 8))
+        full = maxsim_scores(masked, q, backend=backend)
+        ref_s, ref_i = jax.lax.top_k(full, 6)       # k == n_docs: all docs
+        top_i, top_s = topk_search(packed, q, k=6, backend=backend)
+        ti = np.asarray(top_i)
+        assert ti.min() >= 0, "empty-bucket pad id leaked into results"
+        np.testing.assert_array_equal(np.asarray(ref_i), ti)
+        np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(top_s))
+        # k > total docs with the empty bucket present: output truncates
+        # to the real docs, no sentinel columns.
+        top_i, top_s = topk_search(packed, q, k=10, backend=backend)
+        assert top_i.shape == (3, 6)
+        assert np.asarray(top_i).min() >= 0
+        assert np.isfinite(np.asarray(top_s)).all()
+
+
+class TestPackedRoundtripProperties:
+    """tests/_proptest.py sweeps: PackedIndex invariants over ragged
+    corpora + random keep masks, under every placement."""
+
+    @sweep(n_cases=18, seed=7,
+           n_docs=[1, 3, 7, 19], m=[8, 13, 32], dim=[4, 8],
+           keep_p=[0.0, 0.3, 0.8], granularity=["pow2", 4])
+    def test_pack_invariants(self, n_docs, m, dim, keep_p, granularity):
+        k = jax.random.PRNGKey(n_docs * 131 + m)
+        d = jax.random.normal(k, (n_docs, m, dim))
+        n_real = jax.random.randint(jax.random.fold_in(k, 1), (n_docs,),
+                                    1, m + 1)
+        masks = jnp.arange(m)[None] < n_real[:, None]
+        keep = jax.random.bernoulli(jax.random.fold_in(k, 2), keep_p,
+                                    (n_docs, m))
+        packed = PackedIndex.pack(d, masks, keep, granularity=granularity)
+        # doc-id remap total: buckets partition the corpus exactly
+        ids = sorted(int(x) for b in packed.buckets
+                     for x in np.asarray(b.doc_ids))
+        assert ids == list(range(n_docs))
+        # capacity law per granularity, clamped to [min_width, m]
+        for b in packed.buckets:
+            assert b.cap <= max(m, 8)
+            if granularity == "pow2":
+                assert b.cap & (b.cap - 1) == 0
+            else:
+                assert b.cap % granularity == 0 or b.cap == m
+            # kept tokens fit their bucket, compacted to the front
+            per_doc = np.asarray(b.masks).sum(1)
+            assert (per_doc <= b.cap).all()
+            first_false = np.argmin(np.asarray(b.masks), axis=1)
+            lengths = np.where(np.asarray(b.masks).all(1), b.cap,
+                               first_false)
+            assert (lengths == per_doc).all()       # prefix-dense
+        # measured bytes == independently recomputed array bytes
+        expect = sum(4 * b.n_docs + b.n_docs * b.cap
+                     + 4 * b.n_docs * b.cap * d.shape[-1]
+                     for b in packed.buckets)
+        assert packed.storage()["bytes_stored"] == expect
+        assert packed.tokens_kept == int((keep & masks).sum())
+
+    @sweep(n_cases=8, seed=11,
+           n_docs=[5, 12], m=[16, 24], n_groups=[1, 2, 3],
+           style=["balanced", "round_robin", "pinned"])
+    def test_roundtrip_under_every_placement(self, n_docs, m, n_groups,
+                                             style):
+        import tempfile
+
+        from repro.serve import index_io
+        _, packed = _ragged_packed(n_docs + m, n_docs, m, 8)
+        nb = len(packed.buckets)
+        plc = {"balanced": PlacementPlan.for_index(packed, n_groups),
+               "round_robin": PlacementPlan.round_robin(nb, n_groups),
+               "pinned": PlacementPlan.pinned(nb, n_groups)}[style]
+        q = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 8))
+        ref = np.asarray(maxsim_scores(packed, q))
+        with tempfile.TemporaryDirectory() as td:
+            index_io.save_index(td, packed, placement=plc)
+            assert index_io.has_index(td)
+            assert index_io.load_placement(td) == plc
+            whole = index_io.load_index(td)
+            # reassembly preserves bucket order, bytes, and scores
+            assert [b.cap for b in whole.buckets] \
+                == [b.cap for b in packed.buckets]
+            assert (whole.storage()["bytes_stored"]
+                    == packed.storage()["bytes_stored"])
+            np.testing.assert_array_equal(
+                ref, np.asarray(maxsim_scores(whole, q)))
+            # per-group loads partition the buckets (and the corpus)
+            seen_buckets, seen_docs = 0, []
+            for g in range(n_groups):
+                sub = index_io.load_index(td, group=g)
+                assert sub.n_docs == packed.n_docs
+                assert len(sub.buckets) == len(plc.buckets_of(g))
+                seen_buckets += len(sub.buckets)
+                seen_docs += [int(x) for b in sub.buckets
+                              for x in np.asarray(b.doc_ids)]
+            assert seen_buckets == nb
+            assert sorted(seen_docs) == list(range(packed.n_docs))
+
+
+class TestGridDifferential:
+    """The 4-device (2 hosts x 2 candidates) subprocess fixtures; case
+    bodies in tests/_grid_cases.py, shared with scripts/smoke.sh."""
+
+    def test_grid_topk_parity(self):
+        out = _run_grid_case("check_topk_parity")
+        assert "GRID_TOPK_PARITY_OK" in out
+
+    def test_grid_prune_parity(self):
+        out = _run_grid_case("check_prune_parity")
+        assert "GRID_PRUNE_PARITY_OK" in out
+
+    def test_grid_hlo_clean(self):
+        out = _run_grid_case("check_hlo_clean")
+        assert "GRID_HLO_OK" in out
+
+    def test_grid_artifact_roundtrip(self):
+        out = _run_grid_case("check_artifact_roundtrip")
+        assert "GRID_ARTIFACT_OK" in out
