@@ -27,9 +27,12 @@ either way.
 last trajectory entry and fails (exit 1) if batched pruning regressed
 below the same run's reference-path docs/sec, if packed serving
 dropped below the masked path, if streaming serving dropped below the
-materializing path (or its results diverged), or if a corpus-sized
+materializing path (or its results diverged), if a corpus-sized
 (n_q, n_docs) score tensor reappeared in the compiled streaming
-serving HLO — the smoke scripts/smoke.sh runs after recording.
+serving HLO, or if fault-tolerant serving regressed (replicated
+failover after one lost host group no longer bit-identical to the
+no-failure oracle, or degraded unreplicated serving not reporting
+0 < coverage < 1) — the smoke scripts/smoke.sh runs after recording.
 """
 
 from __future__ import annotations
@@ -306,6 +309,103 @@ def _grid_worker(shape: dict) -> dict:
     }
 
 
+def run_fault_tolerance(**shape):
+    """Fault-tolerant replicated serving (DESIGN_BACKENDS.md §Failure
+    semantics) on the 4-device forced grid: q/s of replicas=2 monitored
+    serving at full health, the failover-recovery latency (wall time of
+    the FIRST query after a host group is demoted — failover routing +
+    the replica programs' compile), post-failover steady-state q/s, a
+    parity bit (failover results bit-identical to the no-failure
+    oracle), and the degraded coverage fraction an unreplicated plan
+    reports after the same loss.  ``--check`` gates the parity bit and
+    the degraded-coverage contract."""
+    import subprocess
+    shape = GRID | shape
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                      os.pardir))]
+        + [os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        os.pardir, "src"))]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_kernel_backends",
+         "--fault-worker", json.dumps(shape)],
+        env=env, capture_output=True, text=True, timeout=540)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"fault bench worker failed:\n{out.stderr[-2000:]}")
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("FAULT_RESULT ")][-1]
+    return json.loads(line[len("FAULT_RESULT "):])
+
+
+def _fault_worker(shape: dict) -> dict:
+    """Runs inside the forced-device subprocess; prints one
+    ``FAULT_RESULT {json}`` line."""
+    from repro.launch.mesh import default_serve_hosts, make_serve_mesh
+    from repro.serve import health
+    from repro.sharding import PlacementPlan, axis_rules, serve_rules
+
+    hosts = int(shape["hosts"])
+    n_dev = len(jax.devices())
+    if n_dev < 2 * hosts or default_serve_hosts() < 2:
+        return {"skipped": f"needs {2 * hosts} devices, have {n_dev}"}
+    n_q, n_docs, m, l, dim, k = (shape[x] for x in
+                                 ("n_q", "n_docs", "m", "l", "dim", "k"))
+    key = jax.random.PRNGKey(0)
+    d = jax.random.normal(key, (n_docs, m, dim))
+    n_real = jax.random.randint(jax.random.fold_in(key, 1), (n_docs,),
+                                1, m + 1)
+    masks = jnp.arange(m)[None] < n_real[:, None]
+    keep = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.6,
+                                (n_docs, m))
+    packed = TokenIndex.build(d, masks).with_keep(keep).pack()
+    q = jax.random.normal(jax.random.fold_in(key, 3), (n_q, l, dim))
+
+    i_ref, s_ref = topk_search(packed, q, k=k)      # no-failure oracle
+    grid_mesh = make_serve_mesh(hosts=hosts)
+    lost = 0
+
+    # Replicated plan: full-coverage failover after losing any group.
+    plc2 = PlacementPlan.for_index(packed, hosts, replicas=2)
+    mon2 = health.FleetMonitor(hosts)
+    with axis_rules(serve_rules(grid_mesh, placement=plc2)):
+        run2 = lambda: topk_search(packed, q, k=k, monitor=mon2)
+        i_h, s_h = run2()                           # warm primary programs
+        t_rep, _ = common.timeit(run2, repeat=2)
+        mon2.demote(lost)
+        t0 = time.perf_counter()
+        i_f, s_f = run2()       # first query after loss: reroute + compile
+        t_failover = time.perf_counter() - t0
+        t_post, _ = common.timeit(run2, repeat=2)
+    same = lambda a, b: bool((np.asarray(a) == np.asarray(b)).all())
+    parity_healthy = same(i_ref, i_h) and same(s_ref, s_h)
+    parity_failover = same(i_ref, i_f) and same(s_ref, s_f)
+
+    # Unreplicated plan: the same loss degrades with explicit coverage.
+    plc1 = PlacementPlan.for_index(packed, hosts)
+    mon1 = health.FleetMonitor(hosts)
+    mon1.demote(lost)
+    with axis_rules(serve_rules(grid_mesh, placement=plc1)):
+        out = topk_search(packed, q, k=k, monitor=mon1)
+    coverage = float(getattr(out, "coverage", 1.0))
+
+    return {
+        "replicated": n_q / t_rep,
+        "post_failover": n_q / t_post,
+        "failover_recovery_s": t_failover,
+        "parity_healthy": parity_healthy,
+        "parity_failover_identical": parity_failover,
+        "degraded_coverage": coverage,
+        "degraded_scores_finite": bool(
+            np.isfinite(np.asarray(out.top_scores)).all()),
+        "shape": dict(shape, n_devices=n_dev, replicas=2,
+                      lost_group=lost),
+    }
+
+
 def load_trajectory(path: str = OUT_PATH) -> list[dict]:
     """Read the trajectory entries; a legacy single-record dict (PR 1
     wrote one overwritten object) is adopted as the first entry."""
@@ -406,6 +506,30 @@ def check_last(path: str = OUT_PATH) -> None:
           f"{xb['grid_cross_host']} B vs {xb['flat_cross_host']} B "
           f"({grid['cross_host_bytes_ratio_flat_over_grid']:.1f}x less, "
           f"parity + HLO clean)")
+    ft = last.get("fault_tolerance")
+    if ft is None:
+        raise SystemExit(f"{path}: last entry predates fault-tolerant "
+                         "serving; re-run the bench")
+    if ft.get("skipped"):
+        print(f"fault tolerance smoke SKIPPED: {ft['skipped']}")
+        return
+    if not ft.get("parity_failover_identical", False):
+        raise SystemExit(
+            "FAILOVER REGRESSION: replicated serving after one lost host "
+            "group diverged from the no-failure oracle at shape "
+            f"{ft.get('shape')}")
+    if not (0.0 < ft.get("degraded_coverage", 1.0) < 1.0
+            and ft.get("degraded_scores_finite", False)):
+        raise SystemExit(
+            "COVERAGE REGRESSION: unreplicated serving under a lost "
+            "group must report 0 < coverage < 1 with finite scores, got "
+            f"coverage={ft.get('degraded_coverage')} at shape "
+            f"{ft.get('shape')}")
+    print(f"fault tolerance smoke OK: replicated {ft['replicated']:.2f} "
+          f"q/s, failover recovery {ft['failover_recovery_s']*1e3:.0f} ms, "
+          f"post-failover {ft['post_failover']:.2f} q/s "
+          f"(bit-identical); degraded coverage "
+          f"{ft['degraded_coverage']:.3f}")
 
 
 def main():
@@ -415,6 +539,7 @@ def main():
     layout = run_packed_serving()
     stream = run_streaming_serving()
     grid = run_grid_serving()
+    fault = run_fault_tolerance()
 
     for name in PRUNING_BACKENDS:
         common.csv_line(f"kernel_backends/pruning_{name}",
@@ -482,6 +607,25 @@ def main():
             f"{grid['cross_host_bytes_ratio_flat_over_grid']:.1f}x;"
             f"parity={grid['results_identical']};"
             f"hlo_clean={grid['hlo_no_corpus_matrix']}")
+    if fault.get("skipped"):
+        common.csv_line("kernel_backends/serving_fault_skipped", 0.0,
+                        f"reason={fault['skipped']}")
+    else:
+        common.csv_line("kernel_backends/serving_replicated",
+                        1e6 / fault["replicated"],
+                        f"q_per_s={fault['replicated']:.2f}")
+        common.csv_line("kernel_backends/serving_failover_recovery",
+                        fault["failover_recovery_s"] * 1e6,
+                        f"first_query_after_loss_s="
+                        f"{fault['failover_recovery_s']:.3f}")
+        fault_ok = (fault["parity_failover_identical"]
+                    and 0.0 < fault["degraded_coverage"] < 1.0)
+        common.csv_line(
+            "kernel_backends/CLAIM_replicated_failover_bit_identical",
+            0.0,
+            f"holds={fault_ok};"
+            f"parity={fault['parity_failover_identical']};"
+            f"degraded_coverage={fault['degraded_coverage']:.3f}")
 
     entry = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -531,6 +675,11 @@ def main():
             grid.get("skipped")
             or (grid["results_identical"]
                 and grid["hlo_no_corpus_matrix"])),
+        "fault_tolerance": fault,
+        "claim_replicated_failover_bit_identical": bool(
+            fault.get("skipped")
+            or (fault["parity_failover_identical"]
+                and 0.0 < fault["degraded_coverage"] < 1.0)),
     }
     append_entry(entry)
 
@@ -540,6 +689,9 @@ if __name__ == "__main__":
     if "--grid-worker" in argv:
         shape = json.loads(argv[argv.index("--grid-worker") + 1])
         print("GRID_RESULT " + json.dumps(_grid_worker(shape)))
+    elif "--fault-worker" in argv:
+        shape = json.loads(argv[argv.index("--fault-worker") + 1])
+        print("FAULT_RESULT " + json.dumps(_fault_worker(shape)))
     elif "--check" in argv:
         check_last()
     else:

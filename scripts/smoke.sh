@@ -3,10 +3,12 @@
 # micro-benches (Pallas interpreter off-TPU), the backend-dispatch perf
 # record, the throughput gates (fails if batched bucketed pruning
 # regresses below the reference path, if packed serving drops below the
-# masked path, or if grid-placed serving loses parity/HLO cleanliness,
-# at the bench shapes), and the packed-index lifecycle roundtrip
-# (prune -> pack -> save on the first serve run, load -> query on the
-# second — the offline/online split a real deployment uses).
+# masked path, if grid-placed serving loses parity/HLO cleanliness, or
+# if replicated failover loses bit-parity / degraded coverage breaks
+# its 0 < c < 1 contract, at the bench shapes), and the packed-index
+# lifecycle roundtrip (prune -> pack -> save on the first serve run,
+# load -> query on the second — the offline/online split a real
+# deployment uses), including a replicated run that kills a host group.
 # Run from anywhere; zstandard is optional (checkpointing falls back to
 # uncompressed bodies).
 set -euo pipefail
@@ -20,7 +22,11 @@ python -m benchmarks.bench_kernel_backends --check
 # 4-device grid parity subset (tests/_grid_cases.py, the same case
 # bodies the test_placement.py subprocess fixtures run): every push
 # exercises the multi-host merge-tree tier — per-group candidate
-# reduction + cross-group exchange — bit-identical to the dense oracle.
+# reduction + cross-group exchange — bit-identical to the dense
+# oracle, plus the fault-injection sweep (check_fault_tolerance /
+# check_failover_server): kill-one-group under replicas=2 stays
+# bit-identical, unreplicated loss degrades to the restricted oracle
+# with explicit coverage, and all three --on-group-loss policies hold.
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src:tests${PYTHONPATH:+:$PYTHONPATH} \
   python -c "import _grid_cases; _grid_cases.main()" | grep -q GRID_CASES_OK
@@ -48,4 +54,15 @@ XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   | grep -E "host-group bodies|grid serving mesh|route: e2e" | wc -l \
   | grep -q 3
 test -f "$grid_dir/packed_index.group0.json"
+# fault-tolerant lifecycle: replicated (replicas=2) artifact on the
+# same 2x2 grid, then serve it with host group 1 killed — the replica
+# chains must absorb the loss at full coverage (the failover path the
+# bench's --check above gates for bit-parity).
+rep_dir="$(dirname "$index_dir")/replicated_index"
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  python -m repro.launch.serve --arch colbert --index-dir "$rep_dir" \
+  --mesh grid --n-first 0 --replicas 2 --kill-group 1 \
+  | grep -E "replicas=2|injected loss of host group 1|coverage: 1.000" \
+  | wc -l | grep -q 3
+test -f "$rep_dir/packed_index.group1.json"
 echo "smoke OK"

@@ -189,6 +189,7 @@ def tuned_serving_blocks(n_q: int, n_docs: int, m: int, l: int, dim: int,
 
 def tuned_streaming_blocks(n_q: int, n_docs: int, m: int, l: int, dim: int,
                            k: int, *, n_shards: int = 1, n_groups: int = 1,
+                           replicas: int = 1,
                            block_docs: int | None = None,
                            block_q: int | None = None,
                            chunk_docs: int | None = None
@@ -204,16 +205,21 @@ def tuned_streaming_blocks(n_q: int, n_docs: int, m: int, l: int, dim: int,
     count.  Under multi-host placement (``n_groups > 1``) the host
     group count joins the key too: a bucket pinned to a group spans
     only that group's candidates row, and its measured optimum need
-    not match the flat layout's at the same shard count.  Explicit
-    values win; ``None``s come from the autotuner.  Call OUTSIDE jit
-    (the server's ``_warm_tuner`` pre-resolves every key its closures
-    will ask for).
+    not match the flat layout's at the same shard count.  Replicated
+    placements (``replicas > 1``) likewise key separately — a group
+    serving replica copies scores more buckets per query than the
+    unreplicated layout at the same group count, shifting the measured
+    optimum.  Explicit values win; ``None``s come from the autotuner.
+    Call OUTSIDE jit (the server's ``_warm_tuner`` pre-resolves every
+    key its closures will ask for).
     """
     if block_docs is None or block_q is None or chunk_docs is None:
         shape = dict(n_q=n_q, n_docs=n_docs, m=m, l=l, dim=dim,
                      k=k, n_shards=n_shards)
         if n_groups > 1:    # flat-layout keys stay unchanged
             shape["n_groups"] = n_groups
+        if replicas > 1:    # unreplicated grid keys stay unchanged
+            shape["replicas"] = replicas
         cfg = tuned("serving", **shape)
         block_docs = cfg.block_docs if block_docs is None else block_docs
         block_q = cfg.block_q if block_q is None else block_q

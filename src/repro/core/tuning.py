@@ -182,10 +182,11 @@ def _serving_heuristic(shape: dict, platform: str,
     # count ``n_shards``: knobs are then sized for the SHARD-LOCAL slice
     # of the bucket, not its global doc count.  Under multi-host bucket
     # placement the host-group count ``n_groups`` joins the key as well
-    # (``backend.tuned_streaming_blocks(n_groups=...)``) — the heuristic
-    # math is already shard-local so it reads only ``n_shards``, but
-    # measured-mode entries must not leak between the flat and grid
-    # layouts.
+    # (``backend.tuned_streaming_blocks(n_groups=...)``), and under a
+    # replicated plan so does ``replicas`` — the heuristic math is
+    # already shard-local so it reads only ``n_shards``, but
+    # measured-mode entries must not leak between the flat, grid, and
+    # replicated-grid layouts.
     k = int(shape.get("k", 0))
     n_shards = max(1, int(shape.get("n_shards", 1)))
     n_local = -(-n_docs // n_shards)

@@ -27,7 +27,7 @@ from repro.data import synthetic
 from repro.launch import mesh as mesh_lib
 from repro.models import colbert as colbert_lib
 from repro.models import transformer as tfm
-from repro.serve import index_io
+from repro.serve import health, index_io
 from repro.serve.retrieval import RetrievalServer, TokenIndex
 from repro.train import checkpoint
 
@@ -39,9 +39,14 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
                     compress: str = "none",
                     mesh: str = "none",
                     n_first: int = 64,
-                    hosts: int = 0):
+                    hosts: int = 0,
+                    replicas: int = 1,
+                    on_group_loss: str = "degrade",
+                    kill_group: int | None = None):
     cfg = configs.get("colbert").smoke
     params = colbert_lib.init_params(jax.random.PRNGKey(seed), cfg)
+    if replicas < 1:
+        raise ValueError(f"--replicas {replicas} < 1")
     if ckpt_dir:
         _, restored = checkpoint.restore_latest(
             ckpt_dir, {"params": params, "opt": None, "step": None})
@@ -95,8 +100,15 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
         packed = pruned.pack(compression=compress)
         print(f"[serve] packed (measured): {packed.storage()}")
         if index_dir:
-            placement = (shlib.PlacementPlan.for_index(packed, hosts)
-                         if mesh == "grid" and hosts > 1 else None)
+            placement = None
+            if mesh == "grid" and hosts > 1:
+                r = min(replicas, hosts)
+                if r != replicas:
+                    print(f"[serve] WARNING: --replicas {replicas} clamped "
+                          f"to {r} (chains must land on distinct groups, "
+                          f"only {hosts} host groups)")
+                placement = shlib.PlacementPlan.for_index(packed, hosts,
+                                                          replicas=r)
             index_io.save_index(index_dir, packed, placement=placement)
             # Serve what is on disk, not what is in memory: the reload
             # exercises the exact artifact a later job would start from.
@@ -115,6 +127,7 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
     # serves the two-stage rerank, whose first stage streams but stays
     # shard-local.
     ctx = contextlib.nullcontext()
+    monitor = None
     if mesh == "host":
         serve_mesh = mesh_lib.make_serve_mesh()
         n_shards = serve_mesh.shape["model"]
@@ -143,11 +156,17 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
                       f"{len(jax.devices())} devices cannot form that "
                       f"grid; rebalancing for {hosts} groups")
                 placement = None
-        placement = placement or shlib.PlacementPlan.for_index(packed,
-                                                               hosts)
+        if placement and replicas > 1 and placement.replicas != replicas:
+            print(f"[serve] WARNING: --replicas {replicas} ignored; the "
+                  f"artifact's plan stores replicas={placement.replicas} "
+                  f"(delete {index_dir} to re-place)")
+        placement = placement or shlib.PlacementPlan.for_index(
+            packed, hosts, replicas=min(replicas, hosts))
         serve_mesh = mesh_lib.make_serve_mesh(hosts=hosts)
         print(f"[serve] grid serving mesh: {dict(serve_mesh.shape)} "
-              f"(placement groups={list(placement.groups)})")
+              f"(placement groups={list(placement.groups)}, "
+              f"replicas={placement.replicas})")
+        monitor = health.FleetMonitor(hosts)
         ctx = shlib.axis_rules(shlib.serve_rules(serve_mesh,
                                                  placement=placement))
     elif mesh == "grid":
@@ -158,16 +177,30 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
     route = "e2e" if n_first >= packed.n_docs else "two-stage"
     with ctx:
         server = RetrievalServer(packed, k=10, n_first=n_first,
-                                 backend=serve_backend)
+                                 backend=serve_backend, monitor=monitor,
+                                 on_group_loss=on_group_loss)
         print(f"[serve] route: {route} (n_first={n_first}, "
               f"n_docs={packed.n_docs})")
         print(f"[serve] scoring backend: {server.backend}")
+        if kill_group is not None:
+            if monitor is None:
+                print("[serve] WARNING: --kill-group needs an active "
+                      "--mesh grid; ignored")
+            else:
+                monitor.demote(kill_group)
+                print(f"[serve] injected loss of host group {kill_group} "
+                      f"(--on-group-loss {on_group_loss})")
         q_emb, _ = colbert_lib.encode_queries(params, cfg, corpus.q_ids)
         t0 = time.time()
-        idx, scores = server.query_batch(q_emb)
+        out = server.query_batch(q_emb)
         dt = time.time() - t0
+        idx, scores = out
+        coverage = getattr(out, "coverage", 1.0)
         print(f"[serve] {n_queries} queries in {dt*1e3:.1f} ms "
               f"({dt/n_queries*1e3:.2f} ms/q)")
+        if monitor is not None:
+            print(f"[serve] coverage: {coverage:.3f} "
+                  f"(live groups: {sorted(monitor.live())})")
     return idx, scores
 
 
@@ -218,6 +251,24 @@ def main():
     ap.add_argument("--hosts", type=int, default=0,
                     help="host-group count for --mesh grid (0 = auto: "
                          "largest pow2 grid the device count supports)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica count for --mesh grid placement: each "
+                         "capacity bucket is stored on this many distinct "
+                         "host groups (a replica chain, primary first), so "
+                         "losing any replicas-1 groups still serves exact, "
+                         "full-coverage results; clamped to --hosts")
+    ap.add_argument("--on-group-loss", default="degrade",
+                    choices=["degrade", "rebalance", "fail"],
+                    help="policy when every replica of some bucket is "
+                         "unreachable: 'degrade' answers from surviving "
+                         "buckets and reports coverage < 1, 'rebalance' "
+                         "re-places lost buckets over surviving groups "
+                         "(PlacementPlan.rebalance) and re-answers at full "
+                         "coverage, 'fail' raises DegradedCoverage")
+    ap.add_argument("--kill-group", type=int, default=None,
+                    help="fault injection: demote this host group before "
+                         "the query batch (demo of the failover / "
+                         "degraded-coverage path; needs --mesh grid)")
     ap.add_argument("--n-first", type=int, default=64,
                     help="first-stage candidate count; >= corpus size "
                          "(or 0) serves the e2e exact sweep — the route "
@@ -227,7 +278,10 @@ def main():
         serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir,
                         backend=args.backend, index_dir=args.index_dir,
                         compress=args.compress, mesh=args.mesh,
-                        n_first=args.n_first, hosts=args.hosts)
+                        n_first=args.n_first, hosts=args.hosts,
+                        replicas=args.replicas,
+                        on_group_loss=args.on_group_loss,
+                        kill_group=args.kill_group)
     else:
         serve_lm(args.arch, n_tokens=args.tokens)
 

@@ -1,3 +1,3 @@
-from repro.serve import index, index_io, retrieval
+from repro.serve import health, index, index_io, retrieval
 
-__all__ = ["index", "index_io", "retrieval"]
+__all__ = ["health", "index", "index_io", "retrieval"]

@@ -1,0 +1,270 @@
+"""Fleet health for grid serving: heartbeats, failover policy, faults.
+
+The grid serving path (``repro.serve.retrieval.topk_search`` over a
+``hosts x candidates`` mesh) runs one program per host group and one
+k-wide candidate exchange per query.  PR 5 assumed every group answers;
+one lost or slow group stalled or poisoned the whole merge.  This
+module is the health layer that closes that hole:
+
+* :class:`FleetMonitor` — per-group liveness built on the *training*
+  elasticity primitives in ``repro.train.elastic`` (one vocabulary for
+  fleet state across train and serve): its snapshot type is
+  ``elastic.FleetView`` and its latency flagger is
+  ``elastic.StragglerMonitor`` keyed by group id.  Tracks per-group
+  heartbeats, consecutive exchange failures (``strike``), and
+  permanently demotes a group after ``max_strikes`` — a demoted group
+  is never dispatched again until an operator rebuilds the server.
+* :class:`FaultPlan` / :class:`Fault` — the injection harness the
+  device-grid differential tests thread through the exchange: kill a
+  group before dispatch or after compute (mid-exchange), or delay its
+  candidate fetch past the exchange deadline, at one round or from a
+  round onward.  Faults surface as :class:`GroupFailure`, exactly the
+  exception real transport failures map to, so the tested failover
+  path *is* the production path.
+
+Timing is injected (``clock=``) so every policy is unit-testable with
+a fake clock — the same design rule ``train/elastic.py`` follows (see
+tests/test_health.py, tests/test_elastic.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+
+from repro.train.elastic import FleetView, StragglerMonitor
+
+__all__ = ["FleetMonitor", "FaultPlan", "Fault", "GroupFailure",
+           "DegradedCoverage"]
+
+
+class GroupFailure(RuntimeError):
+    """A host group failed to answer an exchange round (transport
+    error, injected kill, or deadline overrun)."""
+
+
+class DegradedCoverage(RuntimeError):
+    """Raised by ``RetrievalServer`` under ``--on-group-loss fail``
+    when a result would cover less than the full stored index."""
+
+
+# -- fault injection -----------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected fault against ``group``.
+
+    ``kind`` is one of:
+      * ``"kill_before"`` — group unreachable at dispatch (host down).
+      * ``"kill_after"``  — group computes, then dies mid-exchange
+        (candidates never arrive).
+      * ``"delay"``       — group answers ``delay`` seconds late (a
+        straggler; with an exchange deadline this becomes a timeout).
+
+    ``round`` fires the fault at exactly that exchange round,
+    ``from_round`` from that round onward; both ``None`` means every
+    round (a permanently dead/slow group).
+    """
+
+    group: int
+    kind: str
+    round: int | None = None
+    from_round: int | None = None
+    delay: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("kill_before", "kill_after", "delay"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+    def active(self, round_i: int) -> bool:
+        if self.round is not None and round_i != self.round:
+            return False
+        if self.from_round is not None and round_i < self.from_round:
+            return False
+        return True
+
+
+def kill_group(group: int, *, round: int | None = None,
+               from_round: int | None = None,
+               when: str = "before") -> Fault:
+    """A kill fault; ``when`` is ``"before"`` (at dispatch) or
+    ``"after"`` (mid-exchange, post-compute)."""
+    if when not in ("before", "after"):
+        raise ValueError(f"when={when!r} not in ('before', 'after')")
+    return Fault(group=group, kind=f"kill_{when}", round=round,
+                 from_round=from_round)
+
+
+def delay_group(group: int, seconds: float, *, round: int | None = None,
+                from_round: int | None = None) -> Fault:
+    """A straggler fault: the group's candidate fetch sleeps
+    ``seconds`` before answering."""
+    return Fault(group=group, kind="delay", round=round,
+                 from_round=from_round, delay=float(seconds))
+
+
+class FaultPlan:
+    """A scripted schedule of :class:`Fault`\\ s, threaded through the
+    exchange by ``topk_search(..., faults=...)``.  The exchange calls
+    ``begin_round()`` once per query and ``check(group, stage)`` at
+    each dispatch (``stage="dispatch"``) and candidate fetch
+    (``stage="exchange"``); matching kills raise
+    :class:`GroupFailure`, matching delays sleep."""
+
+    def __init__(self, faults=(), *, sleep=time.sleep):
+        self.faults = tuple(faults)
+        self._sleep = sleep
+        self._round = -1
+
+    @property
+    def round(self) -> int:
+        return self._round
+
+    def begin_round(self) -> int:
+        self._round += 1
+        return self._round
+
+    def check(self, group: int, stage: str):
+        if stage not in ("dispatch", "exchange"):
+            raise ValueError(f"stage={stage!r}")
+        for f in self.faults:
+            if f.group != group or not f.active(self._round):
+                continue
+            if f.kind == "kill_before" and stage == "dispatch":
+                raise GroupFailure(
+                    f"injected: group {group} down at dispatch "
+                    f"(round {self._round})")
+            if f.kind == "kill_after" and stage == "exchange":
+                raise GroupFailure(
+                    f"injected: group {group} died mid-exchange "
+                    f"(round {self._round})")
+            if f.kind == "delay" and stage == "exchange":
+                self._sleep(f.delay)
+
+
+# -- fleet monitor -------------------------------------------------------
+
+
+class FleetMonitor:
+    """Liveness + failover policy for ``n_groups`` host groups.
+
+    A group is **live** when it is not demoted and (if
+    ``heartbeat_timeout`` is set) its last heartbeat is fresh.  The
+    exchange only dispatches live groups; a failed exchange is a
+    ``strike``, ``max_strikes`` consecutive strikes demote the group
+    permanently.  A successful exchange heartbeats the group, clears
+    its strikes, and feeds its latency to the shared
+    ``StragglerMonitor`` (slow groups surface via ``stragglers()``
+    before they ever time out).
+
+    ``exchange_timeout`` (seconds, ``None`` = no deadline) bounds each
+    candidate fetch; ``backoff(attempt)`` is the pause before failover
+    attempt ``attempt`` (exponential, capped at ``backoff_max``).
+    """
+
+    def __init__(self, n_groups: int, *,
+                 heartbeat_timeout: float | None = None,
+                 exchange_timeout: float | None = None,
+                 retries: int = 1,
+                 max_strikes: int = 3,
+                 backoff_base: float = 0.05,
+                 backoff_max: float = 2.0,
+                 straggler_threshold: float = 1.5,
+                 straggler_window: int = 8,
+                 straggler_patience: int = 3,
+                 clock=time.monotonic):
+        if n_groups < 1:
+            raise ValueError(f"n_groups={n_groups} < 1")
+        if retries < 0:
+            raise ValueError(f"retries={retries} < 0")
+        if max_strikes < 1:
+            raise ValueError(f"max_strikes={max_strikes} < 1")
+        self.n_groups = n_groups
+        self.heartbeat_timeout = heartbeat_timeout
+        self.exchange_timeout = exchange_timeout
+        self.retries = retries
+        self.max_strikes = max_strikes
+        self.backoff_base = backoff_base
+        self.backoff_max = backoff_max
+        self.clock = clock
+        # Groups start live: construction is the first heartbeat.
+        self._beat = {g: clock() for g in range(n_groups)}
+        self._strikes: dict[int, int] = defaultdict(int)
+        self._demoted: set[int] = set()
+        self.latency = StragglerMonitor(threshold=straggler_threshold,
+                                        window=straggler_window,
+                                        patience=straggler_patience)
+
+    # -- liveness --------------------------------------------------------
+
+    def heartbeat(self, group: int):
+        self._check_group(group)
+        self._beat[group] = self.clock()
+
+    def is_live(self, group: int) -> bool:
+        self._check_group(group)
+        if group in self._demoted:
+            return False
+        if self.heartbeat_timeout is None:
+            return True
+        return self.clock() - self._beat[group] <= self.heartbeat_timeout
+
+    def live(self) -> frozenset:
+        """Groups the exchange may dispatch right now."""
+        return frozenset(g for g in range(self.n_groups) if self.is_live(g))
+
+    @property
+    def demoted(self) -> frozenset:
+        return frozenset(self._demoted)
+
+    def fleet(self) -> FleetView:
+        """The fleet snapshot in the training-side vocabulary: one
+        'device' per host group, demoted/stale groups failed."""
+        live = self.live()
+        return FleetView(
+            n_devices=self.n_groups,
+            failed=frozenset(g for g in range(self.n_groups)
+                             if g not in live))
+
+    # -- failure accounting ----------------------------------------------
+
+    def strike(self, group: int) -> bool:
+        """Record one failed exchange; returns True when the group just
+        crossed ``max_strikes`` and is now permanently demoted."""
+        self._check_group(group)
+        if group in self._demoted:
+            return False
+        self._strikes[group] += 1
+        if self._strikes[group] >= self.max_strikes:
+            self.demote(group)
+            return True
+        return False
+
+    def demote(self, group: int):
+        self._check_group(group)
+        self._demoted.add(group)
+
+    def record_exchange(self, group: int, seconds: float):
+        """A successful exchange: heartbeat, clear strikes, feed the
+        straggler window."""
+        self.heartbeat(group)
+        self._strikes[group] = 0
+        self.latency.record(group, seconds)
+
+    def stragglers(self) -> list:
+        """Live-but-slow groups (``StragglerMonitor`` policy over
+        exchange latencies)."""
+        return [g for g in self.latency.stragglers()
+                if g not in self._demoted]
+
+    def backoff(self, attempt: int) -> float:
+        """Pause before failover attempt ``attempt`` (0-based)."""
+        return min(self.backoff_base * (2 ** max(attempt, 0)),
+                   self.backoff_max)
+
+    def _check_group(self, group: int):
+        if not 0 <= group < self.n_groups:
+            raise ValueError(
+                f"group {group} outside [0, {self.n_groups})")

@@ -37,7 +37,13 @@ atomic like the body.
 newer-format manifests loudly instead of misreading them.  Placement-
 less saves still write format-1 manifests (byte-layout unchanged since
 PR 3), so older readers keep working on artifacts that don't use the
-new layout; placed saves write format 2.
+new layout; flat placed saves write format 2, and *replicated*
+placements (``PlacementPlan(replicas=r)`` — each bucket's body lands
+in every replica group's sub-manifest and body) write format 3, so a
+pre-replication reader refuses them loudly instead of silently
+serving duplicate buckets.  ``load_index`` on a replicated artifact
+dedupes bucket copies by original index when reassembling the full
+view.
 """
 
 from __future__ import annotations
@@ -56,8 +62,19 @@ __all__ = ["FORMAT", "MANIFEST", "has_index", "load_index",
 
 # 2: the manifest grew "placement" and the body may split into
 # per-host-group sub-manifests + bodies; format-1 artifacts load fine.
-FORMAT = 2
+# 3: replicated placements — a bucket's body appears in EVERY group of
+# its replica chain, and the placement manifest nests replica chains.
+# Readers accept <= FORMAT; each artifact is stamped with the lowest
+# format that can describe it, so old layouts stay loadable by old
+# readers.
+FORMAT = 3
 MANIFEST = "packed_index.json"
+
+
+def _format_for(placement: PlacementPlan | None) -> int:
+    if placement is None:
+        return 1
+    return 2 if placement.replicas == 1 else FORMAT
 
 
 def _group_manifest(g: int) -> str:
@@ -111,7 +128,7 @@ def save_index(path: str, index: PackedIndex, *,
     os.makedirs(path, exist_ok=True)
     saver = checkpoint.save_async if async_save else checkpoint.save
     manifest = _meta(index) | {
-        "format": 1 if placement is None else FORMAT,
+        "format": _format_for(placement),
         "buckets": [{"cap": b.cap, "n_docs": b.n_docs}
                     for b in index.buckets],
     }
@@ -119,9 +136,11 @@ def save_index(path: str, index: PackedIndex, *,
         placement.validate(len(index.buckets))
         manifest["placement"] = placement.to_manifest()
         for g in range(placement.n_groups):
+            # A bucket persists in every group of its replica chain, so
+            # any surviving replica can restore and serve it alone.
             picked = placement.buckets_of(g)
             sub = _meta(index) | {
-                "format": FORMAT,
+                "format": _format_for(placement),
                 "kind": "packed_index_group",
                 "group": g,
                 "placement": placement.to_manifest(),
@@ -170,7 +189,10 @@ def has_index(path: str) -> bool:
     placement = manifest.get("placement")
     if placement is None:
         return bool(checkpoint.list_steps(path))
-    groups = {int(g) for g in placement["groups"]}
+    try:
+        groups = PlacementPlan.from_manifest(placement).used_groups()
+    except (IOError, ValueError, KeyError):
+        return False
     return all(bool(checkpoint.list_steps(_group_dir(path, g)))
                for g in groups)
 

@@ -56,8 +56,10 @@ matrix.
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -67,9 +69,45 @@ from repro.core.scoring import NEG_INF
 from repro.core.tuning import _pow2_at_least
 from repro.kernels.colbert_maxsim.ops import (colbert_maxsim_multi_op,
                                               colbert_maxsim_rerank_op)
+from repro.serve import health as health_lib
 from repro.serve.index import PackedIndex
 from repro.sharding import (PlacementPlan, constrain, grid_axes_for,
                             mesh_axes_for)
+from repro.sharding.placement import bucket_weights
+
+
+class TopKResult(tuple):
+    """``(top_idx, top_scores)`` that also reports result ``coverage``.
+
+    Unpacks exactly like the 2-tuple every pre-fault-tolerance caller
+    expects (``ids, scores = topk_search(...)`` keeps working);
+    ``coverage`` is the fraction of stored bucket bytes the answer
+    consulted — ``1.0`` on every fully-healthy path, ``< 1.0`` when
+    grid serving answered from surviving replicas only (every replica
+    of some bucket set unreachable).  Degraded results are still exact
+    over what they cover: bit-identical to the single-host oracle
+    restricted to the surviving buckets (DESIGN_BACKENDS.md §Failure
+    semantics).
+
+    Only eager paths return this type (tuple subclasses are not jax
+    pytrees); jitted closures return plain tuples and
+    ``RetrievalServer.query_batch`` re-wraps uniformly.
+    """
+
+    coverage: float
+
+    def __new__(cls, top_idx, top_scores, coverage: float = 1.0):
+        self = tuple.__new__(cls, (top_idx, top_scores))
+        self.coverage = float(coverage)
+        return self
+
+    @property
+    def top_idx(self):
+        return self[0]
+
+    @property
+    def top_scores(self):
+        return self[1]
 
 
 @dataclasses.dataclass
@@ -218,6 +256,30 @@ def _merge_topk(scores, ids, k: int):
     return sid[:, :k], -neg[:, :k]
 
 
+def _merge_topk_unique(scores, ids, k: int):
+    """:func:`_merge_topk` that additionally dedupes doc ids — the root
+    merge of *replicated* grid serving, where a doc scored by two live
+    replicas of its bucket arrives once per replica and must fill one
+    output slot, not several.
+
+    Sorting by ``(id, -score)`` makes duplicates adjacent with each
+    id's best candidate first; the rest collapse to the ``(-inf, -1)``
+    sentinel (replicas compute bit-identical scores, so "best" is just
+    "the one kept").  When finite ids are already unique — every
+    unreplicated path — the surviving multiset is unchanged and the
+    final ``(-score, id)`` sort returns exactly what ``_merge_topk``
+    would: dedupe costs one extra ``lax.sort``, never exactness.
+    """
+    sid, neg = jax.lax.sort((ids, -scores), num_keys=2, dimension=1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(sid[:, :1], bool), sid[:, 1:] == sid[:, :-1]],
+        axis=1)
+    neg = jnp.where(dup, jnp.inf, neg)
+    sid = jnp.where(dup, -1, sid)
+    neg, sid = jax.lax.sort((neg, sid), num_keys=2, dimension=1)
+    return sid[:, :k], -neg[:, :k]
+
+
 def _stream_chunk_topk(n: int, chunk: int, k: int, score_slab,
                        doc_ids=None, pad_from: int | None = None):
     """The streaming reduce loop every candidate producer shares: sweep
@@ -295,16 +357,18 @@ def _index_views(index: TokenIndex | PackedIndex, n_shards: int = 1):
 
 
 def _streaming_plan(index, n_q, l, dim, k, *, n_shards, block_docs,
-                    block_q, chunk_docs, n_groups=1):
+                    block_q, chunk_docs, n_groups=1, replicas=1):
     """Resolve (block_docs, block_q, chunk_docs) per bucket — one tuner
-    key per shard-local bucket shape (placement-aware: ``n_groups``
-    joins the key under a grid mesh, where a bucket's shards span only
-    its own host group).  Shared by :func:`topk_search` (closure build)
-    and ``RetrievalServer._warm_tuner`` (eager warm outside jit), so
+    key per shard-local bucket shape (placement-aware: ``n_groups``,
+    and ``replicas`` under a replicated plan, join the key under a grid
+    mesh, where a bucket's shards span only its own host group).
+    Shared by :func:`topk_search` (closure build) and
+    ``RetrievalServer._warm_tuner`` (eager warm outside jit), so
     in-trace resolutions always hit the cache."""
     return [backend_lib.tuned_streaming_blocks(
         n_q, nd, cap, l, dim, k, n_shards=n_shards, n_groups=n_groups,
-        block_docs=block_docs, block_q=block_q, chunk_docs=chunk_docs)
+        replicas=replicas, block_docs=block_docs, block_q=block_q,
+        chunk_docs=chunk_docs)
         for nd, cap in _view_shapes(index)]
 
 
@@ -405,21 +469,28 @@ def _topk_search_sharded(index, q_embs, q_masks, k, *, backend, plan,
 # ----------------------------------------------------------------------
 
 
-def _group_view(index: TokenIndex | PackedIndex,
-                placement: PlacementPlan, group: int):
-    """The slice of ``index`` host group ``group`` owns: a PackedIndex
-    carrying only the group's buckets (doc ids and ``n_docs`` stay
-    corpus-global — the remap and the pad sentinel must agree across
-    groups), the whole index for the dense layout's single bucket, or
-    ``None`` for a group that owns nothing."""
+def _bucket_view(index: TokenIndex | PackedIndex, bucket_ids):
+    """The slice of ``index`` holding exactly ``bucket_ids`` (ascending
+    original indices): a PackedIndex carrying only those buckets (doc
+    ids and ``n_docs`` stay corpus-global — the remap and the pad
+    sentinel must agree across groups), the whole index for the dense
+    layout's single bucket, or ``None`` for an empty selection."""
     if isinstance(index, PackedIndex):
-        picked = [index.buckets[i] for i in placement.buckets_of(group)]
+        picked = [index.buckets[i] for i in bucket_ids]
         if not picked:
             return None
         return PackedIndex(n_docs=index.n_docs, m=index.m, dim=index.dim,
                            tokens_total=index.tokens_total,
                            compression=index.compression, buckets=picked)
-    return index if placement.group_of(0) == group else None
+    return index if bucket_ids else None
+
+
+def _group_view(index: TokenIndex | PackedIndex,
+                placement: PlacementPlan, group: int):
+    """The slice of ``index`` host group ``group`` stores — every
+    bucket with ``group`` anywhere in its replica chain — or ``None``
+    for a group that stores nothing."""
+    return _bucket_view(index, placement.buckets_of(group))
 
 
 def _resolve_placement(index, placement: PlacementPlan | None,
@@ -454,6 +525,7 @@ def topk_search_group(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray,
                       q_masks: jnp.ndarray | None = None,
                       backend: str | None = None,
                       placement: PlacementPlan | None = None,
+                      buckets: tuple | None = None,
                       block_docs: int | None = None,
                       block_q: int | None = None,
                       chunk_docs: int | None = None):
@@ -462,6 +534,14 @@ def topk_search_group(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray,
     placement pins to ``group`` — sentinel-padded (``-inf`` scores, id
     ``-1``) up to that width when the group holds fewer candidates,
     including a group that owns no buckets at all.
+
+    ``buckets`` narrows the group to an explicit subset of its stored
+    buckets (ascending original indices) — the failover hook: when a
+    replica dies, the surviving replica serves exactly the dead one's
+    buckets.  Every requested bucket must actually be stored on
+    ``group`` (appear in its replica chain) — the replica placement
+    law; a violation raises rather than silently serving data the
+    group would not hold in a real deployment.
 
     Requires active grid rules (``sharding.serve_rules`` with a
     ``make_serve_mesh(hosts=...)`` mesh).  This is the computation one
@@ -487,12 +567,22 @@ def topk_search_group(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray,
     n_docs = (index.n_docs if isinstance(index, PackedIndex)
               else index.d_masks.shape[0])
     w = min(k, n_docs)
-    sub = _group_view(index, placement, group)
+    if buckets is None:
+        sub = _group_view(index, placement, group)
+    else:
+        for b in buckets:
+            if group not in placement.replicas_of(b):
+                raise ValueError(
+                    f"bucket {b} is not stored on group {group} (replica "
+                    f"chain {placement.replicas_of(b)}) — failover may "
+                    "only target groups that hold a replica")
+        sub = _bucket_view(index, tuple(sorted(buckets)))
     if sub is None:
         return (jnp.full((n_q, w), -1, jnp.int32),
                 jnp.full((n_q, w), -jnp.inf, jnp.float32))
     plan = _streaming_plan(sub, n_q, l, dim, k, n_shards=n_cand,
-                           n_groups=n_groups, block_docs=block_docs,
+                           n_groups=n_groups, replicas=placement.replicas,
+                           block_docs=block_docs,
                            block_q=block_q, chunk_docs=chunk_docs)
     if n_cand > 1:
         import numpy as np
@@ -513,28 +603,91 @@ def topk_search_group(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray,
 
 
 def _group_search_traceable(index, q_embs, q_masks, *, group, k, backend,
-                            placement, block_docs, block_q, chunk_docs):
+                            placement, buckets, block_docs, block_q,
+                            chunk_docs):
     """Positional-arg adapter so one group's tier jits with (q, qm) as
     the only traced inputs (index and knobs ride as closure constants,
     the RetrievalServer closure pattern)."""
     return topk_search_group(index, q_embs, group=group, k=k,
                              q_masks=q_masks, backend=backend,
-                             placement=placement, block_docs=block_docs,
+                             placement=placement, buckets=buckets,
+                             block_docs=block_docs,
                              block_q=block_q, chunk_docs=chunk_docs)
+
+
+def _grid_program(index, cache_args, group: int, buckets):
+    """The jitted program serving ``buckets`` on ``group``'s device
+    row, LRU-cached on the index object.  Keying per (group, buckets)
+    rather than per full group-set means a failover program (surviving
+    replica serving a dead group's buckets) compiles once and is then
+    as warm as the healthy ones — and a demoted group's program is
+    simply never fetched again, so the cache cannot serve a stale
+    group assignment."""
+    cache = index.__dict__.setdefault("_grid_cache",
+                                      collections.OrderedDict())
+    (q_shape, qm_shape, k, backend, placement, mesh,
+     block_docs, block_q, chunk_docs) = cache_args
+    key = (group, buckets, q_shape, qm_shape, k, backend, placement, mesh,
+           block_docs, block_q, chunk_docs)
+    fn = cache.get(key)
+    if fn is None:
+        fn = jax.jit(functools.partial(
+            _group_search_traceable, index, group=group, k=k,
+            backend=backend, placement=placement, buckets=buckets,
+            block_docs=block_docs, block_q=block_q, chunk_docs=chunk_docs))
+        cache[key] = fn
+        if len(cache) > 32:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(key)
+    return fn
+
+
+def _serving_assignment(placement: PlacementPlan, buckets, live, tried):
+    """Route each of ``buckets`` to the first live link of its replica
+    chain not already tried for it.  Returns (``{group: (buckets,)}``
+    in ascending group order — deterministic dispatch, the merge is
+    order-invariant anyway — and the buckets whose every replica is
+    exhausted)."""
+    per: dict = {}
+    lost = []
+    for b in buckets:
+        g = next((g for g in placement.replicas_of(b)
+                  if g in live and g not in tried[b]), None)
+        if g is None:
+            lost.append(b)
+        else:
+            per.setdefault(g, []).append(b)
+    return {g: tuple(bs) for g, bs in sorted(per.items())}, lost
 
 
 def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
                       n_groups, placement, block_docs, block_q,
-                      chunk_docs):
+                      chunk_docs, monitor=None, faults=None):
     """The grid merge tree: every host group reduces its own buckets to
     a ``(n_q, w)`` candidate block (:func:`topk_search_group`, one
     shard_map over the group's device row), the blocks are exchanged —
     the ONLY cross-group traffic, k-wide, never corpus-sized — and one
     root sort-merge produces the replicated global top-k.  Bit-identical
     to the single-host dense oracle: groups partition the corpus (every
-    doc lives in exactly one bucket, every bucket in exactly one group),
-    each tier keeps a superset of the global top-k, and every merge uses
-    the same ``(-score, id)`` total order.
+    doc lives in exactly one bucket; with replication each *replica
+    level* partitions it and the root merge dedupes doc ids), each tier
+    keeps a superset of the global top-k, and every merge uses the same
+    ``(-score, id)`` total order.
+
+    With a :class:`repro.serve.health.FleetMonitor` the exchange is
+    fault-tolerant: each bucket is served by the first live link of its
+    replica chain; a failed or deadline-overrunning fetch strikes the
+    group (repeated strikes demote it permanently) and the bucket fails
+    over — after a bounded exponential backoff — to its next surviving
+    replica.  Buckets whose every replica is down drop out of the
+    answer and the result reports ``coverage < 1`` (a
+    :class:`TopKResult`) instead of raising; what remains is exact over
+    the surviving buckets.  A :class:`~repro.serve.health.FaultPlan`
+    injects kills/delays at the same dispatch/exchange seams real
+    transport failures hit, so the tested failover path is the
+    production path.  Without a monitor, failures propagate
+    (``GroupFailure``) — the PR 5 stall-or-poison behavior, made loud.
 
     The exchange fetches each group's block off its devices (the
     multi-controller simulation of the cross-host hop), so this path
@@ -542,8 +695,9 @@ def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
     compiles inside its own shard_map, and a single-controller caller
     that wants one jitted program uses the flat ``--mesh host`` layout
     instead.  The per-group programs ARE jitted, cached on the index
-    object per (query shape, k, backend, placement, mesh) so repeated
-    query batches pay tracing once, like the server's closure cache."""
+    object per (group, buckets, query shape, k, backend, placement,
+    mesh) so repeated query batches pay tracing once, like the
+    server's closure cache."""
     if isinstance(q_embs, jax.core.Tracer):
         raise ValueError(
             "grid-placed topk_search performs a cross-group candidate "
@@ -551,40 +705,132 @@ def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
             "under an enclosing jit; call it eagerly (RetrievalServer "
             "does this automatically under grid rules)")
     placement = _resolve_placement(index, placement, n_groups)
-    cache = index.__dict__.setdefault("_grid_cache", collections.OrderedDict())
-    key = (q_embs.shape, None if q_masks is None else q_masks.shape, k,
-           backend, placement, mesh, block_docs, block_q, chunk_docs)
-    fns = cache.get(key)
-    if fns is None:
-        fns = [jax.jit(functools.partial(
-            _group_search_traceable, index, group=g, k=k, backend=backend,
-            placement=placement, block_docs=block_docs, block_q=block_q,
-            chunk_docs=chunk_docs)) for g in range(n_groups)]
-        cache[key] = fns
-        if len(cache) > 16:
-            cache.popitem(last=False)
-    else:
-        cache.move_to_end(key)
-    # Dispatch every group's program first (they run on disjoint device
-    # rows — JAX async dispatch overlaps them), then collect: the
-    # cross-host hop moves only the (n_q, w) candidate blocks off the
-    # groups' devices.
-    blocks = [fn(q_embs, q_masks) for fn in fns]
-    vals, ids = [], []
-    for i, v in blocks:
-        ids.append(jnp.asarray(jax.device_get(i)))
-        vals.append(jnp.asarray(jax.device_get(v)))
-    gv = jnp.concatenate(vals, axis=1)
-    gi = jnp.concatenate(ids, axis=1)
+    if faults is not None:
+        faults.begin_round()
+    n_q = q_embs.shape[0]
     n_docs = (index.n_docs if isinstance(index, PackedIndex)
               else index.d_masks.shape[0])
-    return _merge_topk(gv, gi, min(k, n_docs))
+    cache_args = (q_embs.shape,
+                  None if q_masks is None else q_masks.shape, k, backend,
+                  placement, mesh, block_docs, block_q, chunk_docs)
+
+    if monitor is None:
+        # Healthy fast path (and the unmonitored legacy path): every
+        # group serves every bucket replica it stores; dispatch all
+        # programs first (disjoint device rows — JAX async dispatch
+        # overlaps them), then collect.  An injected fault without a
+        # monitor propagates loudly.
+        fns = [_grid_program(index, cache_args, g, None)
+               for g in range(n_groups)]
+        if faults is not None:
+            for g in range(n_groups):
+                faults.check(g, "dispatch")
+        blocks = [fn(q_embs, q_masks) for fn in fns]
+        vals, ids = [], []
+        for g, (i, v) in enumerate(blocks):
+            if faults is not None:
+                faults.check(g, "exchange")
+            ids.append(jnp.asarray(jax.device_get(i)))
+            vals.append(jnp.asarray(jax.device_get(v)))
+        merge = (_merge_topk if placement.replicas == 1
+                 else _merge_topk_unique)
+        i, v = merge(jnp.concatenate(vals, axis=1),
+                     jnp.concatenate(ids, axis=1), min(k, n_docs))
+        return TopKResult(i, v, 1.0)
+
+    def attempt(group, bucket_ids):
+        """One group's dispatch + deadline-bounded candidate fetch,
+        with up to ``monitor.retries`` same-group retries; returns the
+        (ids, vals) block or None after striking the group."""
+        for r in range(monitor.retries + 1):
+            if r:
+                time.sleep(monitor.backoff(r - 1))
+            try:
+                if faults is not None:
+                    faults.check(group, "dispatch")
+                out = _grid_program(index, cache_args, group,
+                                    bucket_ids)(q_embs, q_masks)
+                t0 = time.perf_counter()
+
+                def fetch():
+                    if faults is not None:
+                        faults.check(group, "exchange")
+                    return (jnp.asarray(jax.device_get(out[0])),
+                            jnp.asarray(jax.device_get(out[1])))
+
+                if monitor.exchange_timeout is None:
+                    block = fetch()
+                else:
+                    ex = concurrent.futures.ThreadPoolExecutor(1)
+                    try:
+                        block = ex.submit(fetch).result(
+                            timeout=monitor.exchange_timeout)
+                    finally:
+                        # No wait: a straggler thread must not extend
+                        # the deadline it just blew.
+                        ex.shutdown(wait=False)
+                monitor.record_exchange(group, time.perf_counter() - t0)
+                return block
+            except (health_lib.GroupFailure,
+                    concurrent.futures.TimeoutError):
+                monitor.strike(group)
+        return None
+
+    weights = bucket_weights(index)
+    all_buckets = range(placement.n_buckets)
+    tried = {b: set() for b in all_buckets}
+    pending, lost = _serving_assignment(placement, all_buckets,
+                                        monitor.live(), tried)
+    answered: list = []
+    blocks = []
+    failover = 0
+    while pending:
+        failed: list = []
+        for g, bs in pending.items():
+            for b in bs:
+                tried[b].add(g)
+            block = attempt(g, bs)
+            if block is None:
+                failed.extend(bs)
+            else:
+                blocks.append(block)
+                answered.extend(bs)
+        if not failed:
+            break
+        pending, dead = _serving_assignment(placement, failed,
+                                            monitor.live(), tried)
+        lost.extend(dead)
+        if pending:
+            time.sleep(monitor.backoff(failover))
+            failover += 1
+
+    coverage = (sum(weights[b] for b in answered)
+                / max(sum(weights), 1))
+    if isinstance(index, PackedIndex):
+        live_docs = sum(index.buckets[b].n_docs for b in answered)
+    else:
+        live_docs = n_docs if answered else 0
+    cap = min(k, live_docs)
+    if not blocks or cap == 0:
+        return TopKResult(jnp.zeros((n_q, 0), jnp.int32),
+                          jnp.zeros((n_q, 0), jnp.float32), coverage)
+    # Monitored assignment serves each bucket from exactly one group,
+    # but the dedupe merge is used unconditionally: it is bit-identical
+    # to _merge_topk on unique ids, and the cap at the SURVIVING doc
+    # count keeps sentinels out of degraded outputs (the same law the
+    # local path applies via _real_docs).
+    i, v = _merge_topk_unique(
+        jnp.concatenate([v for _, v in blocks], axis=1),
+        jnp.concatenate([i for i, _ in blocks], axis=1), cap)
+    return TopKResult(i, v, coverage)
 
 
 def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
                 k: int = 10, q_masks: jnp.ndarray | None = None,
                 backend: str | None = None, block_docs: int | None = None,
-                block_q: int | None = None, chunk_docs: int | None = None):
+                block_q: int | None = None, chunk_docs: int | None = None,
+                placement: PlacementPlan | None = None,
+                monitor=None, faults=None):
     """Streaming exact top-k MaxSim: ``(top_idx, top_scores)``, each
     (n_q, k), identical — ids and fp scores — to ``lax.top_k`` over
     :func:`maxsim_scores`, without ever holding an (n_q, n_docs) score
@@ -604,6 +850,16 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     (:func:`topk_search_group`; DESIGN_BACKENDS.md §Placement).
     ``chunk_docs`` (and the usual serving blocks) default to the
     shape-aware autotuner, keyed on the shard-local bucket shape.
+
+    ``placement`` overrides the grid placement the active rules carry
+    (the rebalance hook); ``monitor`` (a ``serve.health.FleetMonitor``)
+    makes the grid exchange fault-tolerant — the grid path then returns
+    a :class:`TopKResult` whose ``coverage`` reports the fraction of
+    stored bucket bytes consulted (< 1 when every replica of some
+    bucket set was unreachable, instead of raising); ``faults`` (a
+    ``serve.health.FaultPlan``) injects failures for testing.  All
+    three are grid-only and ignored on the flat/local paths, which
+    cannot lose a host group.
     """
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
     n_q, l = q_embs.shape[:2]
@@ -613,13 +869,15 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     if n_docs == 0:
         return (jnp.zeros((n_q, 0), jnp.int32),
                 jnp.zeros((n_q, 0), jnp.float32))
-    gmesh, n_groups, _, placement = grid_axes_for()
+    gmesh, n_groups, _, rules_placement = grid_axes_for()
     if gmesh is not None:
-        return _topk_search_grid(index, q_embs, q_masks, k,
-                                 backend=backend, mesh=gmesh,
-                                 n_groups=n_groups, placement=placement,
-                                 block_docs=block_docs, block_q=block_q,
-                                 chunk_docs=chunk_docs)
+        return _topk_search_grid(
+            index, q_embs, q_masks, k, backend=backend, mesh=gmesh,
+            n_groups=n_groups,
+            placement=placement if placement is not None
+            else rules_placement,
+            block_docs=block_docs, block_q=block_q,
+            chunk_docs=chunk_docs, monitor=monitor, faults=faults)
     mesh, axes, n_shards = mesh_axes_for("candidates")
     plan = _streaming_plan(index, n_q, l, dim, k, n_shards=n_shards,
                            block_docs=block_docs, block_q=block_q,
@@ -689,7 +947,9 @@ def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
            q_masks: jnp.ndarray | None = None,
            backend: str | None = None, block_docs: int | None = None,
            block_q: int | None = None, chunk_docs: int | None = None,
-           return_full: bool = True):
+           return_full: bool = True,
+           placement: PlacementPlan | None = None,
+           monitor=None, faults=None):
     """Two-stage (or e2e) retrieval.
 
     ``return_full=True`` (the metrics/benchmark contract) returns
@@ -701,7 +961,9 @@ def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     through the chunked first stage — no (n_q, n_docs) tensor is built
     on either.  Results are identical either way.  ``block_docs``/
     ``block_q``/``chunk_docs`` default to autotuned (see maxsim_scores /
-    topk_search).
+    topk_search).  ``placement``/``monitor``/``faults`` ride through to
+    :func:`topk_search` on the streaming e2e route (the only route with
+    a cross-group exchange to protect) and are ignored elsewhere.
     """
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
     n_docs = (index.n_docs if isinstance(index, PackedIndex)
@@ -710,7 +972,9 @@ def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
         if not return_full:
             return topk_search(index, q_embs, k=k, q_masks=q_masks,
                                backend=backend, block_docs=block_docs,
-                               block_q=block_q, chunk_docs=chunk_docs)
+                               block_q=block_q, chunk_docs=chunk_docs,
+                               placement=placement, monitor=monitor,
+                               faults=faults)
         scores = maxsim_scores(index, q_embs, q_masks, backend=backend,
                                block_docs=block_docs, block_q=block_q)
         scores = constrain(scores, "batch", "candidates")
@@ -766,23 +1030,51 @@ class RetrievalServer:
     a re-jit on its next appearance, while the unbounded dict the server
     used to keep grew a compiled executable (plus its baked-in index
     constants) per distinct shape for the life of the process.
+
+    **Fault tolerance** (grid serving only): pass a
+    ``serve.health.FleetMonitor`` as ``monitor`` and the cross-group
+    exchange heartbeats, times out, retries with backoff against
+    surviving replicas, and demotes repeat offenders (see
+    :func:`topk_search`).  ``on_group_loss`` picks the policy when
+    every replica of some bucket set is gone:
+
+    * ``"degrade"`` (default) — answer from the surviving buckets and
+      report ``coverage < 1`` on the returned :class:`TopKResult`.
+    * ``"rebalance"`` — re-place the lost groups' buckets over the
+      survivors (``PlacementPlan.rebalance``) and re-answer at full
+      coverage (this single-controller server holds the whole index;
+      a real deployment would restore the moved buckets from their
+      ``index_io`` sub-manifests first).
+    * ``"fail"`` — raise ``serve.health.DegradedCoverage`` instead of
+      returning a partial answer.
     """
 
     def __init__(self, index: TokenIndex | PackedIndex, *, k: int = 10,
                  n_first: int = 64, backend: str | None = None,
                  block_docs: int | None = None, block_q: int | None = None,
                  chunk_docs: int | None = None,
-                 max_cached_closures: int = 32):
+                 max_cached_closures: int = 32,
+                 monitor=None, on_group_loss: str = "degrade",
+                 faults=None):
+        if on_group_loss not in ("degrade", "rebalance", "fail"):
+            raise ValueError(
+                f"on_group_loss={on_group_loss!r} not in "
+                "('degrade', 'rebalance', 'fail')")
         self.index = index
         self.k = k
         self.n_first = n_first
         self.backend = backend_lib.resolve_backend(backend,
                                                    allow=backend_lib.SERVING)
+        self.monitor = monitor
+        self.on_group_loss = on_group_loss
+        self.faults = faults
         self._block_docs = block_docs
         self._block_q = block_q
         self._chunk_docs = chunk_docs
         self._max_cached = max(1, int(max_cached_closures))
         self._search = collections.OrderedDict()  # (n_q, l) -> jitted closure
+        self._placement = None          # rebalance override, grid only
+        self._rebalanced_for = frozenset()
 
     @staticmethod
     def _run(index, q, **kw):
@@ -817,6 +1109,8 @@ class RetrievalServer:
             if gmesh is not None:
                 # Grid placement: one key set per host group's bucket
                 # slice (shards span only the group's candidates row).
+                if self._placement is not None:
+                    placement = self._placement
                 placement = _resolve_placement(self.index, placement,
                                                n_groups)
                 for g in range(n_groups):
@@ -824,6 +1118,7 @@ class RetrievalServer:
                     if sub is not None:
                         _streaming_plan(sub, n_q, l, dim, self.k,
                                         n_shards=n_cand, n_groups=n_groups,
+                                        replicas=placement.replicas,
                                         block_docs=self._block_docs,
                                         block_q=self._block_q,
                                         chunk_docs=self._chunk_docs)
@@ -858,7 +1153,14 @@ class RetrievalServer:
         # vice versa.
         mesh, axes, _ = mesh_axes_for("candidates")
         gmesh, n_groups, _, placement = grid_axes_for()
-        key = q_embs.shape[:2] + (mesh, axes, gmesh, n_groups, placement)
+        # The rebalance override joins the key: a closure traced against
+        # the pre-loss placement must not answer post-rebalance queries.
+        # The monitor itself does NOT join it — the grid route stays
+        # eager and reads liveness at call time, so demotions never
+        # leave a stale group program serving (tested: a group failing
+        # between warmup and query).
+        key = q_embs.shape[:2] + (mesh, axes, gmesh, n_groups, placement,
+                                  self._placement)
         fn = self._search.get(key)
         if fn is None:
             self._warm_index()
@@ -869,7 +1171,9 @@ class RetrievalServer:
             fn = functools.partial(
                 self._run, self.index, k=self.k, n_first=self.n_first,
                 backend=self.backend, block_docs=self._block_docs,
-                block_q=self._block_q, chunk_docs=self._chunk_docs)
+                block_q=self._block_q, chunk_docs=self._chunk_docs,
+                placement=self._placement, monitor=self.monitor,
+                faults=self.faults)
             if gmesh is None or self.n_first < n_docs:
                 # Grid-placed e2e serving stays an eager composition of
                 # per-group compiled programs (the cross-group candidate
@@ -883,6 +1187,48 @@ class RetrievalServer:
             self._search.move_to_end(key)
         return fn
 
+    def _maybe_rebalance(self):
+        """Apply ``PlacementPlan.rebalance`` over the monitor's demoted
+        set (the ``--on-group-loss rebalance`` policy): surviving
+        assignments stay put, stranded buckets re-place greedy-LPT over
+        the survivors.  Idempotent per demoted set."""
+        if self.monitor is None or self.on_group_loss != "rebalance":
+            return False
+        demoted = self.monitor.demoted
+        if not demoted or demoted == self._rebalanced_for:
+            return False
+        gmesh, n_groups, _, placement = grid_axes_for()
+        if gmesh is None:
+            return False
+        base = _resolve_placement(
+            self.index,
+            self._placement if self._placement is not None else placement,
+            n_groups)
+        self._placement = base.rebalance(
+            demoted, weights=bucket_weights(self.index))
+        self._rebalanced_for = demoted
+        return True
+
     def query_batch(self, q_embs: jnp.ndarray):
-        idx, scores = self._closure_for(q_embs)(q_embs)
-        return jax.device_get(idx), jax.device_get(scores)
+        """Serve one query batch: :class:`TopKResult` of host arrays.
+        ``result.coverage < 1`` flags a degraded answer (every replica
+        of some bucket set unreachable) under the default
+        ``on_group_loss="degrade"``; ``"rebalance"`` re-places and
+        re-answers at full coverage; ``"fail"`` raises."""
+        out = self._closure_for(q_embs)(q_embs)
+        coverage = getattr(out, "coverage", 1.0)
+        if coverage < 1.0 and self._maybe_rebalance():
+            # Answer THIS query from the rebalanced plan (new closure
+            # key), not just the next one.
+            out = self._closure_for(q_embs)(q_embs)
+            coverage = getattr(out, "coverage", 1.0)
+        if coverage < 1.0 and self.on_group_loss == "fail":
+            demoted = (sorted(self.monitor.demoted)
+                       if self.monitor is not None else [])
+            raise health_lib.DegradedCoverage(
+                f"top-k covers {coverage:.4f} of stored bucket bytes "
+                f"(demoted groups: {demoted}); on_group_loss='fail' "
+                "refuses degraded results")
+        idx, scores = out
+        return TopKResult(jax.device_get(idx), jax.device_get(scores),
+                          coverage)

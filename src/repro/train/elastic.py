@@ -5,6 +5,12 @@ here every decision is pure over an explicit `FleetView`, which makes the
 policies unit-testable with fake clocks and synthetic failure sets (see
 tests/test_elastic.py).
 
+These primitives are shared with the *serving* side:
+`repro.serve.health.FleetMonitor` snapshots grid host-group liveness as
+a `FleetView` (one "device" per host group) and flags slow groups with
+a `StragglerMonitor` over cross-group exchange latencies — one fleet
+vocabulary across train and serve, not two.
+
 Policies implemented:
   * `plan_mesh`     — biggest (data, model) mesh buildable from survivors,
     preserving the model-parallel degree (TP size changes would reshard
@@ -32,6 +38,11 @@ class FleetView:
     @property
     def healthy(self) -> int:
         return self.n_devices - len(self.failed)
+
+    def survivors(self) -> tuple[int, ...]:
+        """Healthy device (or serving host-group) ids, ascending."""
+        return tuple(i for i in range(self.n_devices)
+                     if i not in self.failed)
 
 
 def plan_mesh(fleet: FleetView, model_parallel: int,

@@ -296,12 +296,250 @@ def check_artifact_roundtrip():
     print("GRID_ARTIFACT_OK")
 
 
+def _restricted_oracle(packed, surviving_buckets, q, qm, k):
+    """The single-host streaming oracle over ONLY ``surviving_buckets``
+    — what a degraded grid answer must equal bitwise (doc ids stay
+    corpus-global, so no renumbering)."""
+    from repro.serve.retrieval import _bucket_view, topk_search
+    sub = _bucket_view(packed, tuple(surviving_buckets))
+    if sub is None:
+        return (np.zeros((q.shape[0], 0), np.int32),
+                np.zeros((q.shape[0], 0), np.float32))
+    i, v = topk_search(sub, q, k=k, q_masks=qm)
+    return np.asarray(i), np.asarray(v)
+
+
+def check_fault_tolerance():
+    """The fault-injection differential gate (topk_search level).
+
+    * replicas=2: killing ANY single host group — at dispatch, mid-
+      exchange, or via a deadline-overrunning delay — yields top-k ids
+      and fp scores bit-identical to the no-failure oracle (failover to
+      the surviving replica, dedupe merge), at coverage 1.0.
+    * replicas=1: the degraded result equals the single-host oracle
+      restricted to the surviving buckets, reports coverage < 1, and
+      contains no NaNs/sentinels — including k > docs-in-surviving-
+      groups and every-replica-lost (empty result, coverage 0).
+    * no monitor: injected faults propagate loudly (GroupFailure), and
+      a replicated plan with ALL groups live dedupes to oracle parity.
+    """
+    _require_devices()
+    from repro.serve import health
+    from repro.serve.retrieval import maxsim_scores, topk_search
+    from repro.sharding import PlacementPlan, axis_rules, serve_rules
+    from repro.sharding.placement import bucket_weights
+
+    mesh = _grid_mesh()
+    packed = _pruned_corpus(7, 29, 18, 8, empty=(3, 11)).pack()
+    q, qm = _queries(8, 5, 4, 8)
+    k = 6
+    full = maxsim_scores(packed, q, qm)
+    ref_s, ref_i = jax.lax.top_k(full, k)
+    ref_i, ref_s = np.asarray(ref_i), np.asarray(ref_s)
+    n_buckets = len(packed.buckets)
+    weights = bucket_weights(packed)
+
+    # --- replicated plan: unmonitored (all replicas answer; the root
+    # merge must dedupe doc ids, not double-count them) ---------------
+    plc2 = PlacementPlan.for_index(packed, GRID_HOSTS, replicas=2)
+    assert plc2.replicas == 2
+    with axis_rules(serve_rules(mesh, placement=plc2)):
+        i2, v2 = topk_search(packed, q, k=k, q_masks=qm)
+    np.testing.assert_array_equal(ref_i, np.asarray(i2), "replicated dedupe")
+    np.testing.assert_array_equal(ref_s, np.asarray(v2))
+
+    # --- replicas=2, kill any single group: bit-identical failover ---
+    fault_mixes = [
+        ("dispatch", lambda g: health.kill_group(g)),
+        ("mid-exchange", lambda g: health.kill_group(g, when="after")),
+        ("deadline", lambda g: health.delay_group(g, 0.5)),
+    ]
+    for fname, mk in fault_mixes:
+        for lost in range(GRID_HOSTS):
+            mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                                      backoff_base=0.001,
+                                      exchange_timeout=(
+                                          0.05 if fname == "deadline"
+                                          else None))
+            faults = health.FaultPlan([mk(lost)])
+            with axis_rules(serve_rules(mesh, placement=plc2)):
+                res = topk_search(packed, q, k=k, q_masks=qm,
+                                  monitor=mon, faults=faults)
+                ctx = f"replicas=2/{fname}/lost={lost}"
+                assert res.coverage == 1.0, (ctx, res.coverage)
+                np.testing.assert_array_equal(ref_i, np.asarray(res[0]), ctx)
+                np.testing.assert_array_equal(ref_s, np.asarray(res[1]), ctx)
+                assert mon.demoted == frozenset({lost}), (ctx, mon.demoted)
+                # next query: the demoted group is never dispatched
+                # again (no strikes left to absorb) — still exact.
+                res2 = topk_search(packed, q, k=k, q_masks=qm,
+                                   monitor=mon, faults=faults)
+                np.testing.assert_array_equal(ref_i, np.asarray(res2[0]))
+                assert res2.coverage == 1.0
+
+    # --- replicas=1: degraded coverage == restricted oracle ----------
+    plc1 = PlacementPlan.for_index(packed, GRID_HOSTS)
+    for lost in range(GRID_HOSTS):
+        surviving = [b for b in range(n_buckets)
+                     if plc1.group_of(b) != lost]
+        assert surviving and len(surviving) < n_buckets
+        for kk in (k, 10 * packed.n_docs):   # incl. k > surviving docs
+            mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                                      backoff_base=0.001)
+            faults = health.FaultPlan([health.kill_group(lost)])
+            with axis_rules(serve_rules(mesh, placement=plc1)):
+                res = topk_search(packed, q, k=kk, q_masks=qm,
+                                  monitor=mon, faults=faults)
+            oi, ov = _restricted_oracle(packed, surviving, q, qm, kk)
+            ctx = f"replicas=1/lost={lost}/k={kk}"
+            want_cov = sum(weights[b] for b in surviving) / sum(weights)
+            assert abs(res.coverage - want_cov) < 1e-12, ctx
+            assert res.coverage < 1.0, ctx
+            np.testing.assert_array_equal(oi, np.asarray(res[0]), ctx)
+            np.testing.assert_array_equal(ov, np.asarray(res[1]), ctx)
+            got_v = np.asarray(res[1])
+            assert np.isfinite(got_v).all(), f"NaN/inf leaked: {ctx}"
+            ids = np.asarray(res[0])
+            assert ids.min() >= 0 and ids.max() < packed.n_docs, ctx
+
+    # --- every replica lost: empty result, coverage 0, no raise ------
+    mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                              backoff_base=0.001)
+    faults = health.FaultPlan([health.kill_group(g)
+                               for g in range(GRID_HOSTS)])
+    with axis_rules(serve_rules(mesh, placement=plc1)):
+        res = topk_search(packed, q, k=k, q_masks=qm,
+                          monitor=mon, faults=faults)
+    assert res.coverage == 0.0 and res[0].shape == (q.shape[0], 0)
+    assert mon.demoted == frozenset(range(GRID_HOSTS))
+
+    # --- no monitor: faults surface loudly, never a silent stall -----
+    faults = health.FaultPlan([health.kill_group(0)])
+    with axis_rules(serve_rules(mesh, placement=plc1)):
+        try:
+            topk_search(packed, q, k=k, q_masks=qm, faults=faults)
+        except health.GroupFailure:
+            pass
+        else:
+            raise AssertionError("unmonitored fault did not propagate")
+    print("GRID_FAULT_TOLERANCE_OK")
+
+
+def check_failover_server():
+    """RetrievalServer-level failover: the on_group_loss policies, the
+    coverage contract on query_batch, and the group-fails-between-
+    warmup-and-query scenario (closure/program caches must not serve a
+    stale group assignment)."""
+    _require_devices()
+    from repro.serve import health
+    from repro.serve.retrieval import (RetrievalServer, maxsim_scores,
+                                       TopKResult)
+    from repro.sharding import PlacementPlan, axis_rules, serve_rules
+
+    mesh = _grid_mesh()
+    packed = _pruned_corpus(9, 23, 16, 8, empty=(2,)).pack()
+    q, qm = _queries(10, 4, 4, 8)
+    k = 5
+    full = maxsim_scores(packed, q, None)
+    ref_s, ref_i = jax.lax.top_k(full, k)
+    ref_i, ref_s = np.asarray(ref_i), np.asarray(ref_s)
+    n_buckets = len(packed.buckets)
+    plc2 = PlacementPlan.for_index(packed, GRID_HOSTS, replicas=2)
+    plc1 = PlacementPlan.for_index(packed, GRID_HOSTS)
+
+    # --- group dies between warmup and query: an external health
+    # signal demotes it; the warmed server must not dispatch the stale
+    # group program (replicas=2 -> still bit-identical) ---------------
+    for lost in range(GRID_HOSTS):
+        mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                                  backoff_base=0.001)
+        srv = RetrievalServer(packed, k=k, n_first=packed.n_docs,
+                              monitor=mon)
+        with axis_rules(serve_rules(mesh, placement=plc2)):
+            warm = srv.query_batch(q)              # healthy warmup
+            assert warm.coverage == 1.0
+            np.testing.assert_array_equal(ref_i, warm[0])
+            mon.demote(lost)                       # dies before query 2
+            res = srv.query_batch(q)
+            assert res.coverage == 1.0
+            np.testing.assert_array_equal(ref_i, res[0],
+                                          f"stale program? lost={lost}")
+            np.testing.assert_array_equal(ref_s, res[1])
+
+    # --- same scenario via an injected fault at round 1 (the fault
+    # fires between the warmup round and the serving round) -----------
+    mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                              backoff_base=0.001)
+    faults = health.FaultPlan([health.kill_group(0, from_round=1)])
+    srv = RetrievalServer(packed, k=k, n_first=packed.n_docs,
+                          monitor=mon, faults=faults)
+    with axis_rules(serve_rules(mesh, placement=plc2)):
+        warm = srv.query_batch(q)                  # round 0: healthy
+        assert warm.coverage == 1.0 and not mon.demoted
+        res = srv.query_batch(q)                   # round 1: kill fires
+        assert res.coverage == 1.0 and mon.demoted == frozenset({0})
+        np.testing.assert_array_equal(ref_i, res[0])
+        np.testing.assert_array_equal(ref_s, res[1])
+
+    # --- on_group_loss="degrade" (default): coverage surfaces --------
+    mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                              backoff_base=0.001)
+    faults = health.FaultPlan([health.kill_group(1)])
+    srv = RetrievalServer(packed, k=k, n_first=packed.n_docs,
+                          monitor=mon, faults=faults)
+    with axis_rules(serve_rules(mesh, placement=plc1)):
+        res = srv.query_batch(q)
+    assert isinstance(res, TopKResult) and res.coverage < 1.0
+    surviving = [b for b in range(n_buckets) if plc1.group_of(b) != 1]
+    oi, ov = _restricted_oracle(packed, surviving, q, None, k)
+    np.testing.assert_array_equal(oi, res[0])
+    np.testing.assert_array_equal(ov, res[1])
+
+    # --- on_group_loss="rebalance": lost buckets re-place over the
+    # survivors and THIS query re-answers at full coverage ------------
+    mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                              backoff_base=0.001)
+    faults = health.FaultPlan([health.kill_group(1)])
+    srv = RetrievalServer(packed, k=k, n_first=packed.n_docs,
+                          monitor=mon, on_group_loss="rebalance",
+                          faults=faults)
+    with axis_rules(serve_rules(mesh, placement=plc1)):
+        res = srv.query_batch(q)
+        assert res.coverage == 1.0, res.coverage
+        np.testing.assert_array_equal(ref_i, res[0])
+        np.testing.assert_array_equal(ref_s, res[1])
+        assert srv._placement is not None
+        assert all(1 not in srv._placement.replicas_of(b)
+                   for b in range(n_buckets))
+        # steady state on the rebalanced plan
+        res2 = srv.query_batch(q)
+        assert res2.coverage == 1.0
+        np.testing.assert_array_equal(ref_i, res2[0])
+
+    # --- on_group_loss="fail": refuse degraded results ---------------
+    mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                              backoff_base=0.001)
+    faults = health.FaultPlan([health.kill_group(1)])
+    srv = RetrievalServer(packed, k=k, n_first=packed.n_docs,
+                          monitor=mon, on_group_loss="fail", faults=faults)
+    with axis_rules(serve_rules(mesh, placement=plc1)):
+        try:
+            srv.query_batch(q)
+        except health.DegradedCoverage:
+            pass
+        else:
+            raise AssertionError("fail policy returned a degraded result")
+    print("GRID_FAILOVER_SERVER_OK")
+
+
 def main():
     _require_devices()
     check_topk_parity()
     check_prune_parity()
     check_hlo_clean()
     check_artifact_roundtrip()
+    check_fault_tolerance()
+    check_failover_server()
     print("GRID_CASES_OK")
 
 

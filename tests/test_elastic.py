@@ -1,0 +1,107 @@
+"""Unit tests for the elastic-fleet primitives (train/elastic.py).
+
+Every policy is pure over an explicit ``FleetView`` / injected step
+times (the fake clock), so failure math is tested without any real
+cluster: synthetic failure sets for ``plan_mesh``, synthetic step
+durations for ``StragglerMonitor``.  The serving-side health layer
+built on these primitives is covered in tests/test_health.py.
+"""
+
+import pytest
+
+from repro.train.elastic import (FleetView, StragglerMonitor, plan_mesh,
+                                 rescale)
+
+
+class TestFleetView:
+    def test_healthy_counts_survivors(self):
+        assert FleetView(8).healthy == 8
+        assert FleetView(8, failed=frozenset({1, 5})).healthy == 6
+
+    def test_survivors_are_ordered_ids(self):
+        fleet = FleetView(5, failed=frozenset({0, 3}))
+        assert fleet.survivors() == (1, 2, 4)
+        assert FleetView(3).survivors() == (0, 1, 2)
+
+
+class TestPlanMesh:
+    def test_full_fleet(self):
+        assert plan_mesh(FleetView(8), 4) == (2, 4)
+
+    def test_survivor_math_drops_partial_rows(self):
+        # 10 healthy of 12 at TP=4 -> only 2 full model-parallel rows.
+        fleet = FleetView(12, failed=frozenset({3, 7}))
+        assert plan_mesh(fleet, 4) == (2, 4)
+
+    def test_not_enough_devices_raises(self):
+        fleet = FleetView(8, failed=frozenset(range(6)))
+        with pytest.raises(RuntimeError, match="not enough healthy"):
+            plan_mesh(fleet, 4)
+        with pytest.raises(RuntimeError, match="not enough healthy"):
+            plan_mesh(FleetView(8), 4, min_data=3)
+
+    def test_bad_model_parallel(self):
+        with pytest.raises(ValueError, match="model_parallel"):
+            plan_mesh(FleetView(8), 0)
+
+
+class TestRescale:
+    def test_keep_global_batch_accumulates(self):
+        out = rescale(8, 3, batch=256, lr=1e-3)
+        assert out == {"global_batch": 256, "grad_accum": 3, "lr": 1e-3}
+
+    def test_scaled_mode_scales_lr_linearly(self):
+        out = rescale(8, 4, batch=256, lr=1e-3, keep_global_batch=False)
+        assert out["global_batch"] == 128
+        assert out["grad_accum"] == 1
+        assert out["lr"] == pytest.approx(5e-4)
+
+    def test_growing_back(self):
+        out = rescale(4, 8, batch=128, lr=5e-4, keep_global_batch=False)
+        assert out["global_batch"] == 256
+        assert out["lr"] == pytest.approx(1e-3)
+
+
+class TestStragglerMonitor:
+    """Step times ARE the fake clock: flagging logic is exercised by
+    feeding synthetic durations, no sleeping anywhere."""
+
+    def _feed(self, mon, times_by_host, steps):
+        for _ in range(steps):
+            for host, t in times_by_host.items():
+                mon.record(host, t)
+
+    def test_flags_after_patience_consecutive_strikes(self):
+        mon = StragglerMonitor(threshold=1.5, window=4, patience=3)
+        self._feed(mon, {"a": 1.0, "b": 1.0, "c": 4.0}, 4)
+        flagged = [mon.stragglers() for _ in range(3)]
+        assert flagged[0] == [] and flagged[1] == []     # strikes 1, 2
+        assert flagged[2] == ["c"]                       # strike 3
+
+    def test_recovery_resets_strikes(self):
+        mon = StragglerMonitor(threshold=1.5, window=4, patience=2)
+        self._feed(mon, {"a": 1.0, "b": 1.0, "c": 4.0}, 4)
+        assert mon.stragglers() == []                    # strike 1
+        self._feed(mon, {"c": 1.0}, 4)                   # c recovers
+        assert mon.stragglers() == []                    # strikes reset
+        assert mon.stragglers() == []
+
+    def test_no_flag_below_threshold_or_small_fleet(self):
+        mon = StragglerMonitor(threshold=2.0, window=4, patience=1)
+        self._feed(mon, {"a": 1.0, "b": 1.9}, 4)
+        assert mon.stragglers() == []                    # below threshold
+        solo = StragglerMonitor(window=2, patience=1)
+        self._feed(solo, {"a": 9.0}, 4)
+        assert solo.stragglers() == []                   # need >= 2 medians
+
+    def test_plan_rebalance_steals_from_straggler(self):
+        mon = StragglerMonitor(threshold=1.5, window=4, patience=1)
+        self._feed(mon, {"a": 1.0, "b": 1.2, "c": 5.0}, 4)
+        out = mon.plan_rebalance({"a": 4, "b": 4, "c": 4})
+        assert out == {"a": 5, "b": 4, "c": 3}
+
+    def test_plan_rebalance_noop_when_healthy(self):
+        mon = StragglerMonitor(window=4, patience=1)
+        self._feed(mon, {"a": 1.0, "b": 1.1}, 4)
+        mb = {"a": 4, "b": 4}
+        assert mon.plan_rebalance(mb) == mb

@@ -1,0 +1,175 @@
+"""Unit tests for the serving health layer (serve/health.py).
+
+Pure-policy tests: the clock is injected everywhere, so heartbeat
+staleness, strike/demotion, and backoff are asserted without sleeping.
+The end-to-end failover behaviour these policies drive (the monitored
+exchange in ``topk_search``) is covered by the device-grid cases in
+tests/test_placement.py.
+"""
+
+import pytest
+
+from repro.serve import health
+from repro.train.elastic import FleetView
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# -- Fault / FaultPlan ---------------------------------------------------
+
+
+class TestFault:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            health.Fault(group=0, kind="explode")
+        with pytest.raises(ValueError, match="when="):
+            health.kill_group(0, when="sometime")
+
+    def test_round_matching(self):
+        always = health.kill_group(1)
+        exact = health.kill_group(1, round=2)
+        onward = health.kill_group(1, from_round=2)
+        assert [always.active(i) for i in range(4)] == [True] * 4
+        assert [exact.active(i) for i in range(4)] == [
+            False, False, True, False]
+        assert [onward.active(i) for i in range(4)] == [
+            False, False, True, True]
+
+
+class TestFaultPlan:
+    def test_kill_before_fires_at_dispatch_only(self):
+        plan = health.FaultPlan([health.kill_group(0, when="before")])
+        plan.begin_round()
+        with pytest.raises(health.GroupFailure, match="down at dispatch"):
+            plan.check(0, "dispatch")
+        plan.check(0, "exchange")       # wrong stage: no-op
+        plan.check(1, "dispatch")       # wrong group: no-op
+
+    def test_kill_after_fires_mid_exchange_only(self):
+        plan = health.FaultPlan([health.kill_group(0, when="after")])
+        plan.begin_round()
+        plan.check(0, "dispatch")
+        with pytest.raises(health.GroupFailure, match="mid-exchange"):
+            plan.check(0, "exchange")
+
+    def test_round_gating_via_begin_round(self):
+        plan = health.FaultPlan([health.kill_group(0, round=1)])
+        assert plan.begin_round() == 0
+        plan.check(0, "dispatch")       # round 0: inactive
+        assert plan.begin_round() == 1
+        with pytest.raises(health.GroupFailure):
+            plan.check(0, "dispatch")   # round 1: fires
+        plan.begin_round()
+        plan.check(0, "dispatch")       # round 2: inactive again
+
+    def test_delay_sleeps_injected(self):
+        slept = []
+        plan = health.FaultPlan([health.delay_group(2, 0.25)],
+                                sleep=slept.append)
+        plan.begin_round()
+        plan.check(2, "dispatch")       # delays only hit the exchange
+        assert slept == []
+        plan.check(2, "exchange")
+        assert slept == [0.25]
+
+    def test_bad_stage(self):
+        with pytest.raises(ValueError, match="stage="):
+            health.FaultPlan().check(0, "compute")
+
+
+# -- FleetMonitor --------------------------------------------------------
+
+
+class TestFleetMonitor:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="n_groups"):
+            health.FleetMonitor(0)
+        with pytest.raises(ValueError, match="retries"):
+            health.FleetMonitor(2, retries=-1)
+        with pytest.raises(ValueError, match="max_strikes"):
+            health.FleetMonitor(2, max_strikes=0)
+        mon = health.FleetMonitor(2)
+        with pytest.raises(ValueError, match="outside"):
+            mon.is_live(2)
+
+    def test_groups_start_live(self):
+        mon = health.FleetMonitor(3, clock=FakeClock())
+        assert mon.live() == frozenset({0, 1, 2})
+        assert mon.demoted == frozenset()
+
+    def test_heartbeat_staleness(self):
+        clk = FakeClock()
+        mon = health.FleetMonitor(2, heartbeat_timeout=1.0, clock=clk)
+        clk.advance(0.9)
+        assert mon.live() == frozenset({0, 1})
+        clk.advance(0.2)                 # both beats now stale
+        assert mon.live() == frozenset()
+        mon.heartbeat(1)
+        assert mon.live() == frozenset({1})
+
+    def test_no_timeout_means_no_staleness(self):
+        clk = FakeClock()
+        mon = health.FleetMonitor(2, clock=clk)
+        clk.advance(1e9)                 # idle for ages: still live
+        assert mon.live() == frozenset({0, 1})
+
+    def test_strikes_demote_after_max(self):
+        mon = health.FleetMonitor(3, max_strikes=3, clock=FakeClock())
+        assert mon.strike(1) is False
+        assert mon.strike(1) is False
+        assert mon.strike(1) is True     # crossed max_strikes: demoted
+        assert mon.demoted == frozenset({1})
+        assert mon.live() == frozenset({0, 2})
+        assert mon.strike(1) is False    # already demoted: no re-demote
+
+    def test_success_clears_strikes(self):
+        mon = health.FleetMonitor(2, max_strikes=2, clock=FakeClock())
+        mon.strike(0)
+        mon.record_exchange(0, 0.01)     # success resets the count
+        assert mon.strike(0) is False
+        assert mon.demoted == frozenset()
+
+    def test_record_exchange_heartbeats(self):
+        clk = FakeClock()
+        mon = health.FleetMonitor(2, heartbeat_timeout=1.0, clock=clk)
+        clk.advance(2.0)
+        assert mon.live() == frozenset()
+        mon.record_exchange(0, 0.01)
+        assert mon.live() == frozenset({0})
+
+    def test_fleet_view_snapshot(self):
+        mon = health.FleetMonitor(4, clock=FakeClock())
+        mon.demote(2)
+        assert mon.fleet() == FleetView(n_devices=4,
+                                        failed=frozenset({2}))
+        assert mon.fleet().survivors() == (0, 1, 3)
+
+    def test_backoff_exponential_capped(self):
+        mon = health.FleetMonitor(2, backoff_base=0.05, backoff_max=0.4,
+                                  clock=FakeClock())
+        assert mon.backoff(0) == pytest.approx(0.05)
+        assert mon.backoff(1) == pytest.approx(0.1)
+        assert mon.backoff(2) == pytest.approx(0.2)
+        assert mon.backoff(10) == pytest.approx(0.4)   # capped
+        assert mon.backoff(-3) == pytest.approx(0.05)  # clamped to 0
+
+    def test_stragglers_exclude_demoted(self):
+        mon = health.FleetMonitor(3, straggler_threshold=1.5,
+                                  straggler_window=4, straggler_patience=1,
+                                  clock=FakeClock())
+        for _ in range(4):
+            mon.record_exchange(0, 0.01)
+            mon.record_exchange(1, 0.01)
+            mon.record_exchange(2, 0.10)
+        assert mon.stragglers() == [2]
+        mon.demote(2)
+        assert mon.stragglers() == []

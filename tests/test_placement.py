@@ -22,7 +22,13 @@ Covers the placement layer end to end (DESIGN_BACKENDS.md §Placement):
   * property sweeps (tests/_proptest.py) over ragged corpora + random
     keep masks: PackedIndex round-trip invariants (doc-id remap total,
     pow2 bucket capacities, measured ``bytes_stored``) under every
-    placement.
+    placement;
+  * fault tolerance (PR 6): replica chains, health-checked failover,
+    and degraded-coverage results — replicas=2 under any single lost
+    group stays bit-identical to the no-failure oracle, replicas=1
+    degrades to the restricted-to-survivors oracle with an exact
+    ``coverage`` fraction (case bodies in tests/_grid_cases.py:
+    ``check_fault_tolerance`` / ``check_failover_server``).
 """
 
 import os
@@ -107,6 +113,135 @@ class TestPlacementPlan:
         assert PlacementPlan.for_index(masked, 2).n_buckets == 1
         assert (PlacementPlan.for_index(packed, 2).n_buckets
                 == len(packed.buckets))
+
+
+class TestReplicatedPlacement:
+    """Replica chains (``replicas=r``): the placement law is that every
+    bucket lands on r *distinct* groups, primary first, and the plan
+    stays deterministic across hosts."""
+
+    def test_balanced_chains_distinct_and_deterministic(self):
+        w = [100, 10, 90, 50, 60, 20]
+        a = PlacementPlan.balanced(w, 3, replicas=2)
+        assert a == PlacementPlan.balanced(w, 3, replicas=2)
+        assert a.replicas == 2
+        for i in range(a.n_buckets):
+            chain = a.replicas_of(i)
+            assert len(chain) == 2
+            assert len(set(chain)) == 2               # never share a group
+            assert a.group_of(i) == chain[0]          # primary first
+        # every replica level is placed, so each doc is stored twice
+        per_group = [a.buckets_of(g) for g in range(3)]
+        assert sum(len(b) for b in per_group) == 2 * len(w)
+        assert a.used_groups() <= frozenset(range(3))
+
+    def test_replicas_bounds(self):
+        with pytest.raises(ValueError, match="replicas"):
+            PlacementPlan.balanced([1, 2], 2, replicas=3)
+        with pytest.raises(ValueError, match="replicas"):
+            PlacementPlan(n_groups=2, groups=((0, 1),), replicas=3)
+        with pytest.raises(ValueError, match="repeats"):
+            PlacementPlan(n_groups=3, groups=((1, 1),), replicas=2)
+        with pytest.raises(ValueError, match="chain"):
+            PlacementPlan(n_groups=3, groups=((0, 1, 2),), replicas=2)
+        with pytest.raises(ValueError, match="outside"):
+            PlacementPlan(n_groups=2, groups=((0, 5),), replicas=2)
+        # a length-1 chain collapses to the flat layout
+        p = PlacementPlan(n_groups=2, groups=((1,), (0,)))
+        assert p.groups == (1, 0)
+
+    def test_round_robin_and_pinned_chains(self):
+        r = PlacementPlan.round_robin(4, 3, replicas=2)
+        assert r.replicas_of(0) == (0, 1)
+        assert r.replicas_of(2) == (2, 0)
+        p = PlacementPlan.pinned(3, 3, group=1, replicas=2)
+        assert all(p.replicas_of(i) == (1, 2) for i in range(3))
+        assert p.buckets_of(0) == ()
+
+    def test_rebalance_preserves_survivors(self):
+        w = [50, 40, 30, 20]
+        plan = PlacementPlan.balanced(w, 3, replicas=2)
+        out = plan.rebalance({1}, weights=w)
+        assert out == plan.rebalance({1}, weights=w)  # deterministic
+        assert out.n_groups == plan.n_groups          # ids preserved
+        assert out.replicas == 2
+        for i in range(out.n_buckets):
+            chain = out.replicas_of(i)
+            assert 1 not in chain                     # lost group avoided
+            # surviving assignments kept in place (no data movement)
+            kept = [g for g in plan.replicas_of(i) if g != 1]
+            assert chain[:len(kept)] == tuple(kept)
+
+    def test_rebalance_drops_replica_degree(self):
+        plan = PlacementPlan.round_robin(4, 3, replicas=2)
+        out = plan.rebalance({0, 2})
+        assert out.replicas == 1                      # one survivor left
+        assert all(g == 1 for g in out.groups)
+        with pytest.raises(ValueError, match="all .* groups lost"):
+            plan.rebalance({0, 1, 2})
+
+    def test_flat_rebalance_moves_only_lost_buckets(self):
+        plan = PlacementPlan(n_groups=3, groups=(0, 1, 2, 0))
+        out = plan.rebalance({2}, weights=[5, 4, 3, 2])
+        assert out.replicas == 1
+        assert out.groups[0] == 0 and out.groups[1] == 1
+        assert out.groups[3] == 0                     # untouched
+        assert out.groups[2] in (0, 1)                # re-placed
+
+    def test_replicated_manifest_roundtrip(self):
+        p = PlacementPlan.balanced([7, 3, 5], 3, replicas=2)
+        m = p.to_manifest()
+        assert m["format"] == 2 and m["replicas"] == 2
+        assert PlacementPlan.from_manifest(m) == p
+        # flat plans keep the PR 5 byte-stable manifest (no format key)
+        flat = PlacementPlan.balanced([7, 3, 5], 2)
+        assert "format" not in flat.to_manifest()
+
+    def test_from_manifest_refuses_newer_format(self):
+        m = PlacementPlan.balanced([1, 2], 2, replicas=2).to_manifest()
+        m["format"] = 99
+        with pytest.raises(IOError, match="newer than this reader"):
+            PlacementPlan.from_manifest(m)
+
+
+class TestMergeDedupeAndCoverage:
+    """Host-side units of the fault-tolerant merge: the dedup merge is
+    bit-identical to the plain merge on unique ids, and TopKResult
+    stays unpack-compatible with the old 2-tuple."""
+
+    def test_merge_unique_matches_plain_on_unique_ids(self):
+        from repro.serve.retrieval import _merge_topk, _merge_topk_unique
+        k = jax.random.PRNGKey(4)
+        scores = jax.random.normal(k, (3, 12))
+        ids = jnp.tile(jnp.arange(12)[None], (3, 1))
+        ids = jax.random.permutation(k, ids, axis=1, independent=True)
+        for kk in (1, 5, 12):
+            si, ss = _merge_topk(scores, ids, kk)
+            ui, us = _merge_topk_unique(scores, ids, kk)
+            np.testing.assert_array_equal(np.asarray(si), np.asarray(ui))
+            np.testing.assert_array_equal(np.asarray(ss), np.asarray(us))
+
+    def test_merge_unique_dedupes_replica_copies(self):
+        from repro.serve.retrieval import _merge_topk_unique
+        # doc 7 arrives from two replicas with the same score; doc 3
+        # arrives once.  Each doc fills exactly one output slot.
+        scores = jnp.array([[2.0, 2.0, 1.0, -jnp.inf]])
+        ids = jnp.array([[7, 7, 3, -1]])
+        i, s = _merge_topk_unique(scores, ids, 2)
+        np.testing.assert_array_equal(np.asarray(i), [[7, 3]])
+        np.testing.assert_array_equal(np.asarray(s), [[2.0, 1.0]])
+
+    def test_topk_result_unpacks_like_tuple(self):
+        from repro.serve.retrieval import TopKResult
+        idx, sc = jnp.zeros((2, 3), jnp.int32), jnp.ones((2, 3))
+        out = TopKResult(idx, sc, 0.5)
+        a, b = out                                     # 2-tuple protocol
+        assert a is idx and b is sc
+        assert out.top_idx is idx and out.top_scores is sc
+        assert out.coverage == 0.5
+        assert len(out) == 2
+        full = TopKResult(idx, sc)
+        assert full.coverage == 1.0
 
 
 class TestGridPlumbing:
@@ -275,6 +410,58 @@ class TestPackedRoundtripProperties:
             assert sorted(seen_docs) == list(range(packed.n_docs))
 
 
+class TestReplicatedIndexIO:
+    """Replicated artifact lifecycle: every group persists copies of the
+    buckets in its replica chains; full reassembly dedupes them."""
+
+    def test_replicated_save_load_roundtrip(self, tmp_path):
+        from repro.serve import index_io
+        _, packed = _ragged_packed(21, 14, 16, 8)
+        nb = len(packed.buckets)
+        plc = PlacementPlan.for_index(packed, 3, replicas=2)
+        td = str(tmp_path)
+        index_io.save_index(td, packed, placement=plc)
+        assert index_io.has_index(td)
+        assert index_io.load_placement(td) == plc
+        # replicated artifacts stamp format 3; an old (format<=2) reader
+        # must refuse rather than double-count replica copies
+        import json
+        with open(os.path.join(td, index_io.MANIFEST)) as f:
+            assert json.load(f)["format"] == 3
+        # full load dedupes replicas back to the original corpus
+        whole = index_io.load_index(td)
+        assert len(whole.buckets) == nb
+        assert whole.n_docs == packed.n_docs
+        q = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8))
+        np.testing.assert_array_equal(
+            np.asarray(maxsim_scores(packed, q)),
+            np.asarray(maxsim_scores(whole, q)))
+        # each group restores every bucket of its chains (the copies a
+        # failover target needs locally), so total loads = replicas * nb
+        seen = 0
+        for g in range(3):
+            sub = index_io.load_index(td, group=g)
+            assert len(sub.buckets) == len(plc.buckets_of(g))
+            seen += len(sub.buckets)
+        assert seen == 2 * nb
+
+    def test_old_reader_refuses_replicated_artifact(self, tmp_path):
+        from repro.serve import index_io
+        _, packed = _ragged_packed(22, 6, 16, 8)
+        plc = PlacementPlan.for_index(packed, 2, replicas=2)
+        index_io.save_index(str(tmp_path), packed, placement=plc)
+        import json
+        mpath = os.path.join(str(tmp_path), index_io.MANIFEST)
+        with open(mpath) as f:
+            man = json.load(f)
+        man["format"] = index_io.FORMAT + 1           # future format
+        with open(mpath, "w") as f:
+            json.dump(man, f)
+        with pytest.raises(IOError, match="newer"):
+            index_io.load_index(str(tmp_path))
+        assert not index_io.has_index(str(tmp_path))
+
+
 class TestGridDifferential:
     """The 4-device (2 hosts x 2 candidates) subprocess fixtures; case
     bodies in tests/_grid_cases.py, shared with scripts/smoke.sh."""
@@ -294,3 +481,20 @@ class TestGridDifferential:
     def test_grid_artifact_roundtrip(self):
         out = _run_grid_case("check_artifact_roundtrip")
         assert "GRID_ARTIFACT_OK" in out
+
+    def test_grid_fault_tolerance(self):
+        """The PR 6 acceptance gate: replicas=2 on the 4-device grid,
+        killing ANY single host group (dispatch kill, mid-exchange
+        kill, or deadline overrun) yields bit-identical top-k ids and
+        fp scores to the no-failure oracle; replicas=1 degrades to the
+        oracle restricted to surviving buckets with coverage < 1."""
+        out = _run_grid_case("check_fault_tolerance")
+        assert "GRID_FAULT_TOLERANCE_OK" in out
+
+    def test_grid_failover_server(self):
+        """RetrievalServer end to end under group loss: warmed closures
+        never serve a demoted group's program, and the three
+        --on-group-loss policies (degrade / rebalance / fail) behave as
+        documented."""
+        out = _run_grid_case("check_failover_server")
+        assert "GRID_FAILOVER_SERVER_OK" in out
