@@ -32,7 +32,10 @@ materializing path (or its results diverged), if a corpus-sized
 serving HLO, or if fault-tolerant serving regressed (replicated
 failover after one lost host group no longer bit-identical to the
 no-failure oracle, or degraded unreplicated serving not reporting
-0 < coverage < 1) — the smoke scripts/smoke.sh runs after recording.
+0 < coverage < 1), or if live-mutation serving regressed (post-crash
+recovery no longer bit-identical to the pre-crash live view, or
+compaction no longer bit-identical to the delta-log view it folds) —
+the smoke scripts/smoke.sh runs after recording.
 """
 
 from __future__ import annotations
@@ -406,6 +409,105 @@ def _fault_worker(shape: dict) -> dict:
     }
 
 
+# Mutation bench shape: small enough that the per-round retrace of the
+# delta-view program stays cheap on CPU, big enough for several
+# capacity buckets per leaf.
+MUTATION = dict(n_q=8, n_docs=192, m=24, l=8, dim=32, k=10,
+                rounds=5, upsert_batch=12)
+
+
+def run_mutation_serving(**shape):
+    """Live-mutation serving bench (DESIGN_BACKENDS.md §Mutation):
+    sustained q/s under a mixed query+upsert workload (every round
+    appends one durable upsert batch through the WAL, reloads the
+    delta log, and serves a query batch against the refreshed live
+    view — WAL fsyncs, delta packing, and the view retrace are all
+    inside the clock), steady-state q/s on the final view, the
+    recovery latency after a simulated crash (an uncommitted compact
+    intent on the WAL — exactly what a kill at the compact-intent
+    point leaves — timed through ``recover`` + state reload + first
+    query), and two parity bits ``--check`` gates: recovery must
+    re-serve the pre-crash live view bit-identically, and compaction
+    must fold the delta log into an epoch that serves bit-identically
+    to the view it replaces."""
+    import tempfile
+
+    from repro.serve import index_io, mutation
+    from repro.serve.index import PackedIndex
+
+    shape = MUTATION | shape
+    n_q, n_docs, m, l, dim, k = (shape[x] for x in
+                                 ("n_q", "n_docs", "m", "l", "dim", "k"))
+    rounds, batch = shape["rounds"], shape["upsert_batch"]
+    rng = np.random.default_rng(0)
+    embs = rng.normal(size=(n_docs, m, dim)).astype(np.float32)
+    masks = rng.random((n_docs, m)) < 0.85
+    q = rng.normal(size=(n_q, l, dim)).astype(np.float32)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "artifact")
+        index_io.save_index(path, PackedIndex.pack(embs, masks))
+
+        n_queries = 0
+        i_live = s_live = None
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            ids = list(range(n_docs + r * batch, n_docs + (r + 1) * batch))
+            d = rng.normal(size=(batch, m, dim)).astype(np.float32)
+            dm = rng.random((batch, m)) < 0.85
+            mutation.append_upsert(path, d, dm, ids)
+            log = mutation.load_state(path)
+            i_live, s_live = topk_search(log.base, q, k=k,
+                                         mutation=log.view())
+            jax.block_until_ready(s_live)
+            n_queries += n_q
+        t_mixed = time.perf_counter() - t0
+        oracle = (np.asarray(i_live), np.asarray(s_live))
+
+        log = mutation.load_state(path)
+        view = log.view()
+        f_view = lambda: jax.block_until_ready(
+            topk_search(log.base, q, k=k, mutation=view))
+        t_view, _ = common.timeit(f_view, repeat=2)
+
+        # Simulated crash: an intent on the WAL with no commit is the
+        # durable state a kill at compact-intent leaves behind.
+        records = index_io.wal_read(path)
+        index_io.wal_append(path, {"op": "compact",
+                                   "seq": mutation._next_seq(records),
+                                   "epoch": log.epoch + 1,
+                                   "deltas": []})
+        t0 = time.perf_counter()
+        index_io.recover(path)
+        rlog = mutation.load_state(path)
+        i_rec, s_rec = topk_search(rlog.base, q, k=k, mutation=rlog.view())
+        jax.block_until_ready(s_rec)
+        t_recover = time.perf_counter() - t0
+        same = lambda a, b: bool((np.asarray(a) == np.asarray(b)).all())
+        parity_recover = (same(oracle[0], i_rec)
+                          and same(oracle[1], s_rec))
+
+        new_index = mutation.Compactor(path).run()
+        reloaded = index_io.load_index(path)
+        i_c, s_c = topk_search(reloaded, q, k=k)
+        parity_compact = (new_index is not None
+                          and same(oracle[0], i_c)
+                          and same(oracle[1], s_c))
+        orphans = index_io.list_orphans(path)
+
+    return {
+        "mixed_q_per_s": n_queries / t_mixed,
+        "view_q_per_s": n_q / t_view,
+        "upserts_per_s": rounds * batch / t_mixed,
+        "recovery_s": t_recover,
+        "recovery_parity_identical": parity_recover,
+        "post_compact_parity_identical": parity_compact,
+        "orphans_after_recovery": len(orphans),
+        "epoch_after_compact": int(reloaded.epoch),
+        "shape": dict(shape),
+    }
+
+
 def load_trajectory(path: str = OUT_PATH) -> list[dict]:
     """Read the trajectory entries; a legacy single-record dict (PR 1
     wrote one overwritten object) is adopted as the first entry."""
@@ -485,6 +587,29 @@ def check_last(path: str = OUT_PATH) -> None:
     print(f"throughput smoke OK: streaming serving {st:.2f} q/s vs "
           f"materializing {mt:.2f} q/s ({st / mt:.2f}x, HLO clean, "
           f"results identical)")
+    mut = last.get("mutation_serving")
+    if mut is None:
+        raise SystemExit(f"{path}: last entry predates live-mutation "
+                         "serving; re-run the bench")
+    if not mut.get("recovery_parity_identical", False):
+        raise SystemExit(
+            "RECOVERY REGRESSION: the live view re-served after crash "
+            "recovery diverged from the pre-crash view at shape "
+            f"{mut.get('shape')}")
+    if not mut.get("post_compact_parity_identical", False):
+        raise SystemExit(
+            "COMPACTION REGRESSION: the compacted epoch diverged from "
+            "the delta-log view it folds at shape "
+            f"{mut.get('shape')}")
+    if mut.get("orphans_after_recovery", 1) != 0:
+        raise SystemExit(
+            "DURABILITY REGRESSION: crash recovery left "
+            f"{mut['orphans_after_recovery']} orphaned file(s) in the "
+            f"artifact at shape {mut.get('shape')}")
+    print(f"mutation serving smoke OK: mixed {mut['mixed_q_per_s']:.2f} "
+          f"q/s ({mut['upserts_per_s']:.2f} upserts/s interleaved), "
+          f"view {mut['view_q_per_s']:.2f} q/s, recovery "
+          f"{mut['recovery_s']*1e3:.0f} ms (bit-identical, 0 orphans)")
     grid = last.get("grid_serving")
     if grid is None:
         raise SystemExit(f"{path}: last entry predates grid placement "
@@ -538,6 +663,7 @@ def main():
     rerank = run_rerank_backends(**RERANK)
     layout = run_packed_serving()
     stream = run_streaming_serving()
+    mut = run_mutation_serving()
     grid = run_grid_serving()
     fault = run_fault_tolerance()
 
@@ -591,6 +717,21 @@ def main():
         f"speedup={stream['speedup_streaming_over_materializing']:.2f}x;"
         f"peak_temp_bytes={pb_s}/{pb_m};"
         f"hlo_clean={stream['hlo_no_corpus_matrix']}")
+    for name in ("mixed_q_per_s", "view_q_per_s"):
+        common.csv_line(f"kernel_backends/serving_mutation_{name}",
+                        1e6 / mut[name], f"q_per_s={mut[name]:.2f}")
+    common.csv_line("kernel_backends/serving_mutation_recovery",
+                    mut["recovery_s"] * 1e6,
+                    f"recover_to_first_query_s={mut['recovery_s']:.3f}")
+    mut_ok = (mut["recovery_parity_identical"]
+              and mut["post_compact_parity_identical"]
+              and mut["orphans_after_recovery"] == 0)
+    common.csv_line(
+        "kernel_backends/CLAIM_mutation_recovery_bit_identical", 0.0,
+        f"holds={mut_ok};"
+        f"recovery_parity={mut['recovery_parity_identical']};"
+        f"compact_parity={mut['post_compact_parity_identical']};"
+        f"orphans={mut['orphans_after_recovery']}")
     if grid.get("skipped"):
         common.csv_line("kernel_backends/serving_grid_skipped", 0.0,
                         f"reason={grid['skipped']}")
@@ -670,6 +811,11 @@ def main():
             stream["speedup_streaming_over_materializing"] >= 1.0
             and stream["hlo_no_corpus_matrix"]
             and stream["results_identical"]),
+        "mutation_serving": mut,
+        "claim_mutation_recovery_bit_identical": bool(
+            mut["recovery_parity_identical"]
+            and mut["post_compact_parity_identical"]
+            and mut["orphans_after_recovery"] == 0),
         "grid_serving": grid,
         "claim_grid_placement_parity_and_clean_hlo": bool(
             grid.get("skipped")

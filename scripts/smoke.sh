@@ -3,12 +3,16 @@
 # micro-benches (Pallas interpreter off-TPU), the backend-dispatch perf
 # record, the throughput gates (fails if batched bucketed pruning
 # regresses below the reference path, if packed serving drops below the
-# masked path, if grid-placed serving loses parity/HLO cleanliness, or
-# if replicated failover loses bit-parity / degraded coverage breaks
-# its 0 < c < 1 contract, at the bench shapes), and the packed-index
-# lifecycle roundtrip (prune -> pack -> save on the first serve run,
-# load -> query on the second — the offline/online split a real
-# deployment uses), including a replicated run that kills a host group.
+# masked path, if grid-placed serving loses parity/HLO cleanliness, if
+# replicated failover loses bit-parity / degraded coverage breaks its
+# 0 < c < 1 contract, or if crash recovery / compaction lose bit-parity
+# with the live view, at the bench shapes), the kill -9 crash-recovery
+# leg (a compaction SIGKILLed at a seed-randomized durability point,
+# recovered, re-served bit-identically), and the packed-index lifecycle
+# roundtrip (prune -> pack -> save on the first serve run, load ->
+# query on the second — the offline/online split a real deployment
+# uses), including a replicated run that kills a host group and a
+# live-mutation run (upsert -> delete -> compact on the artifact).
 # Run from anywhere; zstandard is optional (checkpointing falls back to
 # uncompressed bodies).
 set -euo pipefail
@@ -30,6 +34,17 @@ python -m benchmarks.bench_kernel_backends --check
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src:tests${PYTHONPATH:+:$PYTHONPATH} \
   python -c "import _grid_cases; _grid_cases.main()" | grep -q GRID_CASES_OK
+
+# crash-recovery leg (tests/_crash_cases.py, the same case bodies the
+# test_mutation.py kill sweep runs): seed an artifact, upsert + delete
+# through the WAL, then kill -9 a compaction child at a
+# seed-randomized durability point, recover, and assert the re-served
+# top-k is bit-identical to the uninterrupted lifecycle with zero
+# orphaned files.  SMOKE_SEED rotates the crash point across runs.
+SMOKE_SEED=${SMOKE_SEED:-$RANDOM} \
+  PYTHONPATH=src:tests${PYTHONPATH:+:$PYTHONPATH} \
+  python -c "import _crash_cases; _crash_cases.main()" \
+  | grep -q CRASH_RECOVERY_OK
 
 index_dir="$(mktemp -d)/packed_index"
 trap 'rm -rf "$(dirname "$index_dir")"' EXIT
@@ -65,4 +80,12 @@ XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   | grep -E "replicas=2|injected loss of host group 1|coverage: 1.000" \
   | wc -l | grep -q 3
 test -f "$rep_dir/packed_index.group1.json"
+# live-mutation lifecycle on the shipped artifact: durable upsert +
+# delete through the WAL, served live from the delta-log view beside
+# the base epoch, then compacted into epoch 1 — bit-identical serving
+# (exact for the uncompressed smoke artifact) with zero orphans.
+python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
+  --upsert 4 --delete 1,3 --compact \
+  | grep -E "serving live mutation view|post-compact parity: True.*orphans: 0" \
+  | wc -l | grep -q 2
 echo "smoke OK"

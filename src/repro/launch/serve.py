@@ -5,7 +5,12 @@
                    queries).  With --index-dir the packed artifact is
                    persisted there on first run (prune -> pack -> save ->
                    load -> serve) and loaded directly on later runs —
-                   the offline-prune / online-serve split.
+                   the offline-prune / online-serve split.  --upsert /
+                   --delete / --compact then drive the live-mutation
+                   lifecycle against that artifact: durable WAL-logged
+                   delta buckets and tombstones served beside the base
+                   epoch, folded into the next epoch by compaction
+                   (repro.serve.mutation).
   --arch <lm>    : KV-cache decode loop on the smoke config
 """
 
@@ -17,6 +22,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro import sharding as shlib
@@ -28,7 +34,8 @@ from repro.launch import mesh as mesh_lib
 from repro.models import colbert as colbert_lib
 from repro.models import transformer as tfm
 from repro.serve import health, index_io
-from repro.serve.retrieval import RetrievalServer, TokenIndex
+from repro.serve import mutation as mutation_lib
+from repro.serve.retrieval import RetrievalServer, TokenIndex, topk_search
 from repro.train import checkpoint
 
 
@@ -42,7 +49,10 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
                     hosts: int = 0,
                     replicas: int = 1,
                     on_group_loss: str = "degrade",
-                    kill_group: int | None = None):
+                    kill_group: int | None = None,
+                    upsert: int = 0,
+                    delete: tuple = (),
+                    compact: bool = False):
     cfg = configs.get("colbert").smoke
     params = colbert_lib.init_params(jax.random.PRNGKey(seed), cfg)
     if replicas < 1:
@@ -57,6 +67,14 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
                                     l=cfg.query_len)
     if mesh == "grid" and hosts <= 0:
         hosts = mesh_lib.default_serve_hosts()
+    if index_dir and (upsert or delete or compact):
+        # Mutation runs start by resolving any interrupted mutation a
+        # previous process left behind: roll landed intents forward,
+        # torn ones back, sweep orphans — then the artifact is a clean
+        # pre- or post-mutation epoch and serving proceeds normally.
+        report = index_io.recover(index_dir)
+        if any(report.values()):
+            print(f"[serve] recovered artifact: {report}")
     if index_dir and index_io.has_index(index_dir):
         # Online half of the lifecycle: the pruning job already ran and
         # the artifact is authoritative — this run's pruning/packing
@@ -201,6 +219,71 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
         if monitor is not None:
             print(f"[serve] coverage: {coverage:.3f} "
                   f"(live groups: {sorted(monitor.live())})")
+        if upsert or delete or compact:
+            idx, scores = _mutation_lifecycle(
+                index_dir, server, q_emb, params, cfg, seed,
+                upsert=upsert, delete=delete, compact=compact)
+    return idx, scores
+
+
+def _mutation_lifecycle(index_dir, server, q_emb, params, cfg, seed, *,
+                        upsert, delete, compact):
+    """The live-mutation demo leg: durable upsert/delete against the
+    artifact, serve the delta-log view beside the base epoch, then
+    (optionally) compact to the next epoch and verify the swap served
+    bit-identical results.  Single-process by design — compaction IS
+    the redeploy path for sharded/grid serving."""
+    if upsert:
+        base_n = index_io.load_index(index_dir).n_docs
+        new_ids = list(range(base_n, base_n + upsert))
+        docs = synthetic.token_corpus(seed + 1, n_docs=upsert, n_q=1,
+                                      vocab=cfg.vocab, m=cfg.doc_len,
+                                      l=cfg.query_len)
+        n_emb, n_mask = colbert_lib.encode_docs(params, cfg, docs.doc_ids)
+        delta_id = mutation_lib.append_upsert(
+            index_dir, np.asarray(n_emb), np.asarray(n_mask), new_ids)
+        print(f"[serve] upserted {upsert} docs "
+              f"(delta {delta_id}, ids {new_ids[0]}..{new_ids[-1]})")
+    if delete:
+        mutation_lib.append_delete(index_dir, delete)
+        print(f"[serve] tombstoned doc ids {sorted(delete)}")
+    log = mutation_lib.load_state(index_dir)
+    server.swap_index(log.base, mutation=log.view())
+    idx, scores = server.query_batch(q_emb)
+    print(f"[serve] serving live mutation view: {len(log.deltas)} "
+          f"delta(s), {len(log.tombstones)} tombstone(s), "
+          f"n_live={log.n_live}")
+    if compact:
+        # Eager exact-route reference BEFORE the swap: the bitwise
+        # parity law compares eager against eager (the server's
+        # whole-program jit may fuse the delta scorer with 1-ulp
+        # different rounding than the eager composition).
+        ri, rv = topk_search(log.base, q_emb, k=server.k,
+                             backend=server.backend,
+                             mutation=log.view())
+        t0 = time.time()
+        new_index = mutation_lib.Compactor(index_dir).run()
+        dt = time.time() - t0
+        if new_index is None:
+            print("[serve] nothing to compact")
+            return idx, scores
+        reloaded = index_io.load_index(index_dir)
+        server.swap_index(reloaded)
+        idx2, scores2 = server.query_batch(q_emb)
+        # Parity is checked on the SAME route the mutated view served —
+        # the e2e exact sweep (the server may route two-stage after the
+        # swap once n_first < n_docs again, a different, approximate
+        # dataflow).  Exact for compression="none"; int8 requantizes on
+        # compaction, so there parity is approximate by construction.
+        pi, pv = topk_search(reloaded, q_emb, k=server.k,
+                             backend=server.backend)
+        parity = bool(jnp.array_equal(ri, pi)
+                      and jnp.array_equal(rv, pv))
+        orphans = index_io.list_orphans(index_dir)
+        print(f"[serve] compacted to epoch {reloaded.epoch} in "
+              f"{dt*1e3:.1f} ms; post-compact parity: {parity}; "
+              f"orphans: {len(orphans)}")
+        idx, scores = idx2, scores2
     return idx, scores
 
 
@@ -222,8 +305,8 @@ def serve_lm(arch: str, n_tokens: int = 32, batch: int = 2):
     return jnp.stack(outs, axis=1)
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", default="colbert")
     ap.add_argument("--keep", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default=None)
@@ -273,7 +356,63 @@ def main():
                     help="first-stage candidate count; >= corpus size "
                          "(or 0) serves the e2e exact sweep — the route "
                          "the sharded streaming merge runs on")
-    args = ap.parse_args()
+    ap.add_argument("--upsert", type=int, default=0,
+                    help="durably upsert this many freshly encoded docs "
+                         "into the artifact as a WAL-logged delta bucket "
+                         "set, then serve the mutated view "
+                         "(repro.serve.mutation; needs --index-dir)")
+    ap.add_argument("--delete", default=None,
+                    help="comma-separated doc ids to durably tombstone "
+                         "(WAL intent -> atomic tombstone set -> commit; "
+                         "needs --index-dir)")
+    ap.add_argument("--compact", action="store_true",
+                    help="fold the artifact's delta log into the next "
+                         "epoch (background-compaction path: new epoch "
+                         "written beside the live one, committed by one "
+                         "atomic manifest swap) and re-serve from it")
+    return ap
+
+
+def parse_args(argv=None) -> argparse.Namespace:
+    """Parse + validate.  Config contradictions die HERE, at parse
+    time, with an argparse usage error — not minutes later as a warning
+    buried in serve-time logs after devices spun up (tested directly in
+    tests/test_serve_cli.py)."""
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    if args.kill_group is not None and args.mesh != "grid":
+        ap.error(f"--kill-group {args.kill_group} requires --mesh grid: "
+                 "fault injection demotes a host group of the grid "
+                 "placement, and no other mesh has host groups")
+    if args.replicas > 1 and args.mesh == "none":
+        ap.error(f"--replicas {args.replicas} requires a serving mesh: "
+                 "replica chains place buckets across host groups "
+                 "(--mesh grid); unsharded serving has nowhere to "
+                 "replicate to")
+    if args.upsert < 0:
+        ap.error(f"--upsert {args.upsert} must be >= 0")
+    if args.delete is not None:
+        try:
+            args.delete = tuple(int(x) for x in args.delete.split(",")
+                                if x.strip())
+        except ValueError:
+            ap.error(f"--delete expects comma-separated integer doc "
+                     f"ids, got {args.delete!r}")
+    else:
+        args.delete = ()
+    mutating = bool(args.upsert or args.delete or args.compact)
+    if mutating and not args.index_dir:
+        ap.error("--upsert/--delete/--compact mutate a persisted "
+                 "artifact; set --index-dir")
+    if mutating and args.mesh == "grid":
+        ap.error("mutation serving is single-process; run --compact to "
+                 "fold the delta log into a fresh epoch before serving "
+                 "it under --mesh grid")
+    return args
+
+
+def main(argv=None):
+    args = parse_args(argv)
     if args.arch == "colbert":
         serve_retrieval(keep_fraction=args.keep, ckpt_dir=args.ckpt_dir,
                         backend=args.backend, index_dir=args.index_dir,
@@ -281,7 +420,9 @@ def main():
                         n_first=args.n_first, hosts=args.hosts,
                         replicas=args.replicas,
                         on_group_loss=args.on_group_loss,
-                        kill_group=args.kill_group)
+                        kill_group=args.kill_group,
+                        upsert=args.upsert, delete=args.delete,
+                        compact=args.compact)
     else:
         serve_lm(args.arch, n_tokens=args.tokens)
 

@@ -30,13 +30,15 @@ tests/test_health.py, tests/test_elastic.py).
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 import time
 from collections import defaultdict
 
 from repro.train.elastic import FleetView, StragglerMonitor
 
-__all__ = ["FleetMonitor", "FaultPlan", "Fault", "GroupFailure",
-           "DegradedCoverage"]
+__all__ = ["CrashPlan", "FleetMonitor", "FaultPlan", "Fault",
+           "GroupFailure", "DegradedCoverage"]
 
 
 class GroupFailure(RuntimeError):
@@ -103,6 +105,31 @@ def delay_group(group: int, seconds: float, *, round: int | None = None,
     ``seconds`` before answering."""
     return Fault(group=group, kind="delay", round=round,
                  from_round=from_round, delay=float(seconds))
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashPlan:
+    """The durability counterpart of :class:`FaultPlan`: where a
+    ``FaultPlan`` injects *serve-time* failures (a group vanishing
+    mid-exchange), a ``CrashPlan`` injects *mutation-time* crashes —
+    it SIGKILLs the calling process the moment the mutation path
+    reaches the named durability point (``serve.mutation.CRASH_POINTS``
+    enumerates them: after the WAL intent fsync, after each atomic
+    artifact rename, after the commit record, ...).
+
+    SIGKILL, not an exception: no ``finally`` blocks, no ``atexit``, no
+    buffered-write flush runs — exactly what a power loss or OOM kill
+    leaves behind.  The crash-injection harness runs the mutation in a
+    subprocess with one plan per point and asserts
+    ``index_io.recover()`` lands on a bitwise-valid epoch with zero
+    orphaned files (tests/test_mutation.py)."""
+
+    kill_at: str
+
+    def check(self, point: str) -> None:
+        """Called by the mutation path as it passes ``point``."""
+        if point == self.kill_at:
+            os.kill(os.getpid(), signal.SIGKILL)
 
 
 class FaultPlan:

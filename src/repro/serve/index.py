@@ -153,6 +153,11 @@ class PackedIndex:
     # active sharding/specs rule set resolves "candidates" to the mesh's
     # candidate-parallel axis (``model`` in the canonical rules).
     shard_axes: tuple = ("candidates", None, None)
+    # Mutation epoch: 0 for a freshly packed index, bumped by each
+    # committed compaction (serve.mutation.Compactor).  Joins the
+    # serving closure cache keys so an epoch swap can never be answered
+    # by a program compiled over the previous epoch's arrays.
+    epoch: int = 0
     _pooled: jnp.ndarray | None = dataclasses.field(
         default=None, repr=False, compare=False)
     _padded: tuple | None = dataclasses.field(

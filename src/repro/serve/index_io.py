@@ -50,6 +50,8 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
+import zlib
 
 import jax.numpy as jnp
 
@@ -57,24 +59,33 @@ from repro.serve.index import COMPRESSIONS, PackedBucket, PackedIndex
 from repro.sharding import PlacementPlan
 from repro.train import checkpoint
 
-__all__ = ["FORMAT", "MANIFEST", "has_index", "load_index",
-           "load_placement", "save_index"]
+__all__ = ["FORMAT", "MANIFEST", "WAL", "has_index", "list_orphans",
+           "load_index", "load_placement", "recover", "save_index",
+           "wal_append", "wal_read"]
 
 # 2: the manifest grew "placement" and the body may split into
 # per-host-group sub-manifests + bodies; format-1 artifacts load fine.
 # 3: replicated placements — a bucket's body appears in EVERY group of
 # its replica chain, and the placement manifest nests replica chains.
-# Readers accept <= FORMAT; each artifact is stamped with the lowest
-# format that can describe it, so old layouts stay loadable by old
-# readers.
-FORMAT = 3
+# 4: mutable artifacts — the manifest carries an "epoch" field and,
+# once a compaction has committed, an "epoch_dir" pointing at the
+# subdirectory holding the live epoch's self-contained artifact; delta
+# sub-manifests ("packed_index_delta") and the mutation WAL ride
+# beside it.  Readers accept <= FORMAT; each artifact is stamped with
+# the lowest format that can describe it, so old layouts stay loadable
+# by old readers.
+FORMAT = 4
 MANIFEST = "packed_index.json"
+WAL = "mutation.wal"
+TOMBSTONES = "tombstones.json"
 
 
-def _format_for(placement: PlacementPlan | None) -> int:
+def _format_for(placement: PlacementPlan | None, epoch: int = 0) -> int:
+    if epoch:
+        return FORMAT
     if placement is None:
         return 1
-    return 2 if placement.replicas == 1 else FORMAT
+    return 2 if placement.replicas == 1 else 3
 
 
 def _group_manifest(g: int) -> str:
@@ -83,6 +94,18 @@ def _group_manifest(g: int) -> str:
 
 def _group_dir(path: str, g: int) -> str:
     return os.path.join(path, f"group_{g:04d}")
+
+
+def _delta_manifest(d: int) -> str:
+    return f"packed_index.delta{d}.json"
+
+
+def _delta_dir(path: str, d: int) -> str:
+    return os.path.join(path, f"delta_{d:06d}")
+
+
+def _epoch_dirname(epoch: int) -> str:
+    return f"epoch_{epoch:06d}"
 
 
 def _bucket_leaf(index: PackedIndex, b: PackedBucket) -> dict:
@@ -103,7 +126,7 @@ def _body_tree(index: PackedIndex, buckets=None) -> dict:
 
 
 def _meta(index: PackedIndex) -> dict:
-    return {
+    meta = {
         "kind": "packed_index",
         "n_docs": index.n_docs,
         "m": index.m,
@@ -111,6 +134,9 @@ def _meta(index: PackedIndex) -> dict:
         "tokens_total": index.tokens_total,
         "compression": index.compression,
     }
+    if index.epoch:
+        meta["epoch"] = index.epoch
+    return meta
 
 
 def save_index(path: str, index: PackedIndex, *,
@@ -128,7 +154,7 @@ def save_index(path: str, index: PackedIndex, *,
     os.makedirs(path, exist_ok=True)
     saver = checkpoint.save_async if async_save else checkpoint.save
     manifest = _meta(index) | {
-        "format": _format_for(placement),
+        "format": _format_for(placement, index.epoch),
         "buckets": [{"cap": b.cap, "n_docs": b.n_docs}
                     for b in index.buckets],
     }
@@ -140,7 +166,7 @@ def save_index(path: str, index: PackedIndex, *,
             # any surviving replica can restore and serve it alone.
             picked = placement.buckets_of(g)
             sub = _meta(index) | {
-                "format": _format_for(placement),
+                "format": _format_for(placement, index.epoch),
                 "kind": "packed_index_group",
                 "group": g,
                 "placement": placement.to_manifest(),
@@ -164,7 +190,8 @@ def save_index(path: str, index: PackedIndex, *,
 def _read_manifest(path: str, name: str) -> dict:
     with open(os.path.join(path, name)) as f:
         manifest = json.load(f)
-    if manifest.get("kind") not in ("packed_index", "packed_index_group"):
+    if manifest.get("kind") not in ("packed_index", "packed_index_group",
+                                    "packed_index_delta"):
         raise IOError(f"{path}/{name}: manifest is not a packed index")
     if manifest.get("format", 0) > FORMAT:
         raise IOError(f"{path}/{name}: manifest format "
@@ -174,6 +201,29 @@ def _read_manifest(path: str, name: str) -> dict:
         raise IOError(f"{path}/{name}: unknown compression "
                       f"{manifest['compression']!r}")
     return manifest
+
+
+def _read_group_manifest(path: str, g: int) -> dict:
+    """Group sub-manifest read that turns a torn artifact into an
+    actionable error: a missing or truncated ``packed_index.groupN.json``
+    names the bad group and points at :func:`recover` instead of
+    surfacing a raw ``FileNotFoundError``/``JSONDecodeError`` from deep
+    inside the loader."""
+    name = _group_manifest(g)
+    try:
+        return _read_manifest(path, name)
+    except FileNotFoundError as e:
+        raise IOError(
+            f"{path}: host group {g} sub-manifest {name} is missing — "
+            "the artifact is torn (interrupted save or mutation); run "
+            "repro.serve.index_io.recover(path) to roll it back to a "
+            "consistent epoch") from e
+    except json.JSONDecodeError as e:
+        raise IOError(
+            f"{path}: host group {g} sub-manifest {name} is truncated "
+            f"or corrupt ({e}) — the artifact is torn; run "
+            "repro.serve.index_io.recover(path) to roll it back to a "
+            "consistent epoch") from e
 
 
 def has_index(path: str) -> bool:
@@ -186,6 +236,8 @@ def has_index(path: str) -> bool:
         manifest = _read_manifest(path, MANIFEST)
     except (IOError, json.JSONDecodeError, KeyError):
         return False
+    if manifest.get("epoch_dir"):
+        return has_index(os.path.join(path, manifest["epoch_dir"]))
     placement = manifest.get("placement")
     if placement is None:
         return bool(checkpoint.list_steps(path))
@@ -201,8 +253,16 @@ def load_placement(path: str) -> PlacementPlan | None:
     """The placement plan a saved artifact was split by (None for
     placement-less format-1 artifacts)."""
     manifest = _read_manifest(path, MANIFEST)
+    if manifest.get("epoch_dir"):
+        return load_placement(os.path.join(path, manifest["epoch_dir"]))
     plc = manifest.get("placement")
     return None if plc is None else PlacementPlan.from_manifest(plc)
+
+
+def load_epoch(path: str) -> int:
+    """The live mutation epoch of the artifact at ``path`` (0 for any
+    pre-mutation artifact)."""
+    return int(_read_manifest(path, MANIFEST).get("epoch", 0))
 
 
 def _restore_buckets(root: str, manifest: dict) -> list[PackedBucket]:
@@ -231,7 +291,8 @@ def _index_of(manifest: dict, buckets: list[PackedBucket]) -> PackedIndex:
                        m=int(manifest["m"]), dim=int(manifest["dim"]),
                        tokens_total=int(manifest["tokens_total"]),
                        compression=manifest["compression"],
-                       buckets=buckets)
+                       buckets=buckets,
+                       epoch=int(manifest.get("epoch", 0)))
 
 
 def load_index(path: str, *, group: int | None = None) -> PackedIndex:
@@ -252,13 +313,18 @@ def load_index(path: str, *, group: int | None = None) -> PackedIndex:
     steps; a directory with no restorable body raises ``IOError``.
     """
     manifest = _read_manifest(path, MANIFEST)
+    if manifest.get("epoch_dir"):
+        # A committed compaction moved the live epoch into its own
+        # self-contained subdirectory; the root manifest is a pointer.
+        return load_index(os.path.join(path, manifest["epoch_dir"]),
+                          group=group)
     placement = manifest.get("placement")
     if group is not None:
         if placement is None:
             raise IOError(f"{path}: artifact has no placement; "
                           f"load_index(group={group}) needs one "
                           "(save_index(..., placement=...))")
-        sub = _read_manifest(path, _group_manifest(group))
+        sub = _read_group_manifest(path, group)
         buckets = (_restore_buckets(_group_dir(path, group), sub)
                    if sub["buckets"] else [])
         return _index_of(sub, buckets)
@@ -268,10 +334,272 @@ def load_index(path: str, *, group: int | None = None) -> PackedIndex:
     plan.validate(len(manifest["buckets"]))
     by_index: dict[int, PackedBucket] = {}
     for g in range(plan.n_groups):
-        sub = _read_manifest(path, _group_manifest(g))
+        sub = _read_group_manifest(path, g)
         restored = (_restore_buckets(_group_dir(path, g), sub)
                     if sub["buckets"] else [])
         for meta, bucket in zip(sub["buckets"], restored):
             by_index[int(meta["index"])] = bucket
     buckets = [by_index[i] for i in range(len(manifest["buckets"]))]
     return _index_of(manifest, buckets)
+
+
+# ----------------------------------------------------------------------
+# Write-ahead manifest log + crash recovery (DESIGN_BACKENDS.md
+# §Mutation & durability).  Every mutation of the artifact — an upsert
+# batch, a delete batch, a compaction swap — appends a checksummed
+# *intent* record to <dir>/mutation.wal (fsync'd) BEFORE touching any
+# artifact file, performs its writes exclusively through atomic
+# temp-then-rename primitives (checkpoint.save / atomic_json_dump), and
+# appends a *commit* record once every write landed.  ``recover(path)``
+# replays the log: an intent whose artifact writes all landed is rolled
+# forward (commit appended), anything else is rolled back (its partial
+# files deleted, an abort record appended), and files no committed
+# state references are garbage-collected — so a ``kill -9`` at ANY
+# point leaves the directory restorable to exactly the pre- or
+# post-mutation epoch, never a torn hybrid.
+# ----------------------------------------------------------------------
+
+
+def _wal_crc(rec: dict) -> int:
+    return zlib.crc32(
+        json.dumps(rec, sort_keys=True).encode()) & 0xFFFFFFFF
+
+
+def wal_append(path: str, record: dict) -> dict:
+    """Append one checksummed record to the mutation WAL, fsync'd so
+    the intent is durable before any artifact write it covers."""
+    rec = dict(record)
+    rec["crc"] = _wal_crc(record)
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, WAL), "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    return rec
+
+
+def wal_read(path: str) -> list[dict]:
+    """The WAL's valid prefix: reading stops at the first torn or
+    checksum-failing line (an append cut short by a crash); records
+    beyond a torn line are unreachable by construction (appends are
+    serialized and fsync'd), so the prefix IS the durable history."""
+    out: list[dict] = []
+    try:
+        with open(os.path.join(path, WAL)) as f:
+            lines = f.read().split("\n")
+    except FileNotFoundError:
+        return out
+    for line in lines:
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            break
+        crc = rec.pop("crc", None)
+        if crc != _wal_crc(rec):
+            break
+        out.append(rec)
+    return out
+
+
+def _wal_state(records: list[dict]):
+    """(pending intents, live delta ids, live tombstone flag) from the
+    durable history.  A committed compaction consumes every delta and
+    tombstone whose seq precedes it."""
+    intents = {r["seq"]: r for r in records
+               if r["op"] not in ("commit", "abort")}
+    resolved = {r["seq"] for r in records if r["op"] in ("commit", "abort")}
+    committed = {r["seq"] for r in records if r["op"] == "commit"}
+    pending = [intents[s] for s in sorted(intents) if s not in resolved]
+    last_compact = max((r["seq"] for r in records
+                        if r["op"] == "compact" and r["seq"] in committed),
+                       default=-1)
+    live_deltas = {r["delta"] for r in records
+                   if r["op"] == "upsert" and r["seq"] in committed
+                   and r["seq"] > last_compact}
+    live_tombstones = any(r["op"] == "delete" and r["seq"] in committed
+                          and r["seq"] > last_compact for r in records)
+    return pending, live_deltas, live_tombstones
+
+
+def load_tombstones(path: str) -> set[int]:
+    """The materialized cumulative tombstone set (empty when none)."""
+    try:
+        with open(os.path.join(path, TOMBSTONES)) as f:
+            obj = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return set()
+    return set(int(d) for d in obj.get("doc_ids", ()))
+
+
+def _intent_landed(path: str, rec: dict) -> bool:
+    """True when every artifact write the intent covers is durably
+    committed — the roll-forward test."""
+    op = rec["op"]
+    if op == "upsert":
+        d = int(rec["delta"])
+        try:
+            sub = _read_manifest(path, _delta_manifest(d))
+        except (IOError, OSError, json.JSONDecodeError, KeyError):
+            return False
+        try:
+            _restore_buckets(_delta_dir(path, d), sub)
+        except Exception:
+            return False
+        return True
+    if op == "delete":
+        return set(int(d) for d in rec["doc_ids"]) <= load_tombstones(path)
+    if op == "compact":
+        try:
+            manifest = _read_manifest(path, MANIFEST)
+        except (IOError, OSError, json.JSONDecodeError, KeyError):
+            return False
+        return int(manifest.get("epoch", 0)) == int(rec["epoch"])
+    return False
+
+
+def _roll_back(path: str, rec: dict) -> list[str]:
+    """Delete the partial artifacts of an intent that did not land.
+    Every covered write is temp-then-rename atomic, so each named file
+    either exists whole (deleted here) or never appeared."""
+    removed = []
+    op = rec["op"]
+    if op == "upsert":
+        d = int(rec["delta"])
+        for target in (os.path.join(path, _delta_manifest(d)),
+                       _delta_dir(path, d)):
+            if os.path.isdir(target):
+                shutil.rmtree(target)
+                removed.append(target)
+            elif os.path.exists(target):
+                os.remove(target)
+                removed.append(target)
+    elif op == "compact":
+        edir = os.path.join(path, _epoch_dirname(int(rec["epoch"])))
+        if os.path.isdir(edir):
+            shutil.rmtree(edir)
+            removed.append(edir)
+    # delete: the tombstone file write is atomic and _intent_landed
+    # said it holds the OLD set — nothing partial exists to remove.
+    return removed
+
+
+def finish_compact(path: str, rec: dict) -> None:
+    """Commit a landed compaction and drop what it consumed: the delta
+    bodies/manifests it folded in, the tombstone file, the previous
+    epoch's body.  Idempotent — a crash mid-cleanup leaves orphans the
+    next :func:`recover` sweep removes."""
+    records = wal_read(path)
+    if rec["seq"] not in {r["seq"] for r in records if r["op"] == "commit"}:
+        wal_append(path, {"op": "commit", "seq": rec["seq"]})
+    for d in rec.get("deltas", ()):
+        _roll_back(path, {"op": "upsert", "delta": int(d)})
+    tomb = os.path.join(path, TOMBSTONES)
+    if os.path.exists(tomb):
+        os.remove(tomb)
+    for orphan in list_orphans(path):
+        _remove_any(orphan)
+
+
+def _remove_any(target: str) -> None:
+    if os.path.isdir(target):
+        shutil.rmtree(target, ignore_errors=True)
+    elif os.path.exists(target):
+        try:
+            os.remove(target)
+        except OSError:
+            pass
+
+
+def list_orphans(path: str) -> list[str]:
+    """Files under ``path`` that no committed state references: stage
+    leftovers (``*.tmp.*`` files, ``tmp.*`` checkpoint dirs), delta
+    artifacts outside the live set, superseded epoch directories, and
+    — once an ``epoch_dir`` pointer is live — the previous epoch's
+    root-level body.  ``recover`` deletes exactly this list; an
+    artifact is clean when it is empty."""
+    if not os.path.isdir(path):
+        return []
+    try:
+        manifest = _read_manifest(path, MANIFEST)
+    except (IOError, OSError, json.JSONDecodeError, KeyError):
+        manifest = {}
+    epoch_dir = manifest.get("epoch_dir")
+    pending, live_deltas, live_tombstones = _wal_state(wal_read(path))
+    pending_deltas = {int(r["delta"]) for r in pending
+                      if r["op"] == "upsert"}
+    pending_epochs = {int(r["epoch"]) for r in pending
+                      if r["op"] == "compact"}
+    orphans = []
+    for name in sorted(os.listdir(path)):
+        full = os.path.join(path, name)
+        if ".tmp." in name or name.startswith("tmp."):
+            orphans.append(full)
+        elif name.startswith("delta_") or name.startswith(
+                "packed_index.delta"):
+            try:
+                d = int(name.split("delta")[-1].replace("_", "")
+                        .split(".")[0])
+            except ValueError:
+                orphans.append(full)
+                continue
+            if d not in live_deltas and d not in pending_deltas:
+                orphans.append(full)
+        elif name.startswith("epoch_"):
+            try:
+                e = int(name.split("_")[1])
+            except (IndexError, ValueError):
+                orphans.append(full)
+                continue
+            if name != epoch_dir and e not in pending_epochs:
+                orphans.append(full)
+        elif name == TOMBSTONES:
+            if not live_tombstones and not any(
+                    r["op"] == "delete" for r in pending):
+                orphans.append(full)
+        elif epoch_dir and (name.startswith("step_")
+                            or name.startswith("group_")
+                            or name.startswith("packed_index.group")):
+            # the pre-compaction epoch's body at the root, superseded
+            # by the epoch_dir pointer
+            orphans.append(full)
+        elif os.path.isdir(full):
+            for sub in sorted(os.listdir(full)):
+                if sub.startswith("tmp.") or ".tmp." in sub:
+                    orphans.append(os.path.join(full, sub))
+    return orphans
+
+
+def recover(path: str) -> dict:
+    """Replay/roll back the mutation WAL after a crash.
+
+    Every pending intent (appended to the WAL but never committed) is
+    resolved: rolled FORWARD when all its artifact writes landed (the
+    post-mutation epoch becomes durable), rolled BACK otherwise (its
+    partial files are deleted and the intent aborted — the
+    pre-mutation epoch stands).  Stage leftovers and unreferenced
+    files are then garbage-collected.  Idempotent, and safe to crash
+    *during*: re-running converges to the same state.  Returns a
+    report dict (``rolled_forward`` / ``rolled_back`` seqs,
+    ``removed`` paths).
+    """
+    report = {"rolled_forward": [], "rolled_back": [], "removed": []}
+    if not os.path.isdir(path):
+        return report
+    pending, _, _ = _wal_state(wal_read(path))
+    for rec in pending:
+        if _intent_landed(path, rec):
+            if rec["op"] == "compact":
+                finish_compact(path, rec)
+            else:
+                wal_append(path, {"op": "commit", "seq": rec["seq"]})
+            report["rolled_forward"].append(int(rec["seq"]))
+        else:
+            report["removed"] += _roll_back(path, rec)
+            wal_append(path, {"op": "abort", "seq": rec["seq"]})
+            report["rolled_back"].append(int(rec["seq"]))
+    for orphan in list_orphans(path):
+        _remove_any(orphan)
+        report["removed"].append(orphan)
+    return report

@@ -1,0 +1,438 @@
+"""Crash-consistent live index mutation: delta buckets, tombstones,
+background compaction (DESIGN_BACKENDS.md §Mutation & durability).
+
+The packed artifact was prune-once-serve-forever; production corpora
+churn.  This module makes mutation a first-class, *crash-specified*
+operation on an ``index_io`` artifact directory:
+
+* :class:`DeltaLog` — the in-memory mutable state: the packed base
+  epoch plus an ordered op list of absorbed upsert batches (each packed
+  into its own small capacity-bucketed :class:`PackedIndex` by the same
+  ``bucket_plan`` machinery the base uses — LSM-style delta buckets the
+  unmodified ``colbert_maxsim`` kernels score directly) and tombstone
+  sets for deletes.  ``view()`` produces the
+  ``retrieval.MutationView`` that ``topk_search`` merges as extra
+  tournament leaves, with stale/tombstoned ids masked to ``-inf``
+  before the root merge — bit-identical to re-packing the mutated
+  corpus from scratch (the mutation differential oracle).
+* :func:`append_upsert` / :func:`append_delete` — the durable mutation
+  ops.  Each appends a checksummed WAL intent record
+  (``index_io.wal_append``) BEFORE touching any artifact file, writes
+  its artifacts exclusively through atomic temp-then-rename primitives,
+  then appends a commit record.  ``index_io.recover(path)`` replays or
+  rolls back interrupted ops, so ``kill -9`` at any point yields the
+  pre- or post-mutation state, never a torn hybrid.
+* :class:`Compactor` — background compaction: re-packs base + deltas −
+  tombstones into fresh capacity buckets (group-by-group under a
+  placement, re-placed by ``PlacementPlan.rebalance_repack``), writes
+  the next epoch's self-contained artifact BESIDE the live one
+  (``epoch_NNNNNN/``), and commits with a single atomic root-manifest
+  swap.  ``RetrievalServer`` keys its jitted-closure cache on the
+  epoch, so a swap can never be answered by a program compiled over
+  the previous epoch's arrays.
+
+Crash injection: every durability point below accepts a
+``serve.health.CrashPlan`` that SIGKILLs the process the moment the
+named point is passed; ``CRASH_POINTS`` enumerates them for the
+kill-tested sweep in tests/test_mutation.py.
+
+Single-writer discipline: mutation ops and the compactor serialize
+through the WAL's append order — run one mutator per artifact
+directory at a time (queries keep flowing; they never write).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import index_io
+from repro.serve.index import PackedIndex
+from repro.serve.retrieval import MutationView
+from repro.train import checkpoint
+
+__all__ = ["CRASH_POINTS", "Compactor", "DeltaLog", "append_delete",
+           "append_upsert", "compact_index", "load_state", "materialize"]
+
+# Every named durability point of the mutation paths, in execution
+# order per op.  Each point sits immediately AFTER one durable
+# transition (a WAL fsync or an atomic rename); a kill at the point
+# therefore tests recovery from "this transition landed, the next one
+# never started".  Mid-write kills are equivalent to the preceding
+# point: every write between two points is temp-then-rename atomic.
+CRASH_POINTS = (
+    "upsert-intent",      # WAL intent fsync'd; no artifact touched yet
+    "upsert-body",        # delta checkpoint body renamed in
+    "upsert-manifest",    # delta sub-manifest renamed in
+    "upsert-commit",      # WAL commit fsync'd
+    "delete-intent",      # WAL intent fsync'd
+    "delete-tombstones",  # tombstone set atomically replaced
+    "delete-commit",      # WAL commit fsync'd
+    "compact-intent",     # WAL intent fsync'd
+    "compact-body",       # next epoch's artifact fully written beside
+    "compact-swap",       # root manifest atomically swapped to it
+    "compact-clean",      # commit + consumed deltas/tombstones dropped
+)
+
+
+def _crash(crash, point: str) -> None:
+    if crash is not None:
+        crash.check(point)
+
+
+def _pack_with_ids(embs, masks, doc_ids, n_total: int, *,
+                   compression: str, granularity, min_width: int,
+                   tokens_total: int | None = None,
+                   epoch: int = 0) -> PackedIndex:
+    """Pack a batch of docs carrying explicit corpus-global ids.
+
+    ``PackedIndex.pack`` assigns row-local doc ids; here the rows are
+    sorted by global id first (the streaming merge's tie-break proof
+    needs ids ascending within every bucket) and each bucket's ids are
+    remapped to the global space after packing.  ``n_docs`` becomes the
+    corpus-global total so the packed result drops into the same merge
+    tree as the base index."""
+    embs = np.asarray(embs)
+    masks = np.asarray(masks, bool)
+    ids = np.asarray(doc_ids, np.int64)
+    if ids.ndim != 1 or ids.shape[0] != masks.shape[0]:
+        raise ValueError(f"doc_ids shape {ids.shape} does not match "
+                         f"{masks.shape[0]} docs")
+    if len(np.unique(ids)) != len(ids):
+        raise ValueError("duplicate doc ids within one batch")
+    if len(ids) and ids.min() < 0:
+        raise ValueError("doc ids must be >= 0")
+    order = np.argsort(ids, kind="stable")
+    embs, masks, ids = embs[order], masks[order], ids[order]
+    packed = PackedIndex.pack(embs, masks, compression=compression,
+                              granularity=granularity,
+                              min_width=min_width)
+    gids = jnp.asarray(ids, jnp.int32)
+    for b in packed.buckets:
+        b.doc_ids = gids[b.doc_ids]
+    packed.n_docs = int(n_total)
+    packed.epoch = epoch
+    if tokens_total is not None:
+        packed.tokens_total = int(tokens_total)
+    return packed
+
+
+def _leaf_ids(index: PackedIndex) -> np.ndarray:
+    if not index.buckets:
+        return np.zeros(0, np.int64)
+    return np.concatenate(
+        [np.asarray(b.doc_ids, np.int64) for b in index.buckets])
+
+
+@dataclasses.dataclass
+class DeltaLog:
+    """The live mutable state over a packed base epoch: an ordered op
+    list of ``("upsert", PackedIndex)`` delta buckets and
+    ``("delete", frozenset)`` tombstone sets.  Order matters — an
+    upsert after a delete resurrects the doc; a later upsert shadows
+    an earlier version — and :meth:`owner_map` replays it to find the
+    single live leaf per doc id."""
+
+    base: PackedIndex
+    ops: list = dataclasses.field(default_factory=list)
+    epoch: int = 0
+
+    @property
+    def deltas(self) -> list[PackedIndex]:
+        return [p for op, p in self.ops if op == "upsert"]
+
+    @property
+    def n_total(self) -> int:
+        n = self.base.n_docs
+        for op, p in self.ops:
+            if op == "upsert":
+                ids = _leaf_ids(p)
+                if len(ids):
+                    n = max(n, int(ids.max()) + 1)
+            elif p:
+                n = max(n, max(p) + 1)
+        return n
+
+    def upsert(self, d_embs, d_masks, doc_ids, *, granularity="pow2",
+               min_width: int = 8) -> PackedIndex:
+        """Absorb a batch of new/updated docs into a fresh delta bucket
+        set (in-memory; :func:`append_upsert` is the durable twin)."""
+        ids = np.asarray(doc_ids, np.int64)
+        n_total = max(self.n_total,
+                      int(ids.max()) + 1 if len(ids) else 0)
+        delta = _pack_with_ids(d_embs, d_masks, ids, n_total,
+                               compression=self.base.compression,
+                               granularity=granularity,
+                               min_width=min_width)
+        self.ops.append(("upsert", delta))
+        return delta
+
+    def delete(self, doc_ids) -> frozenset:
+        """Tombstone a set of doc ids (in-memory; :func:`append_delete`
+        is the durable twin)."""
+        tomb = frozenset(int(d) for d in doc_ids)
+        self.ops.append(("delete", tomb))
+        return tomb
+
+    def owner_map(self) -> np.ndarray:
+        """(n_total,) leaf index owning each doc id's live version — 0
+        for the base, ``i + 1`` for delta ``i``, ``-1`` for
+        tombstoned/absent — by replaying the op list in order."""
+        owner = np.full(self.n_total, -1, np.int32)
+        base_ids = _leaf_ids(self.base)
+        if len(base_ids):
+            owner[base_ids] = 0
+        leaf = 0
+        for op, p in self.ops:
+            if op == "upsert":
+                leaf += 1
+                ids = _leaf_ids(p)
+                if len(ids):
+                    owner[ids] = leaf
+            elif p:
+                owner[np.asarray(sorted(p), np.int64)] = -1
+        return owner
+
+    @property
+    def n_live(self) -> int:
+        return int((self.owner_map() >= 0).sum())
+
+    @property
+    def tombstones(self) -> frozenset:
+        """Doc ids dead at the end of the op list (a later upsert
+        resurrects; this is the *net* set, not the union)."""
+        owner = self.owner_map()
+        ever = np.zeros(self.n_total, bool)
+        base_ids = _leaf_ids(self.base)
+        if len(base_ids):
+            ever[base_ids] = True
+        for op, p in self.ops:
+            if op == "upsert":
+                ids = _leaf_ids(p)
+                if len(ids):
+                    ever[ids] = True
+        return frozenset(np.flatnonzero(ever & (owner < 0)).tolist())
+
+    def view(self) -> MutationView:
+        """The serving view ``topk_search(..., mutation=...)`` merges
+        as extra tournament leaves."""
+        owner = self.owner_map()
+        return MutationView(deltas=tuple(self.deltas),
+                            owner=jnp.asarray(owner),
+                            n_live=int((owner >= 0).sum()))
+
+
+def materialize(log: DeltaLog):
+    """Densify the log's live docs: ``(embs, masks, doc_ids)`` numpy
+    arrays with each doc's kept tokens front-packed, rows ascending by
+    global id.  This is both the compactor's input and the
+    differential oracle's (re-pack from scratch) — compacting and
+    re-packing the same materialization is what makes the two
+    bit-identical."""
+    leaves = [log.base] + log.deltas
+    owner = log.owner_map()
+    live = np.flatnonzero(owner >= 0)
+    dim = log.base.dim
+    m_out = max(max((ix.m for ix in leaves), default=1), 1)
+    embs = np.zeros((len(live), m_out, dim), np.float32)
+    masks = np.zeros((len(live), m_out), bool)
+    # id -> (bucket idx, row) per leaf, bucket arrays pulled to host
+    # once per bucket.
+    loc: list[dict] = []
+    for ix in leaves:
+        table = {}
+        for bi, b in enumerate(ix.buckets):
+            for ri, d in enumerate(np.asarray(b.doc_ids)):
+                table[int(d)] = (bi, ri)
+        loc.append(table)
+    cache: dict[tuple[int, int], tuple[np.ndarray, np.ndarray]] = {}
+    for row, d in enumerate(live):
+        leaf = int(owner[d])
+        bi, ri = loc[leaf][int(d)]
+        key = (leaf, bi)
+        if key not in cache:
+            b = leaves[leaf].buckets[bi]
+            cache[key] = (np.asarray(b.dense_embs(dim), np.float32),
+                          np.asarray(b.masks, bool))
+        be, bm = cache[key]
+        cap = be.shape[1]
+        embs[row, :cap] = be[ri]
+        masks[row, :cap] = bm[ri]
+    return embs, masks, live.astype(np.int64)
+
+
+def compact_index(log: DeltaLog, *, granularity="pow2",
+                  min_width: int = 8) -> PackedIndex:
+    """Fold deltas + tombstones into a fresh capacity-bucketed epoch:
+    live docs only (tombstoned and shadowed rows drop out entirely),
+    global doc ids preserved, epoch bumped.  Serving the result is
+    bit-identical to serving the delta log it came from (same
+    per-doc token multisets; MaxSim is layout-invariant)."""
+    embs, masks, ids = materialize(log)
+    return _pack_with_ids(
+        embs, masks, ids, log.n_total,
+        compression=log.base.compression, granularity=granularity,
+        min_width=min_width, tokens_total=int(masks.sum()),
+        epoch=log.epoch + 1)
+
+
+# ----------------------------------------------------------------------
+# Durable mutation ops.  Protocol per op: WAL intent (checksummed,
+# fsync'd) -> atomic artifact writes -> WAL commit.  index_io.recover
+# rolls an interrupted op forward iff every artifact write landed,
+# back otherwise.
+# ----------------------------------------------------------------------
+
+
+def _next_seq(records) -> int:
+    return max((int(r["seq"]) for r in records), default=-1) + 1
+
+
+def _next_delta(records) -> int:
+    return max((int(r["delta"]) for r in records
+                if r.get("op") == "upsert"), default=-1) + 1
+
+
+def append_upsert(path: str, d_embs, d_masks, doc_ids, *,
+                  granularity="pow2", min_width: int = 8,
+                  crash=None) -> int:
+    """Durably absorb an upsert batch into a new delta bucket set under
+    the artifact at ``path``.  Returns the delta id."""
+    manifest = index_io._read_manifest(path, index_io.MANIFEST)
+    records = index_io.wal_read(path)
+    seq, delta_id = _next_seq(records), _next_delta(records)
+    ids = np.asarray(doc_ids, np.int64)
+    n_total = max(int(manifest["n_docs"]),
+                  int(ids.max()) + 1 if len(ids) else 0)
+    index_io.wal_append(path, {
+        "op": "upsert", "seq": seq, "delta": delta_id,
+        "doc_ids": [int(d) for d in ids]})
+    _crash(crash, "upsert-intent")
+    delta = _pack_with_ids(d_embs, d_masks, ids, n_total,
+                           compression=manifest["compression"],
+                           granularity=granularity, min_width=min_width)
+    checkpoint.save(index_io._delta_dir(path, delta_id), 0,
+                    index_io._body_tree(delta), keep=1)
+    _crash(crash, "upsert-body")
+    sub = index_io._meta(delta) | {
+        "kind": "packed_index_delta",
+        "format": index_io.FORMAT,
+        "delta": delta_id,
+        "buckets": [{"cap": b.cap, "n_docs": b.n_docs}
+                    for b in delta.buckets],
+    }
+    checkpoint.atomic_json_dump(
+        os.path.join(path, index_io._delta_manifest(delta_id)), sub)
+    _crash(crash, "upsert-manifest")
+    index_io.wal_append(path, {"op": "commit", "seq": seq})
+    _crash(crash, "upsert-commit")
+    return delta_id
+
+
+def append_delete(path: str, doc_ids, *, crash=None) -> None:
+    """Durably tombstone a batch of doc ids under the artifact at
+    ``path``."""
+    records = index_io.wal_read(path)
+    seq = _next_seq(records)
+    ids = sorted(int(d) for d in doc_ids)
+    index_io.wal_append(path, {"op": "delete", "seq": seq,
+                               "doc_ids": ids})
+    _crash(crash, "delete-intent")
+    merged = sorted(index_io.load_tombstones(path) | set(ids))
+    checkpoint.atomic_json_dump(
+        os.path.join(path, index_io.TOMBSTONES),
+        {"kind": "tombstones", "format": 1, "doc_ids": merged})
+    _crash(crash, "delete-tombstones")
+    index_io.wal_append(path, {"op": "commit", "seq": seq})
+    _crash(crash, "delete-commit")
+
+
+def load_state(path: str) -> DeltaLog:
+    """Reconstruct the live :class:`DeltaLog` from the artifact at
+    ``path``: the current epoch's base index plus every committed,
+    un-compacted mutation op in WAL order.  Uncommitted (crashed)
+    intents are skipped — run ``index_io.recover`` first to resolve
+    them and sweep their partial files."""
+    base = index_io.load_index(path)
+    records = index_io.wal_read(path)
+    committed = {r["seq"] for r in records if r["op"] == "commit"}
+    last_compact = max((r["seq"] for r in records
+                        if r["op"] == "compact"
+                        and r["seq"] in committed), default=-1)
+    ops = []
+    for rec in records:
+        if rec["op"] not in ("upsert", "delete"):
+            continue
+        if rec["seq"] not in committed or rec["seq"] <= last_compact:
+            continue
+        if rec["op"] == "upsert":
+            d = int(rec["delta"])
+            sub = index_io._read_manifest(path,
+                                          index_io._delta_manifest(d))
+            buckets = (index_io._restore_buckets(
+                index_io._delta_dir(path, d), sub)
+                if sub["buckets"] else [])
+            ops.append(("upsert", index_io._index_of(sub, buckets)))
+        else:
+            ops.append(("delete",
+                        frozenset(int(x) for x in rec["doc_ids"])))
+    return DeltaLog(base=base, ops=ops, epoch=base.epoch)
+
+
+class Compactor:
+    """Background compaction over an artifact directory: fold the
+    committed delta log into a fresh packed epoch written BESIDE the
+    live one, then commit with one atomic root-manifest swap.  Queries
+    served from the old epoch stay valid throughout; a
+    ``RetrievalServer`` picks up the new epoch via ``swap_index`` (the
+    epoch keys its closure cache, so no stale program survives the
+    swap).  A placement-split artifact is re-split group-by-group under
+    ``PlacementPlan.rebalance_repack`` — the compacted bucket set is
+    new, so placement re-derives from the new bucket weights."""
+
+    def __init__(self, path: str, *, granularity="pow2",
+                 min_width: int = 8, crash=None):
+        self.path = path
+        self.granularity = granularity
+        self.min_width = min_width
+        self.crash = crash
+
+    def run(self) -> PackedIndex | None:
+        """One compaction cycle.  Returns the new epoch's index, or
+        ``None`` when there was nothing to compact."""
+        path = self.path
+        log = load_state(path)
+        if not log.ops:
+            return None
+        records = index_io.wal_read(path)
+        seq = _next_seq(records)
+        new_epoch = log.epoch + 1
+        _, live_deltas, _ = index_io._wal_state(records)
+        consumed = sorted(int(d) for d in live_deltas)
+        rec = {"op": "compact", "seq": seq, "epoch": new_epoch,
+               "deltas": consumed}
+        index_io.wal_append(path, rec)
+        _crash(self.crash, "compact-intent")
+        new_index = compact_index(log, granularity=self.granularity,
+                                  min_width=self.min_width)
+        placement = index_io.load_placement(path)
+        if placement is not None:
+            placement = placement.rebalance_repack(
+                [b.nbytes() for b in new_index.buckets])
+        edirname = index_io._epoch_dirname(new_epoch)
+        index_io.save_index(os.path.join(path, edirname), new_index,
+                            placement=placement)
+        _crash(self.crash, "compact-body")
+        with open(os.path.join(path, edirname, index_io.MANIFEST)) as f:
+            inner = json.load(f)
+        checkpoint.atomic_json_dump(
+            os.path.join(path, index_io.MANIFEST),
+            inner | {"epoch_dir": edirname, "format": index_io.FORMAT})
+        _crash(self.crash, "compact-swap")
+        index_io.finish_compact(path, rec)
+        _crash(self.crash, "compact-clean")
+        return new_index

@@ -320,15 +320,32 @@ def _stream_chunk_topk(n: int, chunk: int, k: int, score_slab,
 
 def _chunk_candidates(embs, masks, doc_ids, q_embs, q_masks, k: int, *,
                       backend, block_docs, block_q, chunk_docs,
-                      pad_from: int | None = None):
+                      pad_from: int | None = None,
+                      owner=None, leaf: int = 0):
     """One doc array's exact-MaxSim candidates via the shared streaming
-    reduce loop, scoring each slab with the per-backend scorers."""
-    return _stream_chunk_topk(
-        masks.shape[0], chunk_docs, k,
-        lambda a, b: _score_block(embs[a:b], masks[a:b], q_embs, q_masks,
-                                  backend=backend, block_docs=block_docs,
-                                  block_q=block_q),
-        doc_ids=doc_ids, pad_from=pad_from)
+    reduce loop, scoring each slab with the per-backend scorers.
+
+    ``owner``/``leaf`` is the mutation-serving stale mask
+    (:class:`MutationView`): slab scores of docs this leaf does not own
+    — a base copy shadowed by an upsert, a tombstoned delete — are
+    forced to -inf BEFORE the slab's top-k reduction, so a stale copy
+    can never crowd a live doc out of its bucket's candidate slots.
+    The clip guards sentinel ids (< 0, forced to -inf by the pad
+    audits regardless) against wraparound."""
+
+    def slab(a, b):
+        s = _score_block(embs[a:b], masks[a:b], q_embs, q_masks,
+                         backend=backend, block_docs=block_docs,
+                         block_q=block_q)
+        if owner is not None:
+            ids = (jnp.arange(a, b, dtype=jnp.int32) if doc_ids is None
+                   else doc_ids[a:b])
+            own = owner[jnp.clip(ids, 0, owner.shape[0] - 1)]
+            s = jnp.where((own != leaf)[None, :], -jnp.inf, s)
+        return s
+
+    return _stream_chunk_topk(masks.shape[0], chunk_docs, k, slab,
+                              doc_ids=doc_ids, pad_from=pad_from)
 
 
 def _view_shapes(index: TokenIndex | PackedIndex):
@@ -383,20 +400,62 @@ def _real_docs(index: TokenIndex | PackedIndex) -> int:
     return index.d_masks.shape[0]
 
 
-def _topk_search_local(index, q_embs, q_masks, k, *, backend, plan):
-    views = _index_views(index)
+@dataclasses.dataclass(frozen=True)
+class MutationView:
+    """The serving view of a live delta log (``serve.mutation``): the
+    extra leaves :func:`topk_search`'s sort-merge tournament scores
+    beside the packed base index.
+
+    ``deltas`` are small :class:`PackedIndex`\\ es (one per absorbed
+    upsert batch, packed by the same ``bucket_plan`` machinery and
+    scored by the unmodified ``colbert_maxsim`` kernels).  ``owner``
+    maps every corpus-global doc id to the single *leaf* holding its
+    current version — 0 for the base index, ``i + 1`` for delta ``i``,
+    ``-1`` for a tombstoned/absent doc.  Each leaf's slab scores are
+    masked to ``-inf`` wherever the owner disagrees (a stale base copy
+    shadowed by an upsert, a tombstoned delete) *before* the per-bucket
+    top-k reduction, so exactly one finite
+    copy of every live doc enters the root merge: results are
+    bit-identical to re-packing the mutated corpus from scratch (the
+    mutation differential oracle, tests/test_mutation.py).
+    ``n_live`` (live docs) replaces ``_real_docs`` as the output-width
+    clamp."""
+
+    deltas: tuple
+    owner: jnp.ndarray            # (n_total,) int32; -1 = dead
+    n_live: int
+
+
+def _topk_search_local(index, q_embs, q_masks, k, *, backend, plan,
+                       mutation=None, delta_plans=()):
+    leaves = [(index, plan, 0)]
+    if mutation is not None:
+        leaves += [(d, dp, li + 1) for li, (d, dp)
+                   in enumerate(zip(mutation.deltas, delta_plans))]
     vals, ids = [], []
-    for (e, mk, di), (bd, bq, cd) in zip(views, plan):
-        v, i = _chunk_candidates(e, mk, di, q_embs, q_masks, k,
-                                 backend=backend, block_docs=bd,
-                                 block_q=bq, chunk_docs=cd)
-        vals.append(v)
-        ids.append(i)
+    for leaf_index, leaf_plan, leaf in leaves:
+        for (e, mk, di), (bd, bq, cd) in zip(_index_views(leaf_index),
+                                             leaf_plan):
+            # The owner mask applies INSIDE the slab scorer, before the
+            # per-bucket top-k reduction: a stale copy masked only
+            # after the reduction would still crowd a live doc out of
+            # its bucket's k candidate slots.
+            v, i = _chunk_candidates(e, mk, di, q_embs, q_masks, k,
+                                     backend=backend, block_docs=bd,
+                                     block_q=bq, chunk_docs=cd,
+                                     owner=(None if mutation is None
+                                            else mutation.owner),
+                                     leaf=leaf)
+            vals.append(v)
+            ids.append(i)
     vals = jnp.concatenate(vals, axis=1)
     ids = jnp.concatenate(ids, axis=1)
     # Zero-doc buckets contribute (-inf, -1) sentinel columns; the cap
-    # at the view's real doc count keeps them out of the output.
-    return _merge_topk(vals, ids, min(k, _real_docs(index), vals.shape[1]))
+    # at the view's real doc count (live docs under mutation — stale
+    # and tombstoned candidates sit at -inf) keeps them out of the
+    # output.
+    real = _real_docs(index) if mutation is None else mutation.n_live
+    return _merge_topk(vals, ids, min(k, real, vals.shape[1]))
 
 
 def _topk_search_sharded(index, q_embs, q_masks, k, *, backend, plan,
@@ -830,7 +889,8 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
                 backend: str | None = None, block_docs: int | None = None,
                 block_q: int | None = None, chunk_docs: int | None = None,
                 placement: PlacementPlan | None = None,
-                monitor=None, faults=None):
+                monitor=None, faults=None,
+                mutation: MutationView | None = None):
     """Streaming exact top-k MaxSim: ``(top_idx, top_scores)``, each
     (n_q, k), identical — ids and fp scores — to ``lax.top_k`` over
     :func:`maxsim_scores`, without ever holding an (n_q, n_docs) score
@@ -860,16 +920,36 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     ``serve.health.FaultPlan``) injects failures for testing.  All
     three are grid-only and ignored on the flat/local paths, which
     cannot lose a host group.
+
+    ``mutation`` (a :class:`MutationView` from ``serve.mutation``)
+    scores the live delta buckets as extra tournament leaves and masks
+    tombstoned/shadowed doc ids to ``-inf`` before the root merge —
+    bit-identical to re-packing the mutated corpus from scratch.
+    Mutation serving is single-process by design (deltas are absorbed
+    and compacted locally, then the compacted epoch redeploys to the
+    grid); combining it with a candidates mesh or grid placement
+    raises.
     """
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
     n_q, l = q_embs.shape[:2]
     dim = q_embs.shape[-1]
     n_docs = (index.n_docs if isinstance(index, PackedIndex)
               else index.d_masks.shape[0])
-    if n_docs == 0:
+    if mutation is not None and mutation.n_live == 0:
+        return (jnp.zeros((n_q, 0), jnp.int32),
+                jnp.zeros((n_q, 0), jnp.float32))
+    if n_docs == 0 and mutation is None:
         return (jnp.zeros((n_q, 0), jnp.int32),
                 jnp.zeros((n_q, 0), jnp.float32))
     gmesh, n_groups, _, rules_placement = grid_axes_for()
+    mesh, axes, n_shards = mesh_axes_for("candidates")
+    if mutation is not None and (gmesh is not None
+                                 or (mesh is not None and n_shards > 1)):
+        raise ValueError(
+            "mutation serving (delta buckets + tombstones) is "
+            "single-process: compact the delta log "
+            "(serve.mutation.Compactor) before serving under a "
+            "candidates mesh or grid placement")
     if gmesh is not None:
         return _topk_search_grid(
             index, q_embs, q_masks, k, backend=backend, mesh=gmesh,
@@ -878,7 +958,6 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
             else rules_placement,
             block_docs=block_docs, block_q=block_q,
             chunk_docs=chunk_docs, monitor=monitor, faults=faults)
-    mesh, axes, n_shards = mesh_axes_for("candidates")
     plan = _streaming_plan(index, n_q, l, dim, k, n_shards=n_shards,
                            block_docs=block_docs, block_q=block_q,
                            chunk_docs=chunk_docs)
@@ -886,8 +965,16 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
         return _topk_search_sharded(index, q_embs, q_masks, k,
                                     backend=backend, plan=plan, mesh=mesh,
                                     axes=axes, n_shards=n_shards)
+    delta_plans = ()
+    if mutation is not None:
+        delta_plans = tuple(
+            _streaming_plan(d, n_q, l, dim, k, n_shards=1,
+                            block_docs=block_docs, block_q=block_q,
+                            chunk_docs=chunk_docs)
+            for d in mutation.deltas)
     return _topk_search_local(index, q_embs, q_masks, k, backend=backend,
-                              plan=plan)
+                              plan=plan, mutation=mutation,
+                              delta_plans=delta_plans)
 
 
 def _streaming_first_stage(index, q_embs, n_first: int):
@@ -949,7 +1036,8 @@ def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
            block_q: int | None = None, chunk_docs: int | None = None,
            return_full: bool = True,
            placement: PlacementPlan | None = None,
-           monitor=None, faults=None):
+           monitor=None, faults=None,
+           mutation: MutationView | None = None):
     """Two-stage (or e2e) retrieval.
 
     ``return_full=True`` (the metrics/benchmark contract) returns
@@ -968,13 +1056,22 @@ def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
     n_docs = (index.n_docs if isinstance(index, PackedIndex)
               else index.d_embs.shape[0])
+    if mutation is not None and not (end_to_end or n_first >= n_docs):
+        raise ValueError(
+            "mutation serving routes through the streaming e2e path "
+            "only (the two-stage pooled first stage would consult "
+            "stale base vectors); pass end_to_end=True or "
+            "n_first >= n_docs")
+    if mutation is not None and return_full:
+        raise ValueError("mutation serving is streaming-only; "
+                         "return_full=False required")
     if end_to_end or n_first >= n_docs:
         if not return_full:
             return topk_search(index, q_embs, k=k, q_masks=q_masks,
                                backend=backend, block_docs=block_docs,
                                block_q=block_q, chunk_docs=chunk_docs,
                                placement=placement, monitor=monitor,
-                               faults=faults)
+                               faults=faults, mutation=mutation)
         scores = maxsim_scores(index, q_embs, q_masks, backend=backend,
                                block_docs=block_docs, block_q=block_q)
         scores = constrain(scores, "batch", "candidates")
@@ -1075,10 +1172,39 @@ class RetrievalServer:
         self._search = collections.OrderedDict()  # (n_q, l) -> jitted closure
         self._placement = None          # rebalance override, grid only
         self._rebalanced_for = frozenset()
+        self._mutation = None           # live MutationView, local serving
+        # Epoch/generation discipline: a compaction swap or delta-log
+        # update must never be answered by a closure compiled over the
+        # previous index arrays — both counters join the closure cache
+        # key, and a swap drops the cache outright.
+        self._generation = 0
+        self._mutation_gen = 0
 
     @staticmethod
     def _run(index, q, **kw):
         return search(index, q, return_full=False, **kw)
+
+    def swap_index(self, index, *, mutation=None):
+        """Switch serving to a new index epoch (the compaction swap).
+        Drops every cached closure — programs compiled over the old
+        epoch's arrays can never answer a post-swap query, even if the
+        new index coincidentally shares shapes (the generation counter
+        keys the cache too, so a stale entry cannot collide)."""
+        self.index = index
+        self._mutation = mutation
+        self._generation += 1
+        self._mutation_gen += 1
+        self._search.clear()
+
+    def apply_mutation(self, mutation: MutationView | None):
+        """Serve the given live delta-log view (upserts + tombstones)
+        beside the current base index.  Each distinct view compiles its
+        own closures (delta shapes differ per absorbed batch); the
+        mutation generation joins the cache key and stale closures are
+        dropped."""
+        self._mutation = mutation
+        self._mutation_gen += 1
+        self._search.clear()
 
     def _warm_index(self):
         """Materialize the packed index's derived serving views (pooled
@@ -1099,7 +1225,7 @@ class RetrievalServer:
         dim = q_embs.shape[-1]
         n_docs = (self.index.n_docs if isinstance(self.index, PackedIndex)
                   else self.index.d_masks.shape[0])
-        if self.n_first >= n_docs:
+        if self.n_first >= n_docs or self._mutation is not None:
             # e2e route only: topk_search is the sole consumer of the
             # streaming keys, and resolving them (chunk_docs per
             # shard-local bucket shape — needed on BOTH backends, the
@@ -1129,6 +1255,16 @@ class RetrievalServer:
                                 block_docs=self._block_docs,
                                 block_q=self._block_q,
                                 chunk_docs=self._chunk_docs)
+                if self._mutation is not None:
+                    # Delta leaves resolve their own tuner keys (one
+                    # per delta bucket shape, unsharded) — warmed here
+                    # so the in-trace resolutions hit the cache.
+                    for d in self._mutation.deltas:
+                        _streaming_plan(d, n_q, l, dim, self.k,
+                                        n_shards=1,
+                                        block_docs=self._block_docs,
+                                        block_q=self._block_q,
+                                        chunk_docs=self._chunk_docs)
         if self.backend != backend_lib.FUSED:
             return
         if self._block_docs is not None and self._block_q is not None:
@@ -1159,8 +1295,14 @@ class RetrievalServer:
         # eager and reads liveness at call time, so demotions never
         # leave a stale group program serving (tested: a group failing
         # between warmup and query).
+        # The mutation epoch and the server's generation/mutation
+        # counters join the key: a compaction swap (new index object,
+        # possibly identical shapes) or a delta-log update must miss
+        # the cache and re-trace over the new arrays.
         key = q_embs.shape[:2] + (mesh, axes, gmesh, n_groups, placement,
-                                  self._placement)
+                                  self._placement,
+                                  getattr(self.index, "epoch", 0),
+                                  self._generation, self._mutation_gen)
         fn = self._search.get(key)
         if fn is None:
             self._warm_index()
@@ -1173,7 +1315,8 @@ class RetrievalServer:
                 backend=self.backend, block_docs=self._block_docs,
                 block_q=self._block_q, chunk_docs=self._chunk_docs,
                 placement=self._placement, monitor=self.monitor,
-                faults=self.faults)
+                faults=self.faults, mutation=self._mutation,
+                end_to_end=self._mutation is not None)
             if gmesh is None or self.n_first < n_docs:
                 # Grid-placed e2e serving stays an eager composition of
                 # per-group compiled programs (the cross-group candidate

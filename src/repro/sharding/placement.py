@@ -290,6 +290,19 @@ class PlacementPlan:
                              groups=tuple(map(tuple, chains)),
                              replicas=new_r)
 
+    def rebalance_repack(self, weights) -> "PlacementPlan":
+        """Re-placement after a *compaction* re-pack
+        (``serve.mutation.Compactor``): the bucket set itself changed
+        (deltas folded in, tombstoned docs dropped, widths re-planned),
+        so unlike :meth:`rebalance` there is no surviving assignment to
+        preserve — the new buckets place greedy-LPT from scratch over
+        the same groups at the same replica degree.  Deterministic, so
+        every host derives the identical next-epoch plan from the
+        manifest."""
+        return PlacementPlan.balanced(
+            weights, self.n_groups,
+            replicas=min(self.replicas, self.n_groups))
+
     # -- manifest round-trip ---------------------------------------------
 
     def to_manifest(self) -> dict:

@@ -83,11 +83,42 @@ def _tree_paths(tree):
     return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in leaves_with_paths]
 
 
+# Steps with a writer currently inside ``save`` (committed-but-not-
+# returned included), keyed by absolute root.  The keep policy must
+# never reap a step whose writer is still in flight: a slow async
+# writer that just renamed its step could otherwise lose it to a
+# concurrent (newer) save's policy pass before its own call returns —
+# the caller then holds a "saved" step that no longer exists.
+_inflight_lock = threading.Lock()
+_inflight: dict[tuple[str, int], int] = {}
+
+
+def _inflight_steps(root: str) -> set[int]:
+    aroot = os.path.abspath(root)
+    with _inflight_lock:
+        return {s for (r, s), n in _inflight.items() if r == aroot and n > 0}
+
+
 def save(root: str, step: int, tree, *, keep: int = 3,
          keep_period: int = 0, compression: str | None = None) -> str:
     """Synchronous atomic checkpoint save. Returns the final directory."""
     compression = _resolve_compression(compression)
     os.makedirs(root, exist_ok=True)
+    inflight_key = (os.path.abspath(root), step)
+    with _inflight_lock:
+        _inflight[inflight_key] = _inflight.get(inflight_key, 0) + 1
+    try:
+        return _save_locked(root, step, tree, keep=keep,
+                            keep_period=keep_period, compression=compression)
+    finally:
+        with _inflight_lock:
+            _inflight[inflight_key] -= 1
+            if _inflight[inflight_key] <= 0:
+                del _inflight[inflight_key]
+
+
+def _save_locked(root: str, step: int, tree, *, keep: int,
+                 keep_period: int, compression: str) -> str:
     # tmp name unique per CALL (pid + counter): a sync save may race a
     # pending async save of the same step; both must stage independently.
     tmp = os.path.join(root,
@@ -227,6 +258,11 @@ def _apply_keep_policy(root: str, keep: int, keep_period: int):
     protected = set(steps[-keep:])
     if keep_period:
         protected |= {s for s in steps if s % keep_period == 0}
+    # Steps whose writer is still inside ``save`` are untouchable even
+    # when outside the keep window — the next policy pass (with every
+    # writer returned) reaps them.  ignore_errors also covers two
+    # concurrent policy passes racing to delete the same step.
+    protected |= _inflight_steps(root)
     for s in steps:
         if s not in protected:
             shutil.rmtree(os.path.join(root, f"step_{s:09d}"),

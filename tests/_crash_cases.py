@@ -1,0 +1,132 @@
+"""Crash-injection child bodies for the mutation durability sweep.
+
+Each ``run_*`` body performs ONE durable mutation op against the
+artifact directory in ``sys.argv``-style parameters, threading a
+``serve.health.CrashPlan`` through it so the process SIGKILLs itself
+the moment the named durability point is passed — a real ``kill -9``,
+not an exception: no ``finally``, no ``atexit``, no buffered-write
+flush runs, exactly what a power loss leaves behind.  The parent
+(tests/test_mutation.py) asserts the child died by SIGKILL, runs
+``index_io.recover``, and checks the artifact landed on a bitwise
+pre- or post-mutation epoch with zero orphaned files.
+
+``main()`` is the scripts/smoke.sh entry: the full kill-tested
+lifecycle — seed, mutate, compact killed at a seed-randomized crash
+point, recover, re-serve — asserting post-recovery parity, in one
+self-contained subprocess tree.  Shared between pytest and smoke so CI
+exercises the recovery path on every push.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+N_DOCS, M, DIM = 24, 12, 16
+UPSERT_IDS = (3, 7, 11, 24, 25, 26)
+DELETE_IDS = (5, 9, 25)
+
+
+def _corpus(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    embs = rng.normal(size=(n, M, DIM)).astype(np.float32)
+    masks = rng.random((n, M)) < 0.8
+    masks[seed % n] = False  # an empty-after-prune doc rides along
+    return embs, masks
+
+
+def _plan(point):
+    from repro.serve.health import CrashPlan
+    return None if point is None else CrashPlan(kill_at=point)
+
+
+def seed_artifact(path: str, compression: str = "none") -> None:
+    from repro.serve import index_io
+    from repro.serve.index import PackedIndex
+    embs, masks = _corpus(0, N_DOCS)
+    index_io.save_index(path, PackedIndex.pack(embs, masks,
+                                               compression=compression))
+
+
+def run_upsert(path: str, point: str | None = None) -> None:
+    from repro.serve import mutation
+    embs, masks = _corpus(1, len(UPSERT_IDS))
+    mutation.append_upsert(path, embs, masks, list(UPSERT_IDS),
+                           crash=_plan(point))
+    print("MUTATION_OK")
+
+
+def run_delete(path: str, point: str | None = None) -> None:
+    from repro.serve import mutation
+    mutation.append_delete(path, DELETE_IDS, crash=_plan(point))
+    print("MUTATION_OK")
+
+
+def run_compact(path: str, point: str | None = None) -> None:
+    from repro.serve import mutation
+    mutation.Compactor(path, crash=_plan(point)).run()
+    print("MUTATION_OK")
+
+
+def topk_result(path: str, k: int = 10):
+    """(ids, vals) numpy top-k over the artifact's live state — base
+    epoch + committed delta log — for bitwise recovery comparisons."""
+    from repro.serve import mutation, retrieval
+    log = mutation.load_state(path)
+    rng = np.random.default_rng(99)
+    q = rng.normal(size=(4, 6, DIM)).astype(np.float32)
+    view = log.view() if log.ops else None
+    ids, vals = retrieval.topk_search(log.base, q, k=k, mutation=view)
+    return np.asarray(ids), np.asarray(vals)
+
+
+def main() -> None:
+    """smoke.sh leg: kill -9 a compaction at a seed-randomized crash
+    point, recover, and prove the re-served artifact is bit-identical
+    to the uninterrupted lifecycle."""
+    import random
+    import signal
+    import tempfile
+
+    from repro.serve import index_io
+
+    seed = int(os.environ.get("SMOKE_SEED", "0") or 0)
+    points = ("compact-intent", "compact-body", "compact-swap",
+              "compact-clean")
+    point = random.Random(seed).choice(points)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "artifact")
+        seed_artifact(path)
+        run_upsert(path)
+        run_delete(path)
+        want_ids, want_vals = topk_result(path)
+
+        env = dict(os.environ)
+        env.setdefault("PYTHONPATH", "")
+        here = os.path.dirname(os.path.abspath(__file__))
+        src = os.path.join(here, "..", "src")
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (src, here, env["PYTHONPATH"]) if p)
+        code = (f"import _crash_cases; "
+                f"_crash_cases.run_compact({path!r}, {point!r})")
+        child = subprocess.run([sys.executable, "-c", code], env=env,
+                               capture_output=True, text=True, timeout=540)
+        assert child.returncode == -signal.SIGKILL, (
+            f"compaction child survived {point}: rc={child.returncode} "
+            f"stderr:\n{child.stderr[-2000:]}")
+
+        report = index_io.recover(path)
+        got_ids, got_vals = topk_result(path)
+        assert np.array_equal(want_ids, got_ids), (point, report)
+        assert np.array_equal(want_vals, got_vals), (point, report)
+        assert index_io.list_orphans(path) == [], (
+            point, index_io.list_orphans(path))
+        print(f"CRASH_RECOVERY_OK point={point} "
+              f"epoch={index_io.load_epoch(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Async checkpoint writers vs the keep policy.
+
+The race (PR 7): ``save_async`` renames its step in, then — before the
+writer thread returns — a concurrent newer ``save``'s keep-policy pass
+sees the step outside the keep window and reaps it.  The caller then
+holds a "saved" step that no longer exists on disk.  The fix is the
+module-level in-flight registry: every step with a writer currently
+inside ``save`` is protected from the keep policy until that writer
+returns; the next pass (all writers returned) reaps normally.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.train import checkpoint
+
+
+def _tree(step: int):
+    return {"w": np.full((4, 3), float(step), np.float32),
+            "b": np.arange(3, dtype=np.int32) + step}
+
+
+class TestInflightRegistry:
+    def test_registry_empty_after_save(self, tmp_path):
+        root = str(tmp_path)
+        checkpoint.save(root, 1, _tree(1), keep=2)
+        assert checkpoint._inflight_steps(root) == set()
+
+    def test_keep_policy_spares_inflight_steps(self, tmp_path):
+        """White-box: a registered in-flight step survives a policy
+        pass that would otherwise reap it; the next pass (writer
+        returned) reaps it."""
+        root = str(tmp_path)
+        for s in (1, 2, 3):
+            checkpoint.save(root, s, _tree(s), keep=0)  # keep=0: no reap
+        key = (os.path.abspath(root), 1)
+        with checkpoint._inflight_lock:
+            checkpoint._inflight[key] = 1
+        try:
+            checkpoint._apply_keep_policy(root, keep=1, keep_period=0)
+            assert checkpoint.list_steps(root) == [1, 3]  # 2 reaped
+        finally:
+            with checkpoint._inflight_lock:
+                del checkpoint._inflight[key]
+        checkpoint._apply_keep_policy(root, keep=1, keep_period=0)
+        assert checkpoint.list_steps(root) == [3]
+
+    def test_slow_async_writer_survives_concurrent_saves(
+            self, tmp_path, monkeypatch):
+        """The real interleaving, forced with a gate: the async writer
+        of step 1 renames its step in and then stalls inside ``save``;
+        newer synchronous saves (keep=1) run their keep policy while it
+        is stalled and must NOT delete step 1.  Once the writer
+        returns, the next save's policy reaps it."""
+        root = str(tmp_path)
+        renamed = threading.Event()
+        release = threading.Event()
+        orig = checkpoint._apply_keep_policy
+
+        def gated(r, keep, keep_period):
+            # only the async (non-main) writer stalls; the concurrent
+            # synchronous saves run the real policy immediately
+            if threading.current_thread() is not threading.main_thread():
+                renamed.set()
+                assert release.wait(timeout=30), "gate never released"
+            return orig(r, keep, keep_period)
+
+        monkeypatch.setattr(checkpoint, "_apply_keep_policy", gated)
+        t = checkpoint.save_async(root, 1, _tree(1), keep=1)
+        assert renamed.wait(timeout=30), "async writer never renamed"
+        # step 1 is on disk, outside keep=1's window, writer in flight
+        assert 1 in checkpoint.list_steps(root)
+        checkpoint.save(root, 2, _tree(2), keep=1)
+        checkpoint.save(root, 3, _tree(3), keep=1)
+        assert 1 in checkpoint.list_steps(root), (
+            "keep policy reaped a step whose writer is still in flight")
+        release.set()
+        t.join(timeout=30)
+        checkpoint.wait_pending()
+        assert checkpoint._inflight_steps(root) == set()
+        checkpoint.save(root, 4, _tree(4), keep=1)
+        assert checkpoint.list_steps(root) == [4]
+
+    def test_rapid_async_saves_leave_consistent_tail(self, tmp_path):
+        """Stress the writer/policy interleaving: many overlapping
+        async saves under a tight keep window must end with an empty
+        in-flight registry and a restorable newest step, and every
+        surviving step must be fully valid (no torn victim of a
+        racing delete)."""
+        root = str(tmp_path)
+        for s in range(12):
+            checkpoint.save_async(root, s, _tree(s), keep=2)
+        checkpoint.wait_pending()
+        assert checkpoint._inflight_steps(root) == set()
+        steps = checkpoint.list_steps(root)
+        assert steps and steps[-1] == 11
+        for s in steps:
+            got_step, tree = checkpoint._verify_and_load(
+                os.path.join(root, f"step_{s:09d}"), _tree(0))
+            assert got_step == s
+            np.testing.assert_array_equal(tree["w"], _tree(s)["w"])
+        step, tree = checkpoint.restore_latest(root, _tree(0))
+        assert step == 11
+        np.testing.assert_array_equal(tree["b"], _tree(11)["b"])
+
+    def test_async_same_step_rename_race_tolerated(self, tmp_path):
+        """A sync save racing a pending async save of the SAME step:
+        both stage independently, one wins the rename, neither
+        errors, and the step restores valid."""
+        root = str(tmp_path)
+        for _ in range(4):
+            checkpoint.save_async(root, 7, _tree(7), keep=3)
+        checkpoint.save(root, 7, _tree(7), keep=3)
+        checkpoint.wait_pending()
+        assert checkpoint.list_steps(root) == [7]
+        step, tree = checkpoint.restore_latest(root, _tree(0))
+        assert step == 7
+        np.testing.assert_array_equal(tree["w"], _tree(7)["w"])
+        # no stage dirs left behind
+        leftovers = [n for n in os.listdir(root) if n.startswith("tmp.")]
+        assert leftovers == []

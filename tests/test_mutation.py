@@ -1,0 +1,454 @@
+"""Crash-consistent live index mutation (DESIGN_BACKENDS.md §Mutation
+& durability).
+
+Three layers of lockdown:
+
+  * **Differential oracles** (in-process): serving a ``DeltaLog`` view
+    — base epoch + delta buckets + tombstones, merged as extra
+    tournament leaves with stale ids masked to -inf — is **bitwise**
+    identical (ids and fp scores, every k) to re-packing the mutated
+    corpus from scratch; compaction output is bitwise identical to the
+    offline re-pack of the same materialized state, on both
+    compressions.
+  * **Durability protocol** (tmp dirs): WAL intent/commit round-trips,
+    the valid-prefix read of a torn WAL tail, uncommitted intents
+    invisible to ``load_state``, recover() idempotence, and the torn-
+    artifact refusal naming the bad host group + pointing at recover().
+  * **Kill-tested crash sweep** (real ``kill -9`` subprocesses): every
+    named durability point in ``serve.mutation.CRASH_POINTS`` gets a
+    child process SIGKILLed exactly there (serve.health.CrashPlan);
+    recovery must land the artifact on the bitwise pre- or
+    post-mutation epoch — the expected side per point is asserted, not
+    just membership — with zero orphaned files, twice (idempotent).
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import _crash_cases
+from repro.serve import index_io, mutation, retrieval
+from repro.serve.health import CrashPlan
+from repro.serve.index import PackedIndex
+from repro.serve.retrieval import RetrievalServer, topk_search
+from repro.sharding import PlacementPlan
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _corpus(seed=0, n=24, m=12, dim=16, p=0.8):
+    rng = np.random.default_rng(seed)
+    embs = rng.normal(size=(n, m, dim)).astype(np.float32)
+    masks = rng.random((n, m)) < p
+    if n > 2:
+        masks[2] = False  # empty-after-prune doc: sentinel path
+    return embs, masks
+
+
+def _queries(seed=99, n_q=4, l=6, dim=16):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n_q, l, dim)).astype(np.float32)
+
+
+def _oracle_topk(log, q, k):
+    """Re-pack the mutated corpus from scratch — the differential
+    oracle the delta-serving path must match bit for bit."""
+    embs, masks, ids = mutation.materialize(log)
+    repacked = mutation._pack_with_ids(
+        embs, masks, ids, log.n_total,
+        compression="none", granularity="pow2", min_width=8)
+    return topk_search(repacked, q, k=k)
+
+
+def _view_topk(log, q, k):
+    return topk_search(log.base, q, k=k, mutation=log.view())
+
+
+def _assert_bitwise(a, b, msg=""):
+    ai, av = a
+    bi, bv = b
+    assert jnp.array_equal(ai, bi), f"{msg}: ids diverge"
+    assert jnp.array_equal(av, bv), f"{msg}: scores diverge"
+
+
+class TestDeltaOracle:
+    """Delta-bucket serving vs the repack-from-scratch oracle."""
+
+    def test_upsert_only_matches_repack_every_k(self):
+        embs, masks = _corpus()
+        log = mutation.DeltaLog(base=PackedIndex.pack(embs, masks))
+        ue, um = _corpus(seed=1, n=6)
+        log.upsert(ue, um, [3, 7, 11, 24, 25, 26])  # updates + appends
+        q = _queries()
+        for k in (1, 5, 10, log.n_live, log.n_live + 7):
+            _assert_bitwise(_view_topk(log, q, k), _oracle_topk(log, q, k),
+                            f"k={k}")
+
+    def test_delete_and_shadowing_update(self):
+        embs, masks = _corpus()
+        log = mutation.DeltaLog(base=PackedIndex.pack(embs, masks))
+        ue, um = _corpus(seed=1, n=4)
+        log.upsert(ue, um, [3, 7, 24, 25])
+        log.delete([5, 7, 25])           # one base doc, one per leaf
+        ue2, um2 = _corpus(seed=2, n=2)
+        log.upsert(ue2, um2, [3, 9])     # shadow the shadow
+        assert log.tombstones == frozenset({5, 7, 25})
+        assert log.n_live == 24 + 2 - 3 + 0  # 24,25,26? -> 24,25 new; 25 dead
+        q = _queries()
+        for k in (1, 10, log.n_live):
+            _assert_bitwise(_view_topk(log, q, k), _oracle_topk(log, q, k),
+                            f"k={k}")
+
+    def test_delete_then_reupsert_resurrects(self):
+        embs, masks = _corpus()
+        log = mutation.DeltaLog(base=PackedIndex.pack(embs, masks))
+        log.delete([4])
+        assert 4 in log.tombstones
+        ue, um = _corpus(seed=3, n=1)
+        log.upsert(ue, um, [4])
+        assert 4 not in log.tombstones   # order matters: net set
+        owner = log.owner_map()
+        assert owner[4] == 1             # owned by delta 0 = leaf 1
+        q = _queries()
+        _assert_bitwise(_view_topk(log, q, 10), _oracle_topk(log, q, 10))
+
+    def test_all_docs_deleted_serves_empty(self):
+        embs, masks = _corpus(n=6)
+        log = mutation.DeltaLog(base=PackedIndex.pack(embs, masks))
+        log.delete(range(6))
+        assert log.n_live == 0
+        ids, vals = _view_topk(log, _queries(), 5)
+        assert ids.shape == (4, 0) and vals.shape == (4, 0)
+
+    def test_duplicate_ids_in_batch_rejected(self):
+        embs, masks = _corpus(n=3)
+        log = mutation.DeltaLog(base=PackedIndex.pack(embs, masks))
+        with pytest.raises(ValueError, match="duplicate"):
+            log.upsert(embs, masks, [1, 1, 2])
+
+    def test_two_stage_route_refuses_mutation(self):
+        embs, masks = _corpus()
+        log = mutation.DeltaLog(base=PackedIndex.pack(embs, masks))
+        ue, um = _corpus(seed=1, n=2)
+        log.upsert(ue, um, [24, 25])
+        with pytest.raises(ValueError, match="streaming e2e"):
+            retrieval.search(log.base, _queries(), k=5, n_first=4,
+                             mutation=log.view())
+
+
+class TestCompaction:
+    def _mutated_log(self, compression="none"):
+        embs, masks = _corpus()
+        log = mutation.DeltaLog(
+            base=PackedIndex.pack(embs, masks, compression=compression))
+        ue, um = _corpus(seed=1, n=6)
+        log.upsert(ue, um, [3, 7, 11, 24, 25, 26])
+        log.delete([5, 25])
+        return log
+
+    @pytest.mark.parametrize("compression", ["none", "int8"])
+    def test_compact_bitwise_equals_offline_repack(self, compression):
+        """The compactor and an offline re-pack of the same
+        materialized state produce bitwise-identical serving results —
+        for BOTH compressions (identical float inputs quantize
+        identically)."""
+        log = self._mutated_log(compression)
+        compacted = mutation.compact_index(log)
+        embs, masks, ids = mutation.materialize(log)
+        offline = mutation._pack_with_ids(
+            embs, masks, ids, log.n_total, compression=compression,
+            granularity="pow2", min_width=8)
+        q = _queries()
+        got = topk_search(compacted, q, k=10)
+        want = topk_search(offline, q, k=10)
+        _assert_bitwise(got, want, compression)
+
+    def test_compact_preserves_serving_bitwise(self):
+        """fp32 path: pre-compaction (delta view) and post-compaction
+        serving are bitwise identical."""
+        log = self._mutated_log()
+        compacted = mutation.compact_index(log)
+        q = _queries()
+        _assert_bitwise(_view_topk(log, q, 10),
+                        topk_search(compacted, q, k=10))
+
+    def test_compact_drops_dead_rows_and_bumps_epoch(self):
+        log = self._mutated_log()
+        compacted = mutation.compact_index(log)
+        assert compacted.epoch == log.epoch + 1
+        all_ids = np.concatenate(
+            [np.asarray(b.doc_ids) for b in compacted.buckets])
+        assert len(all_ids) == log.n_live
+        assert 5 not in all_ids and 25 not in all_ids
+        assert compacted.n_docs == log.n_total  # global id space kept
+
+
+class TestDurability:
+    def test_wal_append_read_roundtrip(self, tmp_path):
+        path = str(tmp_path)
+        index_io.wal_append(path, {"op": "upsert", "seq": 0, "delta": 0,
+                                   "doc_ids": [1, 2]})
+        index_io.wal_append(path, {"op": "commit", "seq": 0})
+        recs = index_io.wal_read(path)
+        assert [r["op"] for r in recs] == ["upsert", "commit"]
+        assert recs[0]["doc_ids"] == [1, 2]
+
+    def test_wal_torn_tail_yields_valid_prefix(self, tmp_path):
+        path = str(tmp_path)
+        for s in range(3):
+            index_io.wal_append(path, {"op": "delete", "seq": s,
+                                       "doc_ids": [s]})
+        wal = os.path.join(path, index_io.WAL)
+        whole = open(wal).read()
+        lines = whole.splitlines(keepends=True)
+        # a crash mid-append: last line cut in half
+        open(wal, "w").write("".join(lines[:2]) + lines[2][:len(lines[2]) // 2])
+        assert [r["seq"] for r in index_io.wal_read(path)] == [0, 1]
+        # a flipped byte: crc refuses the line and everything after
+        bad = lines[1].replace('"doc_ids": [1]', '"doc_ids": [9]')
+        open(wal, "w").write(lines[0] + bad + lines[2])
+        assert [r["seq"] for r in index_io.wal_read(path)] == [0]
+
+    def test_durable_lifecycle_roundtrip(self, tmp_path):
+        path = str(tmp_path / "artifact")
+        embs, masks = _corpus()
+        index_io.save_index(path, PackedIndex.pack(embs, masks))
+        ue, um = _corpus(seed=1, n=6)
+        d = mutation.append_upsert(path, ue, um, [3, 7, 11, 24, 25, 26])
+        assert d == 0
+        mutation.append_delete(path, [5, 25])
+
+        # reloaded state serves bitwise like the in-memory log
+        mem = mutation.DeltaLog(base=PackedIndex.pack(embs, masks))
+        mem.upsert(ue, um, [3, 7, 11, 24, 25, 26])
+        mem.delete([5, 25])
+        log = mutation.load_state(path)
+        q = _queries()
+        pre = _view_topk(log, q, 10)
+        _assert_bitwise(pre, _view_topk(mem, q, 10), "disk vs memory")
+
+        new_index = mutation.Compactor(path).run()
+        assert new_index is not None and new_index.epoch == 1
+        assert index_io.load_epoch(path) == 1
+        assert index_io.list_orphans(path) == []
+        reloaded = index_io.load_index(path)
+        _assert_bitwise(pre, topk_search(reloaded, q, k=10),
+                        "post-compaction")
+        # consumed state is gone; a fresh log over epoch 1 is empty
+        assert mutation.load_state(path).ops == []
+        # recover on a clean artifact is a no-op
+        assert index_io.recover(path) == {
+            "rolled_forward": [], "rolled_back": [], "removed": []}
+        # second compaction with nothing to fold declines
+        assert mutation.Compactor(path).run() is None
+
+    def test_compaction_rebalances_placed_artifact(self, tmp_path):
+        path = str(tmp_path / "artifact")
+        embs, masks = _corpus(n=32)
+        packed = PackedIndex.pack(embs, masks)
+        plc = PlacementPlan.for_index(packed, 2)
+        index_io.save_index(path, packed, placement=plc)
+        ue, um = _corpus(seed=1, n=4)
+        mutation.append_upsert(path, ue, um, [1, 2, 32, 33])
+        new_index = mutation.Compactor(path).run()
+        got = index_io.load_placement(path)
+        assert got is not None and got.n_groups == 2
+        got.validate(len(new_index.buckets))
+        # per-group load of the compacted epoch works through the root
+        part = index_io.load_index(path, group=0)
+        assert part.n_docs == new_index.n_docs
+
+    def test_uncommitted_intent_invisible_until_recover(self, tmp_path):
+        path = str(tmp_path / "artifact")
+        embs, masks = _corpus()
+        index_io.save_index(path, PackedIndex.pack(embs, masks))
+        # a crashed delete: intent logged, tombstones never written
+        index_io.wal_append(path, {"op": "delete", "seq": 0,
+                                   "doc_ids": [1]})
+        assert mutation.load_state(path).ops == []
+        report = index_io.recover(path)
+        assert report["rolled_back"] == [0]
+        # the abort is durable: recover again does nothing
+        assert index_io.recover(path)["rolled_back"] == []
+
+    def test_load_state_requires_artifact(self, tmp_path):
+        with pytest.raises((IOError, OSError)):
+            mutation.load_state(str(tmp_path / "nope"))
+
+
+class TestTornArtifact:
+    """A hand-torn placed artifact (missing / truncated group
+    sub-manifest) must fail loudly, naming the group and the fix."""
+
+    def _placed(self, tmp_path):
+        path = str(tmp_path / "artifact")
+        embs, masks = _corpus(n=32)
+        packed = PackedIndex.pack(embs, masks)
+        index_io.save_index(path, packed,
+                            placement=PlacementPlan.for_index(packed, 2))
+        return path
+
+    def test_missing_group_submanifest(self, tmp_path):
+        path = self._placed(tmp_path)
+        os.remove(os.path.join(path, "packed_index.group1.json"))
+        with pytest.raises(IOError, match=r"group 1.*missing.*recover"):
+            index_io.load_index(path)
+        with pytest.raises(IOError, match=r"group 1.*missing.*recover"):
+            index_io.load_index(path, group=1)
+
+    def test_truncated_group_submanifest(self, tmp_path):
+        path = self._placed(tmp_path)
+        sub = os.path.join(path, "packed_index.group0.json")
+        whole = open(sub).read()
+        open(sub, "w").write(whole[:len(whole) // 2])
+        with pytest.raises(IOError,
+                           match=r"group 0.*(truncated|corrupt).*recover"):
+            index_io.load_index(path)
+
+
+# -- the kill -9 sweep ---------------------------------------------------
+
+# Expected recovery side per crash point: before the last covered
+# artifact write lands the intent must roll BACK (pre-mutation epoch);
+# from the moment every write landed it must roll FORWARD (post).
+EXPECT = {
+    "upsert-intent": "pre", "upsert-body": "pre",
+    "upsert-manifest": "post", "upsert-commit": "post",
+    "delete-intent": "pre", "delete-tombstones": "post",
+    "delete-commit": "post",
+    "compact-intent": "pre", "compact-body": "pre",
+    "compact-swap": "post", "compact-clean": "post",
+}
+
+
+def _run_child(code: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")])
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=540)
+
+
+class TestCrashSweep:
+    """One real SIGKILL per named durability point; recovery must land
+    on the asserted side, bitwise, with zero orphans."""
+
+    @pytest.mark.parametrize("point", mutation.CRASH_POINTS)
+    def test_kill_and_recover(self, point, tmp_path):
+        assert point in EXPECT, f"unmapped crash point {point}"
+        op = point.split("-")[0]
+        path = str(tmp_path / "artifact")
+        twin = str(tmp_path / "twin")
+        for p in (path, twin):
+            _crash_cases.seed_artifact(p)
+            if op == "compact":   # compaction folds an existing log
+                _crash_cases.run_upsert(p)
+                _crash_cases.run_delete(p)
+        pre = _crash_cases.topk_result(path)
+        # the uninterrupted twin provides the post-mutation oracle
+        getattr(_crash_cases, f"run_{op}")(twin)
+        post = _crash_cases.topk_result(twin)
+
+        child = _run_child(f"import _crash_cases; "
+                           f"_crash_cases.run_{op}({path!r}, {point!r})")
+        assert child.returncode == -signal.SIGKILL, (
+            f"{point}: child survived (rc={child.returncode})\n"
+            f"{child.stderr[-2000:]}")
+        assert "MUTATION_OK" not in child.stdout
+
+        report = index_io.recover(path)
+        got = _crash_cases.topk_result(path)
+        want = pre if EXPECT[point] == "pre" else post
+        assert np.array_equal(want[0], got[0]), (point, report)
+        assert np.array_equal(want[1], got[1]), (point, report)
+        assert index_io.list_orphans(path) == []
+        # the recovered artifact is fully loadable and consistent
+        index_io.load_index(path)
+        if op == "compact":
+            want_epoch = 0 if EXPECT[point] == "pre" else 1
+            assert index_io.load_epoch(path) == want_epoch, (point, report)
+        # recovery is idempotent
+        assert index_io.recover(path) == {
+            "rolled_forward": [], "rolled_back": [], "removed": []}
+
+    def test_mutation_refuses_sharded_serving(self):
+        """The single-process guard, exercised under a real 2-device
+        candidates mesh in a subprocess."""
+        code = (
+            "import os, numpy as np\n"
+            "import _crash_cases\n"
+            "from repro.launch.mesh import make_serve_mesh\n"
+            "from repro.serve import mutation, retrieval\n"
+            "from repro.serve.index import PackedIndex\n"
+            "from repro.sharding import axis_rules, serve_rules\n"
+            "e, m = _crash_cases._corpus(0, 8)\n"
+            "log = mutation.DeltaLog(base=PackedIndex.pack(e, m))\n"
+            "ue, um = _crash_cases._corpus(1, 2)\n"
+            "log.upsert(ue, um, [8, 9])\n"
+            "q = np.random.default_rng(0).normal("
+            "size=(2, 4, 16)).astype(np.float32)\n"
+            "with axis_rules(serve_rules(make_serve_mesh())):\n"
+            "    try:\n"
+            "        retrieval.topk_search(log.base, q, k=3,"
+            " mutation=log.view())\n"
+            "    except ValueError as err:\n"
+            "        assert 'single-process' in str(err)\n"
+            "        print('GUARD_OK')\n")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")])
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=540)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "GUARD_OK" in out.stdout
+
+
+class TestServerMutation:
+    """RetrievalServer epoch/mutation cache discipline."""
+
+    def test_apply_mutation_and_epoch_swap(self, tmp_path):
+        path = str(tmp_path / "artifact")
+        embs, masks = _corpus()
+        index_io.save_index(path, PackedIndex.pack(embs, masks))
+        ue, um = _corpus(seed=1, n=6)
+        mutation.append_upsert(path, ue, um, [3, 7, 11, 24, 25, 26])
+        mutation.append_delete(path, [5, 25])
+        log = mutation.load_state(path)
+
+        q = jnp.asarray(_queries())
+        server = RetrievalServer(log.base, k=10, n_first=0x7FFFFFFF)
+        base_idx, base_scores = server.query_batch(q)
+
+        server.apply_mutation(log.view())
+        mut_idx, mut_scores = server.query_batch(q)
+        want = _view_topk(log, np.asarray(q), 10)
+        assert jnp.array_equal(mut_idx, want[0])
+        assert jnp.array_equal(mut_scores, want[1])
+        # the mutation is visible: some id or score moved
+        assert not (jnp.array_equal(base_idx, mut_idx)
+                    and jnp.array_equal(base_scores, mut_scores))
+
+        mutation.Compactor(path).run()
+        compacted = index_io.load_index(path)
+        assert compacted.epoch == 1
+        server.swap_index(compacted)
+        new_idx, new_scores = server.query_batch(q)
+        # the swapped epoch serves bitwise what the delta view served
+        assert jnp.array_equal(new_idx, mut_idx)
+        assert jnp.array_equal(new_scores, mut_scores)
+
+    def test_search_rejects_mutation_with_return_full(self):
+        embs, masks = _corpus(n=8)
+        log = mutation.DeltaLog(base=PackedIndex.pack(embs, masks))
+        ue, um = _corpus(seed=1, n=2)
+        log.upsert(ue, um, [8, 9])
+        with pytest.raises(ValueError):
+            retrieval.search(log.base, _queries(), k=3, end_to_end=True,
+                             return_full=True, mutation=log.view())

@@ -1,0 +1,86 @@
+"""Parse-time validation of the serving CLI (repro.launch.serve).
+
+Config contradictions must die at parse time with an argparse usage
+error — not minutes later as a warning buried in serve-time logs after
+devices spun up.  The parser is tested directly (``parse_args`` on
+argv lists); nothing here touches jax devices or builds an index.
+"""
+
+import pytest
+
+from repro.launch import serve
+
+
+def _rejects(argv, needle):
+    with pytest.raises(SystemExit) as exc:
+        serve.parse_args(argv)
+    assert exc.value.code == 2  # argparse usage error, not a crash
+
+
+class TestRejects:
+    def test_kill_group_needs_grid_mesh(self, capsys):
+        _rejects(["--kill-group", "1"], "--mesh grid")
+        assert "--mesh grid" in capsys.readouterr().err
+
+    def test_kill_group_host_mesh_rejected(self, capsys):
+        # group 0 exists on every grid — the check is about the MESH,
+        # not the group id, and 'host' has no host groups to demote
+        _rejects(["--kill-group", "0", "--mesh", "host"], "--mesh grid")
+        assert "--mesh grid" in capsys.readouterr().err
+
+    def test_replicas_need_a_mesh(self, capsys):
+        _rejects(["--replicas", "2"], "mesh")
+        err = capsys.readouterr().err
+        assert "--replicas 2" in err and "mesh" in err
+
+    def test_mutation_needs_index_dir(self, capsys):
+        for argv in (["--upsert", "4"], ["--delete", "1,2"], ["--compact"]):
+            _rejects(argv, "--index-dir")
+            assert "--index-dir" in capsys.readouterr().err
+
+    def test_mutation_rejected_under_grid_mesh(self, capsys):
+        _rejects(["--upsert", "4", "--index-dir", "x", "--mesh", "grid"],
+                 "single-process")
+        assert "single-process" in capsys.readouterr().err
+
+    def test_delete_wants_integer_ids(self, capsys):
+        _rejects(["--delete", "a,b", "--index-dir", "x"], "integer")
+        assert "integer" in capsys.readouterr().err
+
+    def test_negative_upsert_rejected(self, capsys):
+        _rejects(["--upsert", "-3", "--index-dir", "x"], ">= 0")
+        assert ">= 0" in capsys.readouterr().err
+
+
+class TestAccepts:
+    def test_defaults(self):
+        args = serve.parse_args([])
+        assert args.arch == "colbert" and args.mesh == "none"
+        assert args.upsert == 0 and args.delete == () and not args.compact
+
+    def test_grid_with_replicas_and_kill_group(self):
+        args = serve.parse_args(["--mesh", "grid", "--replicas", "2",
+                                 "--kill-group", "1"])
+        assert args.replicas == 2 and args.kill_group == 1
+
+    def test_replicas_one_without_mesh_ok(self):
+        # replicas=1 is the no-replication default; legal anywhere
+        assert serve.parse_args(["--replicas", "1"]).replicas == 1
+
+    def test_mutation_lifecycle_flags(self):
+        args = serve.parse_args(["--index-dir", "/tmp/x", "--upsert", "8",
+                                 "--delete", "3, 5 ,7", "--compact"])
+        assert args.upsert == 8
+        assert args.delete == (3, 5, 7)  # tolerant of spaces
+        assert args.compact is True
+
+    def test_delete_trailing_comma_ok(self):
+        args = serve.parse_args(["--index-dir", "x", "--delete", "4,"])
+        assert args.delete == (4,)
+
+    def test_mutation_with_host_mesh_parses(self):
+        # host mesh on one device is single-process; the runtime guard
+        # (topk_search) owns the multi-shard refusal
+        args = serve.parse_args(["--index-dir", "x", "--compact",
+                                 "--mesh", "host"])
+        assert args.compact and args.mesh == "host"
