@@ -34,7 +34,10 @@ failover after one lost host group no longer bit-identical to the
 no-failure oracle, or degraded unreplicated serving not reporting
 0 < coverage < 1), or if live-mutation serving regressed (post-crash
 recovery no longer bit-identical to the pre-crash live view, or
-compaction no longer bit-identical to the delta-log view it folds) —
+compaction no longer bit-identical to the delta-log view it folds), or
+if routed serving regressed (nprobe recall@k < 0.99 against the
+exhaustive oracle, routed q/s below the exhaustive sweep, the router
+scoring every bucket, or the bounded route losing bit-exactness) —
 the smoke scripts/smoke.sh runs after recording.
 """
 
@@ -409,6 +412,82 @@ def _fault_worker(shape: dict) -> dict:
     }
 
 
+# Routed-serving bench shape: big enough that bucket scoring dominates
+# the router's centroid pass + host-side selection (the point of the
+# comparison), clustered so the capacity buckets carry content
+# structure (kept-token count tied to the cluster) — the regime
+# Voronoi-as-IVF routing exists for.  Queries concentrate on one
+# cluster, the realistic serving mix for a routed index.
+ROUTED = dict(n_q=16, n_docs=1024, m=32, l=8, dim=32, k=10,
+              n_clusters=4, n_centroids=4, n_probe=1)
+
+
+def run_routed_serving(**shape):
+    """Candidate-routing comparison (DESIGN_BACKENDS.md §Candidate
+    routing): the exhaustive streaming sweep vs the routed modes on the
+    SAME eager ``topk_search`` machinery (routed selection is
+    host-side, so neither side gets an enclosing jit).  Records q/s for
+    exhaustive / nprobe / bounded, recall@k of the nprobe route against
+    the exhaustive oracle, the fraction of buckets each routed mode
+    scored, and a bit-exactness bit for the bounded route.  ``--check``
+    gates recall >= 0.99, routed q/s >= exhaustive q/s, fraction < 1,
+    and bounded exactness."""
+    from repro.core import metrics
+    from repro.serve.routing import RoutingIndex
+
+    shape = ROUTED | shape
+    n_q, n_docs, m, l, dim, k = (shape[x] for x in
+                                 ("n_q", "n_docs", "m", "l", "dim", "k"))
+    n_clusters, n_centroids = shape["n_clusters"], shape["n_centroids"]
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(n_clusters, dim))
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    lab = np.repeat(np.arange(n_clusters), n_docs // n_clusters)
+    emb = centers[lab][:, None, :] + 0.08 * rng.normal(
+        size=(n_docs, m, dim))
+    emb = (emb / np.linalg.norm(emb, axis=-1, keepdims=True)).astype(
+        np.float32)
+    kept = np.maximum(((lab + 1) * m) // n_clusters, 1)
+    keep = np.arange(m)[None, :] < kept[:, None]
+    packed = TokenIndex.build(
+        jnp.asarray(emb), jnp.ones((n_docs, m), bool)).with_keep(
+            jnp.asarray(keep)).pack()
+    routing = RoutingIndex.build(packed, n_centroids=n_centroids)
+    q = centers[1][None, None, :] + 0.05 * rng.normal(size=(n_q, l, dim))
+    q = jnp.asarray((q / np.linalg.norm(q, axis=-1,
+                                        keepdims=True)).astype(np.float32))
+
+    def run(**kw):
+        return jax.block_until_ready(topk_search(packed, q, k=k, **kw))
+
+    i_ex, s_ex = run()                          # warm + oracle
+    st_np, st_bd = {}, {}
+    i_np, s_np = run(route="nprobe", routing=routing,
+                     n_probe=shape["n_probe"], route_stats=st_np)
+    i_bd, s_bd = run(route="bounded", routing=routing, route_stats=st_bd)
+    t_ex, _ = common.timeit(lambda: run(), repeat=2)
+    t_np, _ = common.timeit(
+        lambda: run(route="nprobe", routing=routing,
+                    n_probe=shape["n_probe"]), repeat=2)
+    t_bd, _ = common.timeit(
+        lambda: run(route="bounded", routing=routing), repeat=2)
+    same = lambda a, b: bool((np.asarray(a) == np.asarray(b)).all())
+    return {
+        "exhaustive": n_q / t_ex,
+        "nprobe": n_q / t_np,
+        "bounded": n_q / t_bd,
+        "speedup_nprobe_over_exhaustive": t_ex / t_np,
+        "speedup_bounded_over_exhaustive": t_ex / t_bd,
+        "recall_nprobe": metrics.recall_at_k(np.asarray(i_np),
+                                             np.asarray(i_ex)),
+        "bounded_exact": same(i_ex, i_bd) and same(s_ex, s_bd),
+        "fraction_buckets_nprobe": st_np["fraction"],
+        "fraction_buckets_bounded": st_bd["fraction"],
+        "n_buckets": st_np["n_buckets"],
+        "shape": dict(shape),
+    }
+
+
 # Mutation bench shape: small enough that the per-round retrace of the
 # delta-view program stays cheap on CPU, big enough for several
 # capacity buckets per leaf.
@@ -610,6 +689,42 @@ def check_last(path: str = OUT_PATH) -> None:
           f"q/s ({mut['upserts_per_s']:.2f} upserts/s interleaved), "
           f"view {mut['view_q_per_s']:.2f} q/s, recovery "
           f"{mut['recovery_s']*1e3:.0f} ms (bit-identical, 0 orphans)")
+    # Routed gate sits BEFORE the grid/fault gates: those may return
+    # early on platforms that cannot form a grid, and the routed
+    # contract must be enforced everywhere.
+    routed = last.get("routed_serving")
+    if routed is None:
+        raise SystemExit(f"{path}: last entry predates candidate "
+                         "routing; re-run the bench")
+    if routed.get("recall_nprobe", 0.0) < 0.99:
+        raise SystemExit(
+            f"RECALL REGRESSION: nprobe routing recall@k "
+            f"{routed.get('recall_nprobe')} fell below 0.99 against the "
+            f"exhaustive oracle at shape {routed.get('shape')}")
+    if routed.get("fraction_buckets_nprobe", 1.0) >= 1.0:
+        raise SystemExit(
+            "ROUTING REGRESSION: the nprobe route scored every bucket "
+            f"(fraction {routed.get('fraction_buckets_nprobe')}) — "
+            f"candidate pruning is not engaging at shape "
+            f"{routed.get('shape')}")
+    if not routed.get("bounded_exact", False):
+        raise SystemExit(
+            "PARITY REGRESSION: the bounded route diverged from the "
+            "exhaustive sweep — the score upper bound is no longer "
+            f"admissible at shape {routed.get('shape')}")
+    if routed.get("nprobe", 0.0) < routed.get("exhaustive", 0.0):
+        raise SystemExit(
+            f"THROUGHPUT REGRESSION: routed serving "
+            f"{routed.get('nprobe'):.2f} q/s fell below the exhaustive "
+            f"sweep {routed.get('exhaustive'):.2f} q/s at shape "
+            f"{routed.get('shape')}")
+    print(f"routed serving smoke OK: nprobe {routed['nprobe']:.2f} q/s "
+          f"vs exhaustive {routed['exhaustive']:.2f} q/s "
+          f"({routed['speedup_nprobe_over_exhaustive']:.2f}x at "
+          f"{routed['fraction_buckets_nprobe']:.2f} of buckets, recall "
+          f"{routed['recall_nprobe']:.3f}); bounded "
+          f"{routed['bounded']:.2f} q/s (exact, "
+          f"{routed['fraction_buckets_bounded']:.2f} of buckets)")
     grid = last.get("grid_serving")
     if grid is None:
         raise SystemExit(f"{path}: last entry predates grid placement "
@@ -664,6 +779,7 @@ def main():
     layout = run_packed_serving()
     stream = run_streaming_serving()
     mut = run_mutation_serving()
+    routed = run_routed_serving()
     grid = run_grid_serving()
     fault = run_fault_tolerance()
 
@@ -732,6 +848,20 @@ def main():
         f"recovery_parity={mut['recovery_parity_identical']};"
         f"compact_parity={mut['post_compact_parity_identical']};"
         f"orphans={mut['orphans_after_recovery']}")
+    for name in ("exhaustive", "nprobe", "bounded"):
+        common.csv_line(f"kernel_backends/serving_routed_{name}",
+                        1e6 / routed[name], f"q_per_s={routed[name]:.2f}")
+    routed_ok = (routed["recall_nprobe"] >= 0.99
+                 and routed["bounded_exact"]
+                 and routed["fraction_buckets_nprobe"] < 1.0
+                 and routed["nprobe"] >= routed["exhaustive"])
+    common.csv_line(
+        "kernel_backends/CLAIM_routed_serving_sublinear_high_recall", 0.0,
+        f"holds={routed_ok};"
+        f"speedup={routed['speedup_nprobe_over_exhaustive']:.2f}x;"
+        f"fraction={routed['fraction_buckets_nprobe']:.2f};"
+        f"recall={routed['recall_nprobe']:.3f};"
+        f"bounded_exact={routed['bounded_exact']}")
     if grid.get("skipped"):
         common.csv_line("kernel_backends/serving_grid_skipped", 0.0,
                         f"reason={grid['skipped']}")
@@ -816,6 +946,8 @@ def main():
             mut["recovery_parity_identical"]
             and mut["post_compact_parity_identical"]
             and mut["orphans_after_recovery"] == 0),
+        "routed_serving": routed,
+        "claim_routed_serving_sublinear_high_recall": bool(routed_ok),
         "grid_serving": grid,
         "claim_grid_placement_parity_and_clean_hlo": bool(
             grid.get("skipped")

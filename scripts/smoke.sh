@@ -11,8 +11,11 @@
 # recovered, re-served bit-identically), and the packed-index lifecycle
 # roundtrip (prune -> pack -> save on the first serve run, load ->
 # query on the second — the offline/online split a real deployment
-# uses), including a replicated run that kills a host group and a
-# live-mutation run (upsert -> delete -> compact on the artifact).
+# uses), including a replicated run that kills a host group, a
+# live-mutation run (upsert -> delete -> compact on the artifact), and
+# a routed-serving run (build + persist the Voronoi-as-IVF routing
+# sidecar, then reload it and serve the nprobe/bounded routes with a
+# recall report against the exhaustive sweep).
 # Run from anywhere; zstandard is optional (checkpointing falls back to
 # uncompressed bodies).
 set -euo pipefail
@@ -51,7 +54,7 @@ trap 'rm -rf "$(dirname "$index_dir")"' EXIT
 python -m repro.launch.serve --arch colbert --index-dir "$index_dir"
 test -f "$index_dir/packed_index.json"
 python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
-  | grep -q "loaded packed index"
+  | grep "loaded packed index" > /dev/null  # no -q: read to EOF, no SIGPIPE race
 # sharded serving: load the same artifact and serve it over a 2-device
 # candidates mesh on the e2e route (--n-first 0), so the query batch
 # really runs the shard_map streaming merge, not just the banner.
@@ -87,5 +90,18 @@ test -f "$rep_dir/packed_index.group1.json"
 python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
   --upsert 4 --delete 1,3 --compact \
   | grep -E "serving live mutation view|post-compact parity: True.*orphans: 0" \
+  | wc -l | grep -q 2
+# routed serving lifecycle: first run builds + persists the routing
+# sidecar beside the (freshly compacted) artifact and serves the
+# nprobe route with a recall report against the exhaustive oracle;
+# second run must LOAD the persisted table (Compactor keeps it fresh
+# per epoch) and serve the provably-exact bounded route.
+python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
+  --route nprobe --nprobe 2 \
+  | grep -E "built \+ saved routing table|routed \(nprobe\)|routed recall@10 vs exhaustive: 1.000" \
+  | wc -l | grep -q 3
+python -m repro.launch.serve --arch colbert --index-dir "$index_dir" \
+  --route bounded \
+  | grep -E "loaded routing table|routed recall@10 vs exhaustive: 1.000" \
   | wc -l | grep -q 2
 echo "smoke OK"

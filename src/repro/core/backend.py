@@ -78,6 +78,7 @@ __all__ = [
     "on_tpu",
     "resolve_backend",
     "tuned",
+    "tuned_routing_blocks",
     "tuned_serving_blocks",
     "tuned_streaming_blocks",
 ]
@@ -182,6 +183,40 @@ def tuned_serving_blocks(n_q: int, n_docs: int, m: int, l: int, dim: int,
     """
     if block_docs is None or block_q is None:
         cfg = tuned("serving", n_q=n_q, n_docs=n_docs, m=m, l=l, dim=dim)
+        block_docs = cfg.block_docs if block_docs is None else block_docs
+        block_q = cfg.block_q if block_q is None else block_q
+    return block_docs, block_q
+
+
+def tuned_routing_blocks(n_q: int, n_buckets: int, n_centroids: int,
+                         l: int, dim: int, *,
+                         n_probe: int | None = None,
+                         threshold: float | None = None,
+                         block_docs: int | None = None,
+                         block_q: int | None = None) -> tuple[int, int]:
+    """Resolve the candidate router's ``(block_docs, block_q)`` for the
+    centroid-table MaxSim pass (serve/routing.py).
+
+    The centroid table is scored as ONE extra bucket shape — each
+    capacity bucket plays the role of a document with ``n_centroids``
+    tokens — so it keys the same ``serving`` tuning table as any
+    bucket, with the table dimensions in the bucket slots.  The routed
+    dispatch knobs (``n_probe``, score ``threshold``) join the key
+    only when set: they don't change this pass's shape, but a measured
+    race may legitimately prefer different chunking when the router is
+    followed by a narrow vs. wide candidate sweep, and default-route
+    keys must stay unchanged (the optional-key discipline of
+    ``tuned_streaming_blocks``).  Explicit values win; ``None``s come
+    from the autotuner.  Call OUTSIDE jit.
+    """
+    if block_docs is None or block_q is None:
+        shape = dict(n_q=n_q, n_docs=n_buckets, m=n_centroids, l=l,
+                     dim=dim)
+        if n_probe is not None:
+            shape["n_probe"] = n_probe
+        if threshold is not None:
+            shape["threshold"] = threshold
+        cfg = tuned("serving", **shape)
         block_docs = cfg.block_docs if block_docs is None else block_docs
         block_q = cfg.block_q if block_q is None else block_q
     return block_docs, block_q

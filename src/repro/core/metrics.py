@@ -37,12 +37,50 @@ def ndcg_at_k(scores: jnp.ndarray, gains: jnp.ndarray, k: int = 10) -> jnp.ndarr
     return jnp.mean(jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-9), 0.0))
 
 
-def recall_at_k(scores: jnp.ndarray, rel: jnp.ndarray, k: int = 10) -> jnp.ndarray:
+def relevance_recall_at_k(scores: jnp.ndarray, rel: jnp.ndarray,
+                          k: int = 10) -> jnp.ndarray:
+    """Fraction of queries with a relevant doc in the score top-k (the
+    judgment-based recall; the routed-serving quality gate uses the
+    id-overlap :func:`recall_at_k` below instead)."""
     order = jnp.argsort(-scores, axis=-1)[:, :k]
     hit = jnp.take_along_axis(rel, order, axis=-1).any(-1)
     has = rel.any(-1)
     return jnp.where(has.sum() > 0,
                      hit.sum() / jnp.maximum(has.sum(), 1), 0.0)
+
+
+def recall_at_k(ids_pruned, ids_oracle) -> float:
+    """Mean per-query overlap of a pruned retrieval run with its oracle:
+    ``|top-k(pruned) ∩ top-k(oracle)| / |top-k(oracle)|``, averaged over
+    queries — the quality gate of every deliberately non-exhaustive
+    serving path (candidate routing) against the ``--exhaustive`` run.
+
+    Both arguments are integer id matrices, one row per query; the
+    column counts may differ (a routed run may return fewer than k
+    columns when its candidate buckets hold fewer than k docs, and
+    either run may be sentinel-padded).  Negative ids are the
+    ``(-inf, -1)`` pad sentinels of the streaming merge and never count
+    as docs on either side.  A query whose oracle row is empty (k >
+    corpus, all docs deleted) is perfect by definition; an entirely
+    empty oracle returns 1.0 so the gate is vacuously satisfiable.
+    """
+    pruned = np.asarray(ids_pruned)
+    oracle = np.asarray(ids_oracle)
+    if oracle.ndim != 2 or pruned.ndim != 2:
+        raise ValueError("recall_at_k expects (n_q, k)-shaped id arrays")
+    if pruned.shape[0] != oracle.shape[0]:
+        raise ValueError(
+            f"query counts differ: pruned {pruned.shape[0]} vs oracle "
+            f"{oracle.shape[0]}")
+    per_q = []
+    for p_row, o_row in zip(pruned, oracle):
+        want = set(int(i) for i in o_row if i >= 0)
+        if not want:
+            per_q.append(1.0)
+            continue
+        got = set(int(i) for i in p_row if i >= 0)
+        per_q.append(len(want & got) / len(want))
+    return float(np.mean(per_q)) if per_q else 1.0
 
 
 def linear_fit(x, y) -> dict:

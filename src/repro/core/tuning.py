@@ -130,15 +130,20 @@ def shape_key(kind: str, shape: dict, *, platform: str | None = None,
     cache (and the jit caches keyed on the resulting static args) from
     growing per ragged shape.  Per-item axes (m, l, dim) stay exact:
     they bound tile legality and the shortlist exactness proof.
+    Non-integral entries pass through exactly: the candidate router
+    keys its score ``threshold`` (a float) into the serving table
+    (``backend.tuned_routing_blocks``), and truncating it to int would
+    collide distinct thresholds onto one cache entry.
     """
     if kind not in KINDS:
         raise ValueError(f"unknown tuning kind {kind!r}; one of {KINDS}")
     platform = platform or jax.default_backend()
     bucketed = []
     for name in sorted(shape):
-        v = int(shape[name])
+        raw = shape[name]
+        v = float(raw) if isinstance(raw, float) else int(raw)
         if name in ("n_samples", "n_docs", "n_q"):
-            v = _pow2_at_least(max(v, 1))
+            v = _pow2_at_least(max(int(v), 1))
         bucketed.append((name, v))
     return (kind, platform, "measured" if measured else "heuristic",
             tuple(bucketed))
@@ -260,8 +265,11 @@ def _key_to_jsonable(key: tuple) -> dict:
 
 
 def _key_from_jsonable(d: dict) -> tuple:
+    # float shape entries (router threshold keys) roundtrip as floats;
+    # everything else stays int, matching shape_key's canonical form.
     return (str(d["kind"]), str(d["platform"]), str(d["mode"]),
-            tuple((str(n), int(v)) for n, v in d["shape"]))
+            tuple((str(n), float(v) if isinstance(v, float) else int(v))
+                  for n, v in d["shape"]))
 
 
 def _read_entries(path: str) -> dict[tuple, KernelConfig]:

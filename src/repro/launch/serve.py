@@ -10,7 +10,12 @@
                    lifecycle against that artifact: durable WAL-logged
                    delta buckets and tombstones served beside the base
                    epoch, folded into the next epoch by compaction
-                   (repro.serve.mutation).
+                   (repro.serve.mutation).  --route bounded|nprobe turns
+                   on Voronoi-as-IVF candidate routing: a per-bucket
+                   centroid table (repro.serve.routing, persisted as an
+                   artifact sidecar) prunes whole capacity buckets per
+                   query before any document is scored, and the run
+                   reports recall@k against the exhaustive sweep.
   --arch <lm>    : KV-cache decode loop on the smoke config
 """
 
@@ -27,6 +32,7 @@ import numpy as np
 from repro import configs
 from repro import sharding as shlib
 from repro.core import backend as backend_lib
+from repro.core import metrics
 from repro.core import pruning_pipeline
 from repro.core.sampling import sample_sphere
 from repro.data import synthetic
@@ -52,11 +58,17 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
                     kill_group: int | None = None,
                     upsert: int = 0,
                     delete: tuple = (),
-                    compact: bool = False):
+                    compact: bool = False,
+                    route: str = "exhaustive",
+                    n_probe: int = 1,
+                    centroids: int = 4):
     cfg = configs.get("colbert").smoke
     params = colbert_lib.init_params(jax.random.PRNGKey(seed), cfg)
     if replicas < 1:
         raise ValueError(f"--replicas {replicas} < 1")
+    if route != "exhaustive" and not index_dir:
+        raise ValueError(f"--route {route} needs --index-dir: the routing "
+                         "table is an artifact sidecar")
     if ckpt_dir:
         _, restored = checkpoint.restore_latest(
             ckpt_dir, {"params": params, "opt": None, "step": None})
@@ -134,6 +146,32 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
             print(f"[serve] saved + reloaded packed index at {index_dir}"
                   + (f" ({placement.n_groups} host-group bodies)"
                      if placement else ""))
+    routing = None
+    if route != "exhaustive":
+        # The routing table is an artifact sidecar: load the persisted
+        # one when the live epoch carries it, else build it once (k-means
+        # over each bucket's kept tokens) and persist it beside the
+        # epoch it was built from, where the Compactor will keep it
+        # fresh across future epochs.
+        if index_io.has_routing(index_dir):
+            routing = index_io.load_routing(index_dir)
+            print(f"[serve] loaded routing table: {routing.n_buckets} "
+                  f"buckets x {routing.n_centroids} centroids "
+                  f"(epoch {routing.epoch})")
+            if routing.n_centroids != centroids:
+                print(f"[serve] WARNING: --centroids-per-bucket "
+                      f"{centroids} ignored; the loaded table has "
+                      f"{routing.n_centroids} (delete the artifact's "
+                      f"routing sidecar to rebuild)")
+        else:
+            from repro.serve.routing import RoutingIndex
+            routing = RoutingIndex.build(packed, n_centroids=centroids)
+            index_io.save_routing(index_io.live_epoch_dir(index_dir),
+                                  routing)
+            print(f"[serve] built + saved routing table: "
+                  f"{routing.n_buckets} buckets x "
+                  f"{routing.n_centroids} centroids "
+                  f"(epoch {routing.epoch})")
     # shortlist is a pruning-only path; serving falls back to the default.
     serve_backend = backend if backend in backend_lib.SERVING else None
     # --mesh host: every local device on the candidates axis; the server
@@ -192,13 +230,20 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
               "serving unsharded (set --hosts or add devices)")
     if n_first <= 0:
         n_first = packed.n_docs                  # e2e exact-sweep route
-    route = "e2e" if n_first >= packed.n_docs else "two-stage"
+    # Routed modes always take the streaming e2e sweep over the surviving
+    # buckets (candidate routing replaces the two-stage shortlist).
+    sweep = ("e2e" if n_first >= packed.n_docs or route != "exhaustive"
+             else "two-stage")
     with ctx:
         server = RetrievalServer(packed, k=10, n_first=n_first,
                                  backend=serve_backend, monitor=monitor,
-                                 on_group_loss=on_group_loss)
-        print(f"[serve] route: {route} (n_first={n_first}, "
-              f"n_docs={packed.n_docs})")
+                                 on_group_loss=on_group_loss,
+                                 route=route, routing=routing,
+                                 n_probe=n_probe)
+        print(f"[serve] route: {sweep} (n_first={n_first}, "
+              f"n_docs={packed.n_docs})"
+              + (f" + candidate routing ({route})"
+                 if route != "exhaustive" else ""))
         print(f"[serve] scoring backend: {server.backend}")
         if kill_group is not None:
             if monitor is None:
@@ -219,6 +264,27 @@ def serve_retrieval(keep_fraction: float = 0.5, n_queries: int = 32,
         if monitor is not None:
             print(f"[serve] coverage: {coverage:.3f} "
                   f"(live groups: {sorted(monitor.live())})")
+        if route != "exhaustive":
+            # Routed report: rerun eagerly to collect route_stats (the
+            # server's closure serves the same host-side selection), and
+            # score the served ids against the exhaustive oracle.
+            stats = {}
+            topk_search(packed, q_emb, k=server.k, backend=server.backend,
+                        route=route, routing=routing, n_probe=n_probe,
+                        route_stats=stats)
+            oi, _ = topk_search(packed, q_emb, k=server.k,
+                                backend=server.backend)
+            rec = metrics.recall_at_k(np.asarray(idx), np.asarray(oi))
+            line = (f"[serve] routed ({route}): "
+                    f"{stats['buckets_scored']}/{stats['n_buckets']} "
+                    f"buckets scored "
+                    f"(fraction {stats['fraction']:.2f})")
+            if "groups_consulted" in stats:
+                line += (f"; {stats['groups_consulted']}/"
+                         f"{stats['n_groups']} host groups consulted")
+            print(line)
+            print(f"[serve] routed recall@{server.k} vs exhaustive: "
+                  f"{rec:.3f}")
         if upsert or delete or compact:
             idx, scores = _mutation_lifecycle(
                 index_dir, server, q_emb, params, cfg, seed,
@@ -365,6 +431,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="comma-separated doc ids to durably tombstone "
                          "(WAL intent -> atomic tombstone set -> commit; "
                          "needs --index-dir)")
+    ap.add_argument("--route", default="exhaustive",
+                    choices=["exhaustive", "bounded", "nprobe"],
+                    help="candidate routing mode (repro.serve.routing): "
+                         "'exhaustive' scores every capacity bucket; "
+                         "'nprobe' scores only the --nprobe best buckets "
+                         "per query by centroid MaxSim; 'bounded' keeps "
+                         "every bucket whose provable score upper bound "
+                         "clears the shortlist threshold — exact results, "
+                         "fewer buckets.  Routed modes need --index-dir "
+                         "(the routing table is an artifact sidecar)")
+    ap.add_argument("--nprobe", type=int, default=1,
+                    help="buckets to score per query under --route "
+                         "nprobe (and the seed width for --route "
+                         "bounded); must be >= 1")
+    ap.add_argument("--centroids-per-bucket", type=int, default=4,
+                    dest="centroids",
+                    help="k-means centroids per capacity bucket when "
+                         "building a new routing table (ignored with a "
+                         "WARNING when the artifact already carries one)")
     ap.add_argument("--compact", action="store_true",
                     help="fold the artifact's delta log into the next "
                          "epoch (background-compaction path: new epoch "
@@ -408,6 +493,22 @@ def parse_args(argv=None) -> argparse.Namespace:
         ap.error("mutation serving is single-process; run --compact to "
                  "fold the delta log into a fresh epoch before serving "
                  "it under --mesh grid")
+    if args.nprobe < 1:
+        ap.error(f"--nprobe {args.nprobe} must be >= 1: the router "
+                 "always scores at least the best bucket per query")
+    if args.centroids < 1:
+        ap.error(f"--centroids-per-bucket {args.centroids} must be >= 1")
+    if args.route != "exhaustive" and not args.index_dir:
+        ap.error(f"--route {args.route} needs --index-dir: the routing "
+                 "table is a sidecar of a persisted artifact "
+                 "(repro.serve.index_io.save_routing)")
+    if args.route != "exhaustive" and mutating:
+        ap.error(f"--route {args.route} with --upsert/--delete/--compact "
+                 "is not supported by this driver: the mutation demo "
+                 "swaps served views mid-run, and routed swaps require "
+                 "the matching epoch's routing table (the library "
+                 "handles this — serve the mutated view exhaustively, "
+                 "or compact first and serve the new epoch routed)")
     return args
 
 
@@ -422,7 +523,8 @@ def main(argv=None):
                         on_group_loss=args.on_group_loss,
                         kill_group=args.kill_group,
                         upsert=args.upsert, delete=args.delete,
-                        compact=args.compact)
+                        compact=args.compact, route=args.route,
+                        n_probe=args.nprobe, centroids=args.centroids)
     else:
         serve_lm(args.arch, n_tokens=args.tokens)
 

@@ -59,9 +59,10 @@ from repro.serve.index import COMPRESSIONS, PackedBucket, PackedIndex
 from repro.sharding import PlacementPlan
 from repro.train import checkpoint
 
-__all__ = ["FORMAT", "MANIFEST", "WAL", "has_index", "list_orphans",
-           "load_index", "load_placement", "recover", "save_index",
-           "wal_append", "wal_read"]
+__all__ = ["FORMAT", "MANIFEST", "ROUTING", "WAL", "has_index",
+           "has_routing", "list_orphans", "live_epoch_dir", "load_index",
+           "load_placement", "load_routing", "recover", "save_index",
+           "save_routing", "wal_append", "wal_read"]
 
 # 2: the manifest grew "placement" and the body may split into
 # per-host-group sub-manifests + bodies; format-1 artifacts load fine.
@@ -78,6 +79,14 @@ FORMAT = 4
 MANIFEST = "packed_index.json"
 WAL = "mutation.wal"
 TOMBSTONES = "tombstones.json"
+# Candidate-routing sidecar (serve/routing.py): its own manifest +
+# checkpoint body beside the index it was built from, its own format
+# ladder (the index manifest doesn't change shape when a routing table
+# appears, so old readers keep loading routed artifacts — they just
+# serve exhaustively).
+ROUTING = "routing.json"
+ROUTING_DIR = "routing"
+ROUTING_FORMAT = 1
 
 
 def _format_for(placement: PlacementPlan | None, epoch: int = 0) -> int:
@@ -344,6 +353,104 @@ def load_index(path: str, *, group: int | None = None) -> PackedIndex:
 
 
 # ----------------------------------------------------------------------
+# Candidate-routing sidecar (serve/routing.py): per-bucket centroid
+# tables + residual radii persisted BESIDE the index epoch they were
+# built from — inside the live epoch_dir for compacted artifacts, so a
+# compaction's WAL intent (whose rollback rmtree's the whole epoch dir)
+# covers the routing rebuild for free, and the epoch swap atomically
+# publishes index + routing together.
+# ----------------------------------------------------------------------
+
+
+def live_epoch_dir(path: str) -> str:
+    """The directory actually holding the live epoch's files: ``path``
+    itself for never-compacted artifacts, the committed ``epoch_dir``
+    subdirectory otherwise.  Sidecar writers (:func:`save_routing`)
+    target THIS directory so the pointer-following readers
+    (:func:`load_routing`) find what they wrote; ``save_routing`` itself
+    deliberately does NOT follow the pointer — the Compactor writes the
+    NEXT epoch's sidecar before the manifest swap publishes it."""
+    try:
+        manifest = _read_manifest(path, MANIFEST)
+    except (IOError, OSError, json.JSONDecodeError, KeyError):
+        return path
+    sub = manifest.get("epoch_dir")
+    return os.path.join(path, sub) if sub else path
+
+
+def save_routing(path: str, routing, *, async_save: bool = False) -> str:
+    """Persist a ``serve.routing.RoutingIndex`` sidecar under ``path``
+    (the directory holding the index epoch it was built from).  Returns
+    the manifest path.  The body rides the checkpoint writer (atomic
+    rename, per-leaf crc32, async option) like the index itself."""
+    os.makedirs(path, exist_ok=True)
+    saver = checkpoint.save_async if async_save else checkpoint.save
+    saver(os.path.join(path, ROUTING_DIR), 0, routing.body_tree(), keep=1)
+    manifest = {"kind": "routing_index", "format": ROUTING_FORMAT}
+    manifest.update(routing.meta())
+    final = os.path.join(path, ROUTING)
+    checkpoint.atomic_json_dump(final, manifest)
+    return final
+
+
+def _read_routing_manifest(path: str) -> dict:
+    with open(os.path.join(path, ROUTING)) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") != "routing_index":
+        raise IOError(f"{path}/{ROUTING}: manifest is not a routing table")
+    if manifest.get("format", 0) > ROUTING_FORMAT:
+        raise IOError(f"{path}/{ROUTING}: routing format "
+                      f"{manifest['format']} is newer than this reader "
+                      f"(format {ROUTING_FORMAT})")
+    return manifest
+
+
+def has_routing(path: str) -> bool:
+    """True when the artifact's LIVE epoch carries a loadable routing
+    sidecar (follows the ``epoch_dir`` pointer like :func:`has_index`)."""
+    try:
+        manifest = _read_manifest(path, MANIFEST)
+    except (IOError, OSError, json.JSONDecodeError, KeyError):
+        manifest = {}
+    if manifest.get("epoch_dir"):
+        return has_routing(os.path.join(path, manifest["epoch_dir"]))
+    if not os.path.exists(os.path.join(path, ROUTING)):
+        return False
+    try:
+        _read_routing_manifest(path)
+    except (IOError, json.JSONDecodeError, KeyError):
+        return False
+    return bool(checkpoint.list_steps(os.path.join(path, ROUTING_DIR)))
+
+
+def load_routing(path: str):
+    """Restore the live epoch's routing sidecar as a
+    ``serve.routing.RoutingIndex``, or ``None`` when the artifact has
+    none (serving then falls back to ``route="exhaustive"``).  Follows
+    the root manifest's ``epoch_dir`` pointer like :func:`load_index`,
+    so a caller always gets the table matching the index epoch
+    :func:`load_index` returns — ``RoutingIndex.validate_for`` enforces
+    the pairing again at serve time."""
+    from repro.serve.routing import RoutingIndex
+
+    try:
+        manifest = _read_manifest(path, MANIFEST)
+    except FileNotFoundError:
+        manifest = {}
+    if manifest.get("epoch_dir"):
+        return load_routing(os.path.join(path, manifest["epoch_dir"]))
+    if not os.path.exists(os.path.join(path, ROUTING)):
+        return None
+    meta = _read_routing_manifest(path)
+    like = {"centroids": 0, "cmask": 0, "radius": 0}
+    _, tree = checkpoint.restore_latest(os.path.join(path, ROUTING_DIR),
+                                        like)
+    if tree is None:
+        raise IOError(f"{path}/{ROUTING_DIR}: no restorable routing body")
+    return RoutingIndex.from_parts(meta, tree)
+
+
+# ----------------------------------------------------------------------
 # Write-ahead manifest log + crash recovery (DESIGN_BACKENDS.md
 # §Mutation & durability).  Every mutation of the artifact — an upsert
 # batch, a delete batch, a compaction swap — appends a checksummed
@@ -560,9 +667,13 @@ def list_orphans(path: str) -> list[str]:
                 orphans.append(full)
         elif epoch_dir and (name.startswith("step_")
                             or name.startswith("group_")
-                            or name.startswith("packed_index.group")):
+                            or name.startswith("packed_index.group")
+                            or name in (ROUTING, ROUTING_DIR)):
             # the pre-compaction epoch's body at the root, superseded
-            # by the epoch_dir pointer
+            # by the epoch_dir pointer — including its routing sidecar
+            # (the live epoch_dir carries its own rebuilt table; a
+            # stale root table left behind could otherwise be mistaken
+            # for the live one)
             orphans.append(full)
         elif os.path.isdir(full):
             for sub in sorted(os.listdir(full)):

@@ -424,8 +424,24 @@ class Compactor:
             placement = placement.rebalance_repack(
                 [b.nbytes() for b in new_index.buckets])
         edirname = index_io._epoch_dirname(new_epoch)
-        index_io.save_index(os.path.join(path, edirname), new_index,
-                            placement=placement)
+        epoch_path = os.path.join(path, edirname)
+        index_io.save_index(epoch_path, new_index, placement=placement)
+        if index_io.has_routing(path):
+            # The live epoch serves routed: rebuild the candidate-
+            # routing sidecar for the compacted bucket set with the
+            # same build parameters, INSIDE the new epoch dir — the
+            # compact intent's rollback (rmtree of the epoch dir)
+            # covers it, and the root-manifest swap below publishes
+            # index + routing atomically.  A stale table could
+            # route around freshly compacted docs, which is why
+            # RoutingIndex.validate_for pins tables to epochs.
+            from repro.serve.routing import RoutingIndex
+            old = index_io.load_routing(path)
+            index_io.save_routing(
+                epoch_path,
+                RoutingIndex.build(new_index,
+                                   n_centroids=old.n_centroids,
+                                   iters=old.iters, seed=old.seed))
         _crash(self.crash, "compact-body")
         with open(os.path.join(path, edirname, index_io.MANIFEST)) as f:
             inner = json.load(f)

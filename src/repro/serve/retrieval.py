@@ -427,7 +427,7 @@ class MutationView:
 
 
 def _topk_search_local(index, q_embs, q_masks, k, *, backend, plan,
-                       mutation=None, delta_plans=()):
+                       mutation=None, delta_plans=(), real_cap=None):
     leaves = [(index, plan, 0)]
     if mutation is not None:
         leaves += [(d, dp, li + 1) for li, (d, dp)
@@ -453,8 +453,13 @@ def _topk_search_local(index, q_embs, q_masks, k, *, backend, plan,
     # Zero-doc buckets contribute (-inf, -1) sentinel columns; the cap
     # at the view's real doc count (live docs under mutation — stale
     # and tombstoned candidates sit at -inf) keeps them out of the
-    # output.
-    real = _real_docs(index) if mutation is None else mutation.n_live
+    # output.  ``real_cap`` overrides for routed bucket views, whose
+    # candidate pool is the selected buckets (plus delta leaves), not
+    # the corpus.
+    if real_cap is not None:
+        real = real_cap
+    else:
+        real = _real_docs(index) if mutation is None else mutation.n_live
     return _merge_topk(vals, ids, min(k, real, vals.shape[1]))
 
 
@@ -722,7 +727,8 @@ def _serving_assignment(placement: PlacementPlan, buckets, live, tried):
 
 def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
                       n_groups, placement, block_docs, block_q,
-                      chunk_docs, monitor=None, faults=None):
+                      chunk_docs, monitor=None, faults=None,
+                      selected=None, route_stats=None):
     """The grid merge tree: every host group reduces its own buckets to
     a ``(n_q, w)`` candidate block (:func:`topk_search_group`, one
     shard_map over the group's device row), the blocks are exchanged —
@@ -756,7 +762,16 @@ def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
     instead.  The per-group programs ARE jitted, cached on the index
     object per (group, buckets, query shape, k, backend, placement,
     mesh) so repeated query batches pay tracing once, like the
-    server's closure cache."""
+    server's closure cache.
+
+    ``selected`` (the candidate router's bucket shortlist,
+    serve/routing.py) restricts the whole tree to those buckets: the
+    router runs BEFORE group dispatch, each selected bucket is served
+    by the first replica of its chain, and a group owning no selected
+    bucket is never dispatched, never fault-checked, and never counts
+    against coverage — "not consulted" is not "failed".
+    ``route_stats`` (a dict) receives the consulted-group exchange
+    count."""
     if isinstance(q_embs, jax.core.Tracer):
         raise ValueError(
             "grid-placed topk_search performs a cross-group candidate "
@@ -778,23 +793,44 @@ def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
         # group serves every bucket replica it stores; dispatch all
         # programs first (disjoint device rows — JAX async dispatch
         # overlaps them), then collect.  An injected fault without a
-        # monitor propagates loudly.
-        fns = [_grid_program(index, cache_args, g, None)
-               for g in range(n_groups)]
+        # monitor propagates loudly.  A routed call instead dispatches
+        # ONLY the groups owning selected buckets (one copy per
+        # bucket: the first replica of its chain), so pruned groups
+        # see no dispatch, no exchange, and no fault checks.
+        if selected is None:
+            dispatch = {g: None for g in range(n_groups)}
+        else:
+            per: dict = {}
+            for b in selected:
+                per.setdefault(placement.replicas_of(b)[0], []).append(b)
+            dispatch = {g: tuple(bs) for g, bs in sorted(per.items())}
+        fns = {g: _grid_program(index, cache_args, g, bs)
+               for g, bs in dispatch.items()}
         if faults is not None:
-            for g in range(n_groups):
+            for g in dispatch:
                 faults.check(g, "dispatch")
-        blocks = [fn(q_embs, q_masks) for fn in fns]
+        blocks = {g: fn(q_embs, q_masks) for g, fn in fns.items()}
         vals, ids = [], []
-        for g, (i, v) in enumerate(blocks):
+        for g, (i, v) in blocks.items():
             if faults is not None:
                 faults.check(g, "exchange")
             ids.append(jnp.asarray(jax.device_get(i)))
             vals.append(jnp.asarray(jax.device_get(v)))
-        merge = (_merge_topk if placement.replicas == 1
-                 else _merge_topk_unique)
+        if selected is None:
+            merge = (_merge_topk if placement.replicas == 1
+                     else _merge_topk_unique)
+            cap = min(k, n_docs)
+        else:
+            # Each selected bucket was served exactly once, so ids are
+            # already unique; the cap is the selected candidate pool.
+            merge = _merge_topk
+            cap = min(k, sum(index.buckets[b].n_docs for b in selected)
+                      if isinstance(index, PackedIndex) else n_docs)
+            if route_stats is not None:
+                route_stats.update(groups_consulted=len(dispatch),
+                                   n_groups=n_groups)
         i, v = merge(jnp.concatenate(vals, axis=1),
-                     jnp.concatenate(ids, axis=1), min(k, n_docs))
+                     jnp.concatenate(ids, axis=1), cap)
         return TopKResult(i, v, 1.0)
 
     def attempt(group, bucket_ids):
@@ -836,18 +872,25 @@ def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
         return None
 
     weights = bucket_weights(index)
-    all_buckets = range(placement.n_buckets)
+    # A routed call's universe is the selected buckets: a pruned
+    # bucket's group is "not consulted" — it is neither dispatched nor
+    # counted in the coverage denominator, and its death cannot degrade
+    # a result that never needed it.
+    all_buckets = (range(placement.n_buckets) if selected is None
+                   else selected)
     tried = {b: set() for b in all_buckets}
     pending, lost = _serving_assignment(placement, all_buckets,
                                         monitor.live(), tried)
     answered: list = []
     blocks = []
+    consulted: set = set()
     failover = 0
     while pending:
         failed: list = []
         for g, bs in pending.items():
             for b in bs:
                 tried[b].add(g)
+            consulted.add(g)
             block = attempt(g, bs)
             if block is None:
                 failed.extend(bs)
@@ -863,8 +906,11 @@ def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
             time.sleep(monitor.backoff(failover))
             failover += 1
 
-    coverage = (sum(weights[b] for b in answered)
-                / max(sum(weights), 1))
+    if selected is not None and route_stats is not None:
+        route_stats.update(groups_consulted=len(consulted),
+                           n_groups=n_groups)
+    denom = sum(weights[b] for b in all_buckets)
+    coverage = sum(weights[b] for b in answered) / max(denom, 1)
     if isinstance(index, PackedIndex):
         live_docs = sum(index.buckets[b].n_docs for b in answered)
     else:
@@ -884,13 +930,126 @@ def _topk_search_grid(index, q_embs, q_masks, k, *, backend, mesh,
     return TopKResult(i, v, coverage)
 
 
+def _topk_search_routed(index, q_embs, q_masks, k, *, backend, route,
+                        routing, n_probe, route_threshold, route_stats,
+                        gmesh, n_groups, placement, mesh, axes, n_shards,
+                        block_docs, block_q, chunk_docs, monitor, faults,
+                        mutation):
+    """The candidate-routing tier in front of the merge tree
+    (serve/routing.py; see :func:`topk_search` for the contract).
+
+    Selection is host-side: the centroid pass runs on device in one
+    fused-MaxSim sweep, the (n_q, n_buckets) score/bound matrices come
+    back to the host (they are router-sized, never corpus-sized), and
+    the shortlist masks buckets out of every downstream path BEFORE
+    any slab is scored — under a grid placement this happens before
+    group dispatch, so a fully-pruned group is never consulted."""
+    import numpy as np
+
+    from repro.serve import routing as routing_lib
+
+    if route not in routing_lib.ROUTES:
+        raise ValueError(f"route={route!r} not in {routing_lib.ROUTES}")
+    if routing is None:
+        raise ValueError(
+            f"route={route!r} needs a routing table — build one with "
+            "serve.routing.RoutingIndex.build(index) or load the "
+            "persisted sidecar (serve.index_io.load_routing)")
+    if isinstance(q_embs, jax.core.Tracer):
+        raise ValueError(
+            "routed topk_search selects candidate buckets host-side "
+            "(like the grid exchange) and cannot be traced under an "
+            "enclosing jit; call it eagerly (RetrievalServer does this "
+            "automatically for routed modes)")
+    routing.validate_for(index)
+    if n_probe is not None and n_probe < 1:
+        raise ValueError(f"n_probe must be >= 1, got {n_probe}")
+    n_q, l = q_embs.shape[:2]
+    dim = q_embs.shape[-1]
+    probe = 1 if n_probe is None else int(n_probe)
+
+    s, u = routing_lib.centroid_scores(routing, q_embs, q_masks,
+                                       backend=backend)
+    s_host = np.asarray(jax.device_get(s))
+    u_host = np.asarray(jax.device_get(u))
+
+    delta_real = (sum(_real_docs(d) for d in mutation.deltas)
+                  if mutation is not None else 0)
+
+    def run(bucket_ids, stats=None):
+        if gmesh is not None:
+            return _topk_search_grid(
+                index, q_embs, q_masks, k, backend=backend, mesh=gmesh,
+                n_groups=n_groups, placement=placement,
+                block_docs=block_docs, block_q=block_q,
+                chunk_docs=chunk_docs, monitor=monitor, faults=faults,
+                selected=tuple(bucket_ids), route_stats=stats)
+        view = _bucket_view(index, tuple(bucket_ids))
+        plan = _streaming_plan(view, n_q, l, dim, k, n_shards=n_shards,
+                               block_docs=block_docs, block_q=block_q,
+                               chunk_docs=chunk_docs)
+        if mesh is not None and n_shards > 1:
+            i, v = _topk_search_sharded(view, q_embs, q_masks, k,
+                                        backend=backend, plan=plan,
+                                        mesh=mesh, axes=axes,
+                                        n_shards=n_shards)
+            # The sharded root merge caps at the corpus size; a routed
+            # view can hold fewer candidates, and the surplus columns
+            # would be (-inf, pad-id) sentinels.
+            cap = min(k, _real_docs(view))
+            return i[:, :cap], v[:, :cap]
+        delta_plans = ()
+        if mutation is not None:
+            delta_plans = tuple(
+                _streaming_plan(d, n_q, l, dim, k, n_shards=1,
+                                block_docs=block_docs, block_q=block_q,
+                                chunk_docs=chunk_docs)
+                for d in mutation.deltas)
+        real_cap = _real_docs(view) + delta_real
+        if mutation is not None:
+            real_cap = min(real_cap, mutation.n_live)
+        return _topk_search_local(view, q_embs, q_masks, k,
+                                  backend=backend, plan=plan,
+                                  mutation=mutation,
+                                  delta_plans=delta_plans,
+                                  real_cap=real_cap)
+
+    if route == "nprobe":
+        selected, _ = routing_lib.select_nprobe(s_host, probe,
+                                                route_threshold)
+    else:               # bounded: seed search -> admissible-bound filter
+        seeds, _ = routing_lib.select_nprobe(s_host, probe)
+        seed_out = run(seeds)
+        sv = np.asarray(jax.device_get(seed_out[1]))
+        # tau is each query's current k-th best — a valid pruning bar
+        # only when the seeds actually produced k candidates; -inf
+        # (select everything) otherwise.  A -inf entry at column k-1
+        # (seed pool narrower than k finite docs) degrades to -inf
+        # per query by itself.
+        tau = (sv[:, k - 1] if sv.shape[1] >= k
+               else np.full((sv.shape[0],), -np.inf, np.float32))
+        selected = routing_lib.select_bounded(u_host, tau, seeds)
+
+    out = run(selected, stats=route_stats)
+    if route_stats is not None:
+        nb = routing.n_buckets
+        route_stats.update(route=route, n_buckets=nb,
+                           buckets_scored=len(selected),
+                           fraction=len(selected) / max(nb, 1))
+    return out
+
+
 def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
                 k: int = 10, q_masks: jnp.ndarray | None = None,
                 backend: str | None = None, block_docs: int | None = None,
                 block_q: int | None = None, chunk_docs: int | None = None,
                 placement: PlacementPlan | None = None,
                 monitor=None, faults=None,
-                mutation: MutationView | None = None):
+                mutation: MutationView | None = None,
+                route: str = "exhaustive", routing=None,
+                n_probe: int | None = None,
+                route_threshold: float | None = None,
+                route_stats: dict | None = None):
     """Streaming exact top-k MaxSim: ``(top_idx, top_scores)``, each
     (n_q, k), identical — ids and fp scores — to ``lax.top_k`` over
     :func:`maxsim_scores`, without ever holding an (n_q, n_docs) score
@@ -929,6 +1088,27 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     and compacted locally, then the compacted epoch redeploys to the
     grid); combining it with a candidates mesh or grid placement
     raises.
+
+    ``route`` is the candidate-routing tier (serve/routing.py;
+    DESIGN_BACKENDS.md §Candidate routing): ``"exhaustive"`` (default)
+    sweeps every bucket as before; ``"nprobe"``/``"bounded"`` score
+    ``routing`` (a :class:`~repro.serve.routing.RoutingIndex` built
+    for THIS index epoch — a stale table refuses loudly) against the
+    queries first and restrict the whole merge tree — local, sharded,
+    or grid — to the shortlisted buckets.  ``"nprobe"`` keeps each
+    query's ``n_probe`` best centroid-MaxSim buckets (optionally
+    trimmed by the ``route_threshold`` score gap); ``"bounded"`` runs
+    a seed search over the ``n_probe`` most-promising buckets and
+    keeps every bucket whose admissible upper bound still reaches some
+    query's k-th seed score — exact, bit-identical ids and scores to
+    the exhaustive sweep.  Routed selection is host-side (like the
+    grid exchange) so routed calls cannot be traced under an enclosing
+    jit.  Under ``mutation`` the routed base is joined by ALL delta
+    leaves, scored exhaustively — a routing table built at the base
+    epoch knows nothing about fresh upserts, so delta docs are never
+    route-pruned.  ``route_stats`` (a dict) receives the measured
+    pruning: buckets scored vs. total, and consulted host groups under
+    a grid.
     """
     backend = backend_lib.resolve_backend(backend, allow=backend_lib.SERVING)
     n_q, l = q_embs.shape[:2]
@@ -950,6 +1130,17 @@ def topk_search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
             "single-process: compact the delta log "
             "(serve.mutation.Compactor) before serving under a "
             "candidates mesh or grid placement")
+    if route != "exhaustive":
+        return _topk_search_routed(
+            index, q_embs, q_masks, k, backend=backend, route=route,
+            routing=routing, n_probe=n_probe,
+            route_threshold=route_threshold, route_stats=route_stats,
+            gmesh=gmesh, n_groups=n_groups,
+            placement=placement if placement is not None
+            else rules_placement,
+            mesh=mesh, axes=axes, n_shards=n_shards,
+            block_docs=block_docs, block_q=block_q, chunk_docs=chunk_docs,
+            monitor=monitor, faults=faults, mutation=mutation)
     if gmesh is not None:
         return _topk_search_grid(
             index, q_embs, q_masks, k, backend=backend, mesh=gmesh,
@@ -1037,7 +1228,11 @@ def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
            return_full: bool = True,
            placement: PlacementPlan | None = None,
            monitor=None, faults=None,
-           mutation: MutationView | None = None):
+           mutation: MutationView | None = None,
+           route: str = "exhaustive", routing=None,
+           n_probe: int | None = None,
+           route_threshold: float | None = None,
+           route_stats: dict | None = None):
     """Two-stage (or e2e) retrieval.
 
     ``return_full=True`` (the metrics/benchmark contract) returns
@@ -1065,13 +1260,26 @@ def search(index: TokenIndex | PackedIndex, q_embs: jnp.ndarray, *,
     if mutation is not None and return_full:
         raise ValueError("mutation serving is streaming-only; "
                          "return_full=False required")
+    if route != "exhaustive":
+        if return_full:
+            raise ValueError("routed serving is streaming-only; "
+                             "return_full=False required")
+        if not (end_to_end or n_first >= n_docs):
+            raise ValueError(
+                "candidate routing applies to the streaming e2e route "
+                "only (the two-stage pooled first stage is its own "
+                "shortlist); pass end_to_end=True")
     if end_to_end or n_first >= n_docs:
         if not return_full:
             return topk_search(index, q_embs, k=k, q_masks=q_masks,
                                backend=backend, block_docs=block_docs,
                                block_q=block_q, chunk_docs=chunk_docs,
                                placement=placement, monitor=monitor,
-                               faults=faults, mutation=mutation)
+                               faults=faults, mutation=mutation,
+                               route=route, routing=routing,
+                               n_probe=n_probe,
+                               route_threshold=route_threshold,
+                               route_stats=route_stats)
         scores = maxsim_scores(index, q_embs, q_masks, backend=backend,
                                block_docs=block_docs, block_q=block_q)
         scores = constrain(scores, "batch", "candidates")
@@ -1152,11 +1360,26 @@ class RetrievalServer:
                  chunk_docs: int | None = None,
                  max_cached_closures: int = 32,
                  monitor=None, on_group_loss: str = "degrade",
-                 faults=None):
+                 faults=None, route: str = "exhaustive", routing=None,
+                 n_probe: int | None = None,
+                 route_threshold: float | None = None):
         if on_group_loss not in ("degrade", "rebalance", "fail"):
             raise ValueError(
                 f"on_group_loss={on_group_loss!r} not in "
                 "('degrade', 'rebalance', 'fail')")
+        from repro.serve import routing as routing_lib
+        if route not in routing_lib.ROUTES:
+            raise ValueError(
+                f"route={route!r} not in {routing_lib.ROUTES}")
+        if route != "exhaustive":
+            if routing is None:
+                raise ValueError(
+                    f"route={route!r} needs a routing table "
+                    "(serve.routing.RoutingIndex.build or "
+                    "index_io.load_routing)")
+            routing.validate_for(index)   # stale/mismatched: fail at ctor
+            if n_probe is not None and n_probe < 1:
+                raise ValueError(f"n_probe must be >= 1, got {n_probe}")
         self.index = index
         self.k = k
         self.n_first = n_first
@@ -1165,6 +1388,10 @@ class RetrievalServer:
         self.monitor = monitor
         self.on_group_loss = on_group_loss
         self.faults = faults
+        self.route = route
+        self.routing = routing
+        self.n_probe = n_probe
+        self.route_threshold = route_threshold
         self._block_docs = block_docs
         self._block_q = block_q
         self._chunk_docs = chunk_docs
@@ -1184,13 +1411,28 @@ class RetrievalServer:
     def _run(index, q, **kw):
         return search(index, q, return_full=False, **kw)
 
-    def swap_index(self, index, *, mutation=None):
+    def swap_index(self, index, *, mutation=None, routing=None):
         """Switch serving to a new index epoch (the compaction swap).
         Drops every cached closure — programs compiled over the old
         epoch's arrays can never answer a post-swap query, even if the
         new index coincidentally shares shapes (the generation counter
-        keys the cache too, so a stale entry cannot collide)."""
+        keys the cache too, so a stale entry cannot collide).
+
+        Under a routed mode the swap must bring the new epoch's
+        routing table along (the Compactor rebuilds the sidecar per
+        epoch): the old table is stale by definition and
+        ``validate_for`` refuses it here rather than on the first
+        query."""
+        if self.route != "exhaustive":
+            if routing is None:
+                raise ValueError(
+                    f"route={self.route!r}: swap_index needs the new "
+                    "epoch's routing table (index_io.load_routing — "
+                    "the Compactor rebuilds it beside each epoch)")
+            routing.validate_for(index)
         self.index = index
+        if routing is not None:
+            self.routing = routing
         self._mutation = mutation
         self._generation += 1
         self._mutation_gen += 1
@@ -1302,7 +1544,9 @@ class RetrievalServer:
         key = q_embs.shape[:2] + (mesh, axes, gmesh, n_groups, placement,
                                   self._placement,
                                   getattr(self.index, "epoch", 0),
-                                  self._generation, self._mutation_gen)
+                                  self._generation, self._mutation_gen,
+                                  self.route, self.n_probe,
+                                  self.route_threshold)
         fn = self._search.get(key)
         if fn is None:
             self._warm_index()
@@ -1310,18 +1554,23 @@ class RetrievalServer:
             n_docs = (self.index.n_docs
                       if isinstance(self.index, PackedIndex)
                       else self.index.d_masks.shape[0])
+            routed = self.route != "exhaustive"
             fn = functools.partial(
                 self._run, self.index, k=self.k, n_first=self.n_first,
                 backend=self.backend, block_docs=self._block_docs,
                 block_q=self._block_q, chunk_docs=self._chunk_docs,
                 placement=self._placement, monitor=self.monitor,
                 faults=self.faults, mutation=self._mutation,
-                end_to_end=self._mutation is not None)
-            if gmesh is None or self.n_first < n_docs:
+                end_to_end=self._mutation is not None or routed,
+                route=self.route, routing=self.routing,
+                n_probe=self.n_probe,
+                route_threshold=self.route_threshold)
+            if (gmesh is None or self.n_first < n_docs) and not routed:
                 # Grid-placed e2e serving stays an eager composition of
                 # per-group compiled programs (the cross-group candidate
-                # exchange cannot live inside one jit); everything else
-                # jits whole as before.
+                # exchange cannot live inside one jit), and routed
+                # modes select their bucket shortlist host-side — both
+                # stay eager; everything else jits whole as before.
                 fn = jax.jit(fn)
             self._search[key] = fn
             if len(self._search) > self._max_cached:

@@ -1,0 +1,317 @@
+"""Voronoi-as-IVF candidate routing: centroid-scored bucket pruning.
+
+The paper's Voronoi cell structure is an inverted-file geometry: each
+:class:`~repro.serve.index.PackedIndex` capacity bucket is a cell
+population whose kept token embeddings can be summarized by a small
+k-means centroid table, and a query can be *routed* — scored against
+the centroids first, then dispatched only to the buckets that can
+still reach its top-k — instead of sweeping every bucket exhaustively
+(the ColBERTv2/PLAID candidate-generation move; PAPERS.md).
+
+:class:`RoutingIndex` holds, per bucket, ``n_centroids`` centroids
+from a jit-compiled Lloyd's run (deterministic seeded init, safe for
+degenerate buckets: fewer tokens than centroids, all-empty buckets)
+plus the bucket's max residual norm ``r_b = max_x ||x - c(x)||`` over
+kept tokens ``x`` and their nearest centroid ``c(x)``.  The whole
+table is laid out as ONE extra bucket shape — ``(n_buckets,
+n_centroids, dim)`` embeddings + a centroid validity mask — so the
+query-time router scores it through the ordinary per-backend MaxSim
+scorers (the fused ``colbert_maxsim`` kernels included) in a single
+pass, and the autotuner keys it like any bucket
+(``backend.tuned_routing_blocks``).
+
+Two routed modes consume the table (``topk_search(route=...)``):
+
+* ``"nprobe"`` — fast route: each query keeps its ``n_probe``
+  best-centroid-scoring buckets (optionally trimmed further by a score
+  ``threshold`` gap off the per-query best); recall is monotone
+  non-decreasing in ``n_probe`` and exactly 1.0 at ``n_probe =
+  n_buckets`` (property-tested).
+* ``"bounded"`` — provable route: by Cauchy-Schwarz, any token ``x``
+  of bucket ``b`` satisfies ``q_t . x <= q_t . c(x) + ||q_t|| r_b <=
+  max_c q_t . c + ||q_t|| r_b``, so ``U_b(q) = S_b(q) +
+  r_b * sum_t ||q_t||`` (``S_b`` the centroid MaxSim, the sum over
+  unmasked query tokens) upper-bounds every document score in the
+  bucket.  Seed buckets are scored exactly, their k-th best score is
+  the pruning bar ``tau``, and every bucket with ``U_b >= tau`` stays
+  — documents in the pruned buckets score strictly below the k-th
+  best, so the routed top-k is bit-identical to the exhaustive one.
+  With centroids = the points themselves ``r_b = 0`` and the bound is
+  tight (tested).
+
+The comparison carries a small fp ``BOUND_SLACK`` so kernel-order
+rounding between the centroid pass and the document pass can only ever
+*add* candidate buckets, never drop a reachable one.
+
+Delta-log leaves (live mutation serving) always bypass routing — they
+are small and a routing table built for the base epoch knows nothing
+about freshly upserted docs; ``topk_search`` scores them exhaustively
+beside the routed base (see serve/retrieval.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as backend_lib
+from repro.serve.index import PackedIndex
+
+__all__ = ["ROUTES", "RoutingIndex", "centroid_scores", "select_bounded",
+           "select_nprobe"]
+
+ROUTES = ("exhaustive", "bounded", "nprobe")
+
+# Relative fp slack on the bounded-route comparison U >= tau: the
+# centroid pass and the document pass may associate their dot-product
+# accumulations differently (different block shapes through the same
+# kernels), so an on-paper-admissible bound can undershoot by ulps.
+# The slack only ever ADDS buckets to the candidate set — exactness
+# and recall cannot be hurt by it, only the pruning fraction.
+BOUND_SLACK = 1e-4
+
+
+def _pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _lloyd(points, mask, k: int, iters: int, key):
+    """One bucket's k-means split: ``points`` (P, dim) with validity
+    ``mask`` (P,) — pad rows are masked out of every statistic.
+
+    Init is a seeded random choice of ``k`` distinct valid points
+    (top-k of seeded priorities, invalid points at -inf), so the split
+    is deterministic per (bucket contents, seed).  With fewer valid
+    points than ``k`` the surplus centroids are marked invalid in the
+    returned centroid mask and excluded from both assignment and the
+    query-time MaxSim (their init rows are whatever pad they landed
+    on).  An empty cluster keeps its previous centroid.
+
+    Returns (centroids (k, dim), centroid mask (k,), max residual
+    norm to the nearest *valid* centroid over valid points — 0.0 for
+    an empty bucket).
+    """
+    pri = jnp.where(mask, jax.random.uniform(key, mask.shape), -jnp.inf)
+    top_pri, init_idx = jax.lax.top_k(pri, k)
+    cmask = top_pri > -jnp.inf                       # surplus -> invalid
+    cent0 = points[init_idx]
+
+    def dist2(cent):
+        d2 = ((points[:, None, :] - cent[None, :, :]) ** 2).sum(-1)
+        return jnp.where(cmask[None, :], d2, jnp.inf)
+
+    def step(cent, _):
+        assign = jnp.argmin(dist2(cent), axis=1)
+        onehot = (assign[:, None] == jnp.arange(k)[None, :]) & mask[:, None]
+        counts = onehot.sum(0)
+        sums = onehot.astype(points.dtype).T @ points
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts, 1)[:, None], cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent0, None, length=iters)
+    nearest = jnp.where(mask, dist2(cent).min(axis=1), 0.0)
+    nearest = jnp.where(jnp.isfinite(nearest), nearest, 0.0)
+    radius = jnp.sqrt(jnp.maximum(nearest.max(), 0.0))
+    return cent, cmask, radius
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingIndex:
+    """Per-bucket centroid tables + residual radii for one
+    :class:`PackedIndex` epoch.
+
+    ``centroids`` (n_buckets, n_centroids, dim) and ``cmask``
+    (n_buckets, n_centroids) form ONE doc-array-shaped table the
+    ordinary MaxSim scorers consume (each bucket plays the role of a
+    document, each centroid of a token); ``radius`` (n_buckets,) is
+    the max residual norm feeding the bounded route's upper bound.
+    ``epoch`` pins the table to the base-index epoch it was built
+    from — serving refuses a table whose epoch disagrees with the
+    index (a stale table could route around live data)."""
+
+    n_centroids: int
+    iters: int
+    seed: int
+    epoch: int
+    centroids: jnp.ndarray
+    cmask: jnp.ndarray
+    radius: jnp.ndarray
+
+    @property
+    def n_buckets(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[-1]
+
+    @classmethod
+    def build(cls, index: PackedIndex, *, n_centroids: int = 4,
+              iters: int = 8, seed: int = 0) -> "RoutingIndex":
+        """K-means-split every capacity bucket's kept token embeddings.
+
+        The per-bucket Lloyd's runs are jitted with the token count
+        padded to a power of two, so ragged buckets share compiled
+        programs.  Deterministic: same index contents + seed, same
+        table."""
+        if not isinstance(index, PackedIndex):
+            raise TypeError(
+                "RoutingIndex.build needs a PackedIndex (candidate "
+                "routing prunes capacity buckets; pack the corpus "
+                "first)")
+        if n_centroids < 1:
+            raise ValueError(f"n_centroids must be >= 1, got {n_centroids}")
+        dim = index.dim
+        cents, cmasks, radii = [], [], []
+        for bi, b in enumerate(index.buckets):
+            embs = np.asarray(jax.device_get(b.dense_embs(dim)),
+                              np.float32).reshape(-1, dim)
+            mask = np.asarray(jax.device_get(b.masks), bool).reshape(-1)
+            kept = int(mask.sum())
+            pad = max(_pow2_at_least(max(kept, n_centroids, 1)),
+                      n_centroids)
+            pts = np.zeros((pad, dim), np.float32)
+            pm = np.zeros((pad,), bool)
+            if kept:
+                pts[:kept] = embs[mask]
+                pm[:kept] = True
+            c, cm, r = _lloyd(jnp.asarray(pts), jnp.asarray(pm),
+                              n_centroids, iters,
+                              jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                 bi))
+            cents.append(c)
+            cmasks.append(cm)
+            radii.append(r)
+        if cents:
+            centroids = jnp.stack(cents)
+            cmask = jnp.stack(cmasks)
+            radius = jnp.stack(radii)
+        else:
+            centroids = jnp.zeros((0, n_centroids, dim), jnp.float32)
+            cmask = jnp.zeros((0, n_centroids), bool)
+            radius = jnp.zeros((0,), jnp.float32)
+        return cls(n_centroids=n_centroids, iters=iters, seed=seed,
+                   epoch=index.epoch, centroids=centroids, cmask=cmask,
+                   radius=radius)
+
+    def validate_for(self, index: PackedIndex) -> "RoutingIndex":
+        """Refuse to route an index this table was not built for — a
+        stale table (old epoch, different bucket layout) could prune
+        buckets holding live documents."""
+        if not isinstance(index, PackedIndex):
+            raise ValueError(
+                "candidate routing needs a PackedIndex (the dense "
+                "TokenIndex has no capacity buckets to prune)")
+        if self.n_buckets != len(index.buckets):
+            raise ValueError(
+                f"routing table covers {self.n_buckets} buckets, the "
+                f"index has {len(index.buckets)} — rebuild the table "
+                "(RoutingIndex.build) for this index")
+        if self.epoch != index.epoch:
+            raise ValueError(
+                f"routing table was built for epoch {self.epoch}, the "
+                f"index is at epoch {index.epoch} — a stale table "
+                "could hide live documents; rebuild it (the Compactor "
+                "rebuilds the sidecar per epoch)")
+        return self
+
+    # -- persistence glue (serve.index_io sidecar) ---------------------
+
+    def body_tree(self) -> dict:
+        """The pytree the checkpoint layer serializes."""
+        return {"centroids": self.centroids, "cmask": self.cmask,
+                "radius": self.radius}
+
+    def meta(self) -> dict:
+        return {"n_centroids": self.n_centroids, "iters": self.iters,
+                "seed": self.seed, "epoch": self.epoch,
+                "n_buckets": self.n_buckets, "dim": self.dim}
+
+    @classmethod
+    def from_parts(cls, meta: dict, tree: dict) -> "RoutingIndex":
+        return cls(n_centroids=int(meta["n_centroids"]),
+                   iters=int(meta["iters"]), seed=int(meta["seed"]),
+                   epoch=int(meta["epoch"]),
+                   centroids=jnp.asarray(tree["centroids"], jnp.float32),
+                   cmask=jnp.asarray(tree["cmask"], bool),
+                   radius=jnp.asarray(tree["radius"], jnp.float32))
+
+
+def centroid_scores(routing: RoutingIndex, q_embs, q_masks=None, *,
+                    backend: str | None = None,
+                    block_docs: int | None = None,
+                    block_q: int | None = None):
+    """The router's single fused pass: ``(S, U)``, each
+    ``(n_q, n_buckets)``.
+
+    ``S`` is the centroid MaxSim — the table scored through the same
+    per-backend scorers as any capacity bucket (``_score_block``:
+    reference einsum or the fused ``colbert_maxsim`` kernels), with
+    chunking knobs resolved by the routing-keyed autotuner entry.
+    ``U = S + radius * sum_t ||q_t||`` is the bounded route's
+    admissible per-bucket upper bound (masked query tokens contribute
+    0 to both terms, mirroring the MaxSim convention)."""
+    from repro.serve.retrieval import _score_block
+
+    backend = backend_lib.resolve_backend(backend,
+                                          allow=backend_lib.SERVING)
+    if backend == backend_lib.FUSED:
+        block_docs, block_q = backend_lib.tuned_routing_blocks(
+            q_embs.shape[0], routing.n_buckets, routing.n_centroids,
+            q_embs.shape[1], routing.dim, block_docs=block_docs,
+            block_q=block_q)
+    s = _score_block(routing.centroids, routing.cmask, q_embs, q_masks,
+                     backend=backend, block_docs=block_docs,
+                     block_q=block_q)
+    qn = jnp.linalg.norm(q_embs, axis=-1)            # (n_q, l)
+    if q_masks is not None:
+        qn = jnp.where(q_masks, qn, 0.0)
+    u = s + qn.sum(-1, keepdims=True) * routing.radius[None, :]
+    return s, u
+
+
+def select_nprobe(scores, n_probe: int, threshold: float | None = None):
+    """The fast route's bucket shortlist from host-side centroid
+    scores (n_q, n_buckets): each query keeps its ``n_probe``
+    best-scoring buckets; ``threshold`` additionally drops buckets
+    scoring more than that gap below the query's best bucket (the
+    best bucket itself always survives).  Returns (union tuple of
+    bucket ids in ascending order, per-query keep mask)."""
+    scores = np.asarray(scores)
+    n_q, n_buckets = scores.shape
+    if n_probe < 1:
+        raise ValueError(f"n_probe must be >= 1, got {n_probe}")
+    n_probe = min(n_probe, n_buckets)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :n_probe]
+    keep = np.zeros_like(scores, bool)
+    np.put_along_axis(keep, order, True, axis=1)
+    if threshold is not None:
+        best = scores.max(axis=1, keepdims=True)
+        keep &= scores >= best - float(threshold)
+    selected = tuple(int(b) for b in np.flatnonzero(keep.any(axis=0)))
+    return selected, keep
+
+
+def select_bounded(bounds, tau, seeds=()):
+    """The provable route's bucket shortlist: every bucket whose upper
+    bound can still reach some query's current k-th best score
+    (``tau``, per query; -inf when the seed set held fewer than k
+    docs), plus the exactly-scored ``seeds`` themselves.  The fp
+    slack only ever widens the set."""
+    bounds = np.asarray(bounds)
+    tau = np.asarray(tau).reshape(-1, 1)
+    slack = BOUND_SLACK * (1.0 + np.abs(tau))
+    slack = np.where(np.isfinite(tau), slack, 0.0)
+    bar = np.where(np.isfinite(tau), tau - slack, tau)
+    keep = (bounds >= bar).any(axis=0)
+    sel = set(int(b) for b in np.flatnonzero(keep)) | set(seeds)
+    return tuple(sorted(sel))

@@ -532,6 +532,103 @@ def check_failover_server():
     print("GRID_FAILOVER_SERVER_OK")
 
 
+def check_routed_serving():
+    """Candidate routing under the grid: the router runs BEFORE group
+    dispatch, so a fully-pruned host group is *not consulted* — no
+    group program, no exchange, no fault bookkeeping — rather than
+    "failed".
+
+    * bounded route: bit-identical ids AND fp scores against the
+      single-host exhaustive oracle across the placement sweep,
+      replicated plans included (each selected bucket is served by the
+      first replica of its chain, so the merge sees unique ids);
+    * nprobe route with concentrated queries: consults a strict subset
+      of host groups (``groups_consulted`` recorded), and killing a
+      never-consulted group is invisible — same answer, no demotion.
+    """
+    _require_devices()
+    from repro.core import metrics
+    from repro.serve import health
+    from repro.serve.retrieval import TokenIndex, topk_search
+    from repro.serve.routing import RoutingIndex
+    from repro.sharding import PlacementPlan, axis_rules, serve_rules
+
+    mesh = _grid_mesh()
+    # clustered corpus with kept-token count tied to the cluster, so
+    # capacity buckets carry content structure the router can exploit
+    # (the shape of tests/test_routing.py's _clustered_corpus)
+    rng = np.random.default_rng(12)
+    n_docs, m, dim, n_clusters = 64, 32, 8, 4
+    centers = rng.normal(size=(n_clusters, dim))
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    lab = np.repeat(np.arange(n_clusters), n_docs // n_clusters)
+    emb = centers[lab][:, None, :] + 0.08 * rng.normal(
+        size=(n_docs, m, dim))
+    emb = (emb / np.linalg.norm(emb, axis=-1, keepdims=True)).astype(
+        np.float32)
+    kept = np.maximum(((lab + 1) * m) // n_clusters, 1)
+    keep = np.arange(m)[None, :] < kept[:, None]
+    packed = TokenIndex.build(
+        jnp.asarray(emb), jnp.ones((n_docs, m), bool)).with_keep(
+            jnp.asarray(keep)).pack()
+    n_buckets = len(packed.buckets)
+    assert n_buckets >= 3, [b.cap for b in packed.buckets]
+    routing = RoutingIndex.build(packed, n_centroids=4)
+    rng2 = np.random.default_rng(13)
+    q = centers[1][None, None, :] + 0.05 * rng2.normal(size=(6, 5, dim))
+    q = jnp.asarray((q / np.linalg.norm(q, axis=-1,
+                                        keepdims=True)).astype(np.float32))
+    k = 5
+    oi, ov = topk_search(packed, q, k=k)
+    oi, ov = np.asarray(oi), np.asarray(ov)
+
+    # --- bounded: bitwise oracle parity across the placement sweep ---
+    plans = _placements(n_buckets) + [
+        ("replicas2", PlacementPlan.for_index(packed, GRID_HOSTS,
+                                              replicas=2))]
+    for pname, plc in plans:
+        st = {}
+        with axis_rules(serve_rules(mesh, placement=plc)):
+            bi, bv = topk_search(packed, q, k=k, route="bounded",
+                                 routing=routing, route_stats=st)
+        ctx = f"bounded/{pname}"
+        np.testing.assert_array_equal(oi, np.asarray(bi), ctx)
+        np.testing.assert_array_equal(ov, np.asarray(bv), ctx)
+        assert 0 < st["groups_consulted"] <= st["n_groups"], (ctx, st)
+        assert st["n_groups"] == GRID_HOSTS, (ctx, st)
+
+    # --- nprobe: strict subset of buckets AND host groups ------------
+    plc = PlacementPlan.round_robin(n_buckets, GRID_HOSTS)
+    st = {}
+    with axis_rules(serve_rules(mesh, placement=plc)):
+        ri, rv = topk_search(packed, q, k=k, route="nprobe",
+                             routing=routing, n_probe=1, route_stats=st)
+    assert st["buckets_scored"] < st["n_buckets"], st
+    assert st["groups_consulted"] < st["n_groups"], st
+    rec = metrics.recall_at_k(np.asarray(ri), oi)
+    assert rec >= 0.99, (rec, st)
+
+    # --- a never-consulted group is invisible to fault handling ------
+    immune = 0
+    for g in range(GRID_HOSTS):
+        mon = health.FleetMonitor(GRID_HOSTS, retries=0, max_strikes=1,
+                                  backoff_base=0.001)
+        faults = health.FaultPlan([health.kill_group(g)])
+        with axis_rules(serve_rules(mesh, placement=plc)):
+            res = topk_search(packed, q, k=k, route="nprobe",
+                              routing=routing, n_probe=1,
+                              monitor=mon, faults=faults)
+        if not mon.demoted:
+            immune += 1
+            np.testing.assert_array_equal(np.asarray(ri),
+                                          np.asarray(res[0]),
+                                          f"immune group {g}")
+            assert res.coverage == 1.0
+    assert immune == GRID_HOSTS - st["groups_consulted"], \
+        (immune, st["groups_consulted"])
+    print("GRID_ROUTED_SERVING_OK")
+
+
 def main():
     _require_devices()
     check_topk_parity()
@@ -540,6 +637,7 @@ def main():
     check_artifact_roundtrip()
     check_fault_tolerance()
     check_failover_server()
+    check_routed_serving()
     print("GRID_CASES_OK")
 
 

@@ -498,3 +498,12 @@ class TestGridDifferential:
         documented."""
         out = _run_grid_case("check_failover_server")
         assert "GRID_FAILOVER_SERVER_OK" in out
+
+    def test_grid_routed_serving(self):
+        """Candidate routing ahead of group dispatch: bounded route is
+        bit-identical to the exhaustive oracle across placements (incl.
+        replicated plans), nprobe consults a strict subset of host
+        groups, and a never-consulted group is invisible to fault
+        handling (not 'failed')."""
+        out = _run_grid_case("check_routed_serving")
+        assert "GRID_ROUTED_SERVING_OK" in out

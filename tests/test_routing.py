@@ -1,0 +1,491 @@
+"""Voronoi-as-IVF candidate routing (repro.serve.routing).
+
+The routing tier prunes whole capacity buckets per query batch before
+any document is scored.  The laws under test:
+
+* build determinism — same (index, seed) -> bit-identical table;
+  degenerate buckets (fewer kept tokens than centroids, zero kept
+  tokens) produce masked centroids, never NaNs;
+* ``recall_at_k`` — the quality metric of the routed result vs the
+  exhaustive oracle (set overlap per query, pad- and empty-safe);
+* nprobe route — recall@k is monotone non-decreasing in ``n_probe``
+  and hits 1.0 at ``n_probe = n_buckets``;
+* bounded route — EXACT by construction wherever the Cauchy–Schwarz
+  bound is admissible (always): routed ids and scores bit-identical to
+  the exhaustive sweep, and with centroids = the points themselves
+  (radius 0, tight bound) the router provably scores a strict subset;
+* mutation interplay — delta leaves are never route-pruned (a freshly
+  upserted global-top-1 doc surfaces under routed serving), and a
+  stale table (older epoch) refuses loudly instead of hiding docs;
+* persistence — sidecar roundtrip, Compactor rebuild per epoch.
+"""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.serve import index_io
+from repro.serve import mutation as mutation_lib
+from repro.serve import routing as routing_lib
+from repro.serve.retrieval import RetrievalServer, TokenIndex, topk_search
+from repro.serve.routing import RoutingIndex
+
+from _proptest import sweep
+
+
+def _clustered_corpus(seed, n_docs=96, m=32, dim=8, n_clusters=4):
+    """Docs drawn around cluster centers with kept-token count tied to
+    the cluster — content correlates with capacity bucket, so routing
+    has real structure to exploit (the adversarial case for routing is
+    content-independent bucketing, covered by the random corpora)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, dim))
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    lab = np.repeat(np.arange(n_clusters), n_docs // n_clusters)
+    lab = np.concatenate([lab, rng.integers(0, n_clusters,
+                                            n_docs - len(lab))])
+    emb = centers[lab][:, None, :] + 0.08 * rng.normal(size=(n_docs, m, dim))
+    emb = (emb / np.linalg.norm(emb, axis=-1, keepdims=True)).astype(
+        np.float32)
+    masks = np.ones((n_docs, m), bool)
+    kept = ((lab + 1) * m) // n_clusters
+    keep = np.arange(m)[None, :] < np.maximum(kept, 1)[:, None]
+    packed = TokenIndex.build(jnp.asarray(emb),
+                              jnp.asarray(masks)).with_keep(
+                                  jnp.asarray(keep)).pack()
+    return packed, centers, lab
+
+
+def _cluster_queries(centers, cluster, n_q=6, l=5, seed=0):
+    rng = np.random.default_rng(seed + 100)
+    dim = centers.shape[1]
+    q = centers[cluster][None, None, :] + 0.05 * rng.normal(
+        size=(n_q, l, dim))
+    q = (q / np.linalg.norm(q, axis=-1, keepdims=True)).astype(np.float32)
+    return jnp.asarray(q)
+
+
+def _random_corpus(seed, n_docs=48, m=12, dim=8):
+    key = jax.random.PRNGKey(seed)
+    d = jax.random.normal(key, (n_docs, m, dim)) * 0.5
+    n_real = jax.random.randint(jax.random.fold_in(key, 1), (n_docs,),
+                                1, m + 1)
+    masks = jnp.arange(m)[None, :] < n_real[:, None]
+    keep = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.6,
+                                (n_docs, m)) & masks
+    keep = keep | (masks & (keep.sum(-1, keepdims=True) == 0))
+    return TokenIndex.build(d, masks).with_keep(keep).pack()
+
+
+def _random_queries(seed, n_q=5, l=4, dim=8):
+    key = jax.random.PRNGKey(seed + 7)
+    q = jax.random.normal(key, (n_q, l, dim))
+    qn = jax.random.randint(jax.random.fold_in(key, 1), (n_q,), 1, l + 1)
+    return q, jnp.arange(l)[None, :] < qn[:, None]
+
+
+class TestRecallAtK:
+    def test_overlap(self):
+        pruned = np.array([[1, 2, 3], [4, 5, 6]])
+        oracle = np.array([[1, 2, 9], [4, 5, 6]])
+        assert metrics.recall_at_k(pruned, oracle) == pytest.approx(5 / 6)
+
+    def test_perfect_and_zero(self):
+        a = np.array([[1, 2], [3, 4]])
+        assert metrics.recall_at_k(a, a) == 1.0
+        assert metrics.recall_at_k(a, a + 10) == 0.0
+
+    def test_order_invariant(self):
+        assert metrics.recall_at_k(np.array([[2, 1]]),
+                                   np.array([[1, 2]])) == 1.0
+
+    def test_negative_ids_are_pads(self):
+        # k > docs: both sides pad with negative sentinel ids, which
+        # must join neither the hit count nor the denominator
+        pruned = np.array([[1, 2, -1, -1]])
+        oracle = np.array([[1, 3, -1, -1]])
+        assert metrics.recall_at_k(pruned, oracle) == pytest.approx(0.5)
+
+    def test_empty_oracle_row_is_full_recall(self):
+        # a query whose oracle found nothing (all docs pruned/deleted)
+        # cannot be "missed" — recall 1.0, not 0/0
+        pruned = np.array([[-1, -1], [1, 2]])
+        oracle = np.array([[-1, -1], [1, 9]])
+        assert metrics.recall_at_k(pruned, oracle) == pytest.approx(0.75)
+
+    def test_fully_empty(self):
+        z = np.zeros((3, 0), np.int64)
+        assert metrics.recall_at_k(z, z) == 1.0
+
+    def test_shape_checks(self):
+        with pytest.raises(ValueError):
+            metrics.recall_at_k(np.zeros(3), np.zeros((1, 3)))
+        with pytest.raises(ValueError):
+            metrics.recall_at_k(np.zeros((2, 3)), np.zeros((3, 3)))
+
+
+class TestBuild:
+    def test_deterministic(self):
+        packed = _random_corpus(0)
+        a = RoutingIndex.build(packed, n_centroids=3, seed=5)
+        b = RoutingIndex.build(packed, n_centroids=3, seed=5)
+        np.testing.assert_array_equal(np.asarray(a.centroids),
+                                      np.asarray(b.centroids))
+        np.testing.assert_array_equal(np.asarray(a.cmask),
+                                      np.asarray(b.cmask))
+        np.testing.assert_array_equal(np.asarray(a.radius),
+                                      np.asarray(b.radius))
+
+    def test_shapes_and_finiteness(self):
+        packed = _random_corpus(1)
+        r = RoutingIndex.build(packed, n_centroids=4)
+        nb = len(packed.buckets)
+        assert r.centroids.shape == (nb, 4, packed.dim)
+        assert r.cmask.shape == (nb, 4) and r.radius.shape == (nb,)
+        assert np.isfinite(np.asarray(r.centroids)).all()
+        assert (np.asarray(r.radius) >= 0).all()
+        assert r.epoch == packed.epoch
+
+    def test_fewer_tokens_than_centroids(self):
+        # one doc, one kept token, many requested centroids: the
+        # surplus centroids must be masked out, not zombie rows that
+        # attract (or repel) queries
+        emb = jnp.ones((1, 2, 4)) / 2.0
+        masks = jnp.array([[True, False]])
+        packed = TokenIndex.build(emb, masks).pack()
+        r = RoutingIndex.build(packed, n_centroids=8)
+        cm = np.asarray(r.cmask)
+        assert cm.sum() == 1, cm
+        assert float(r.radius[0]) == 0.0  # the point is its own centroid
+
+    def test_empty_bucket(self):
+        # every doc pruned empty -> a bucket with zero kept tokens:
+        # all centroids masked, radius 0, and build does not NaN
+        emb = jax.random.normal(jax.random.PRNGKey(0), (3, 4, 4))
+        masks = jnp.ones((3, 4), bool)
+        pruned = TokenIndex.build(emb, masks).with_keep(
+            jnp.zeros((3, 4), bool))
+        packed = pruned.pack()
+        r = RoutingIndex.build(packed, n_centroids=2)
+        assert not np.asarray(r.cmask).any()
+        assert (np.asarray(r.radius) == 0).all()
+        assert np.isfinite(np.asarray(r.centroids)).all()
+
+    def test_rejects_token_index_and_bad_k(self):
+        emb = jnp.ones((2, 3, 4))
+        idx = TokenIndex.build(emb, jnp.ones((2, 3), bool))
+        with pytest.raises(TypeError):
+            RoutingIndex.build(idx)
+        with pytest.raises(ValueError):
+            RoutingIndex.build(idx.pack(), n_centroids=0)
+
+    def test_validate_for(self):
+        packed = _random_corpus(2)
+        r = RoutingIndex.build(packed)
+        r.validate_for(packed)  # matching table passes
+        other = _random_corpus(3, n_docs=16, m=4)
+        if len(other.buckets) != r.n_buckets:
+            with pytest.raises(ValueError):
+                r.validate_for(other)
+        stale = RoutingIndex.from_parts(
+            dict(r.meta(), epoch=r.epoch + 1),
+            {"centroids": r.centroids, "cmask": r.cmask,
+             "radius": r.radius})
+        with pytest.raises(ValueError, match="epoch"):
+            stale.validate_for(packed)
+
+
+class TestNprobeRoute:
+    def test_monotone_and_exact_at_full_width(self):
+        packed, centers, _ = _clustered_corpus(0)
+        routing = RoutingIndex.build(packed, n_centroids=4)
+        nb = routing.n_buckets
+        assert nb >= 3, [b.cap for b in packed.buckets]
+        q = _cluster_queries(centers, 1)
+        oi, _ = topk_search(packed, q, k=5)
+        last = -1.0
+        fracs = []
+        for p in range(1, nb + 1):
+            st = {}
+            ri, _ = topk_search(packed, q, k=5, route="nprobe",
+                                routing=routing, n_probe=p,
+                                route_stats=st)
+            rec = metrics.recall_at_k(np.asarray(ri), np.asarray(oi))
+            assert rec >= last - 1e-12, (p, rec, last)
+            last = rec
+            fracs.append(st["fraction"])
+        assert last == 1.0                     # full width == exhaustive
+        assert fracs[-1] == 1.0
+        assert fracs[0] < 1.0, fracs           # and probe=1 really pruned
+
+    def test_threshold_only_drops_buckets(self):
+        packed, centers, _ = _clustered_corpus(1)
+        routing = RoutingIndex.build(packed, n_centroids=4)
+        q = _cluster_queries(centers, 0)
+        st_wide, st_tight = {}, {}
+        topk_search(packed, q, k=5, route="nprobe", routing=routing,
+                    n_probe=routing.n_buckets, route_stats=st_wide)
+        topk_search(packed, q, k=5, route="nprobe", routing=routing,
+                    n_probe=routing.n_buckets, route_threshold=0.1,
+                    route_stats=st_tight)
+        assert st_tight["buckets_scored"] <= st_wide["buckets_scored"]
+
+    def test_select_nprobe_rejects_zero(self):
+        with pytest.raises(ValueError):
+            routing_lib.select_nprobe(np.zeros((2, 3)), 0)
+
+    @sweep(n_cases=6, seed=1, corpus_seed=[0, 1, 2, 3, 4, 5])
+    def test_monotone_random_corpora(self, corpus_seed):
+        """The monotonicity law on unstructured corpora (bucketing is
+        content-independent here, so pruning may be weak — the LAW must
+        still hold)."""
+        packed = _random_corpus(corpus_seed)
+        routing = RoutingIndex.build(packed, n_centroids=3)
+        q, qm = _random_queries(corpus_seed)
+        oi, _ = topk_search(packed, q, k=4, q_masks=qm)
+        last = -1.0
+        for p in range(1, routing.n_buckets + 1):
+            ri, _ = topk_search(packed, q, k=4, q_masks=qm,
+                                route="nprobe", routing=routing,
+                                n_probe=p)
+            rec = metrics.recall_at_k(np.asarray(ri), np.asarray(oi))
+            assert rec >= last - 1e-12
+            last = rec
+        assert last == 1.0
+
+
+class TestBoundedRoute:
+    @sweep(n_cases=8, seed=2, corpus_seed=[0, 1, 2, 3],
+           k=[3, 7], n_centroids=[2, 4])
+    def test_exact_on_random_corpora(self, corpus_seed, k, n_centroids):
+        """Bounded routing is EXACT wherever the bound is admissible —
+        which is everywhere, by Cauchy–Schwarz.  Bit-identical ids and
+        scores against the exhaustive sweep, any corpus, any k."""
+        packed = _random_corpus(corpus_seed)
+        routing = RoutingIndex.build(packed, n_centroids=n_centroids)
+        q, qm = _random_queries(corpus_seed)
+        oi, ov = topk_search(packed, q, k=k, q_masks=qm)
+        ri, rv = topk_search(packed, q, k=k, q_masks=qm, route="bounded",
+                             routing=routing)
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+
+    def test_tight_bound_prunes_strict_subset(self):
+        """centroids = the points themselves -> radius 0, the bound is
+        tight, and on a clustered corpus the router must BOTH prune
+        (strict subset of buckets scored) and stay exact."""
+        # a tiny corpus so "one centroid per kept token" stays cheap:
+        # cluster 0 docs keep 2 tokens (narrow bucket), cluster 1 docs
+        # keep 9 (wide bucket)
+        rng = np.random.default_rng(3)
+        dim, m = 8, 16
+        centers = rng.normal(size=(2, dim))
+        centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+        lab = np.array([0] * 4 + [1] * 4)
+        emb = centers[lab][:, None, :] + 0.05 * rng.normal(size=(8, m, dim))
+        emb = (emb / np.linalg.norm(emb, axis=-1,
+                                    keepdims=True)).astype(np.float32)
+        keep = np.arange(m)[None, :] < np.where(lab == 0, 2, 9)[:, None]
+        packed = TokenIndex.build(
+            jnp.asarray(emb), jnp.ones((8, m), bool)).with_keep(
+                jnp.asarray(keep)).pack()
+        n_points = max(int(np.asarray(b.masks).sum())
+                       for b in packed.buckets)
+        routing = RoutingIndex.build(packed, n_centroids=n_points)
+        assert (np.asarray(routing.radius) == 0).all(), routing.radius
+        q = _cluster_queries(centers, 0)
+        oi, ov = topk_search(packed, q, k=3)
+        st = {}
+        ri, rv = topk_search(packed, q, k=3, route="bounded",
+                             routing=routing, route_stats=st)
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+        assert st["buckets_scored"] < st["n_buckets"], st
+        assert 0 < st["fraction"] < 1.0
+
+    def test_exact_with_query_masks_and_empty_docs(self):
+        key = jax.random.PRNGKey(9)
+        emb = jax.random.normal(key, (20, 10, 8))
+        masks = jnp.ones((20, 10), bool)
+        keep = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                    (20, 10))
+        keep = keep.at[4].set(False)    # one doc pruned to nothing
+        packed = TokenIndex.build(emb, masks).with_keep(keep).pack()
+        routing = RoutingIndex.build(packed, n_centroids=3)
+        q, qm = _random_queries(9, n_q=4, l=6)
+        oi, ov = topk_search(packed, q, k=6, q_masks=qm)
+        ri, rv = topk_search(packed, q, k=6, q_masks=qm, route="bounded",
+                             routing=routing)
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+
+
+class TestRoutedServing:
+    def test_requires_routing_table(self):
+        packed = _random_corpus(4)
+        q, qm = _random_queries(4)
+        with pytest.raises(ValueError, match="routing"):
+            topk_search(packed, q, k=3, q_masks=qm, route="nprobe")
+
+    def test_unknown_route_rejected(self):
+        packed = _random_corpus(4)
+        q, qm = _random_queries(4)
+        with pytest.raises(ValueError, match="route"):
+            topk_search(packed, q, k=3, q_masks=qm, route="ivf")
+
+    def test_refuses_under_jit(self):
+        packed = _random_corpus(4)
+        routing = RoutingIndex.build(packed)
+        q, qm = _random_queries(4)
+        with pytest.raises(ValueError, match="host-side"):
+            jax.jit(lambda qq: topk_search(packed, qq, k=3,
+                                           route="bounded",
+                                           routing=routing))(q)
+
+    def test_server_routed_matches_eager(self):
+        packed, centers, _ = _clustered_corpus(3)
+        routing = RoutingIndex.build(packed, n_centroids=4)
+        q = _cluster_queries(centers, 2)
+        srv = RetrievalServer(packed, k=4, n_first=packed.n_docs,
+                              route="bounded", routing=routing)
+        si, sv = srv.query_batch(q)
+        oi, ov = topk_search(packed, q, k=4)
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(si))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(sv))
+
+    def test_server_requires_routing(self):
+        packed = _random_corpus(5)
+        with pytest.raises(ValueError, match="routing"):
+            RetrievalServer(packed, k=3, route="nprobe", n_probe=1)
+
+
+class TestMutationInterplay:
+    def test_fresh_upsert_surfaces_under_routed_serving(self, tmp_path):
+        """The regression the delta-leaf bypass exists for: a routing
+        table built BEFORE an upsert knows nothing about the new doc.
+        If delta leaves were route-pruned, a stale shortlist could hide
+        the freshest (here: globally best) document.  Delta leaves are
+        always scored exhaustively, so it must surface at rank 1."""
+        packed, centers, _ = _clustered_corpus(4)
+        routing = RoutingIndex.build(packed, n_centroids=4)
+        d = str(tmp_path / "art")
+        index_io.save_index(d, packed)
+        index_io.save_routing(d, routing)
+        # the upserted doc sits EXACTLY on the query direction: every
+        # query token scores cos=1.0 against it, so its MaxSim is the
+        # provable maximum over unit-vector corpora -> global top-1
+        rng = np.random.default_rng(11)
+        v = rng.normal(size=packed.dim)
+        v = (v / np.linalg.norm(v)).astype(np.float32)
+        q = jnp.asarray(np.broadcast_to(v, (4, 5, packed.dim)).copy())
+        new_doc = np.broadcast_to(v, (1, packed.m, packed.dim)).copy()
+        new_id = packed.n_docs
+        mutation_lib.append_upsert(d, new_doc,
+                                   np.ones((1, packed.m), bool), [new_id])
+        log = mutation_lib.load_state(d)
+        for route, kw in (("bounded", {}), ("nprobe", dict(n_probe=1))):
+            ri, rv = topk_search(log.base, q, k=3, route=route,
+                                 routing=routing, mutation=log.view(),
+                                 **kw)
+            assert (np.asarray(ri)[:, 0] == new_id).all(), (route, ri)
+        # and the routed+mutated result equals the exhaustive one for
+        # the bounded route (exactness extends across the delta merge)
+        oi, ov = topk_search(log.base, q, k=3, mutation=log.view())
+        bi, bv = topk_search(log.base, q, k=3, route="bounded",
+                             routing=routing, mutation=log.view())
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(bi))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(bv))
+
+    def test_stale_table_refuses(self, tmp_path):
+        """A table from epoch N must refuse to route epoch N+1 — the
+        compacted index re-bucketed, and silently reusing the old
+        geometry could hide live documents."""
+        packed = _random_corpus(6)
+        routing = RoutingIndex.build(packed)
+        d = str(tmp_path / "art")
+        index_io.save_index(d, packed)
+        index_io.save_routing(d, routing)
+        mutation_lib.append_delete(d, [0])
+        mutation_lib.Compactor(d).run()
+        new_index = index_io.load_index(d)
+        assert new_index.epoch == packed.epoch + 1
+        q, qm = _random_queries(6)
+        with pytest.raises(ValueError, match="epoch"):
+            topk_search(new_index, q, k=3, q_masks=qm, route="bounded",
+                        routing=routing)
+
+    def test_swap_index_demands_fresh_table(self):
+        packed = _random_corpus(7)
+        routing = RoutingIndex.build(packed)
+        srv = RetrievalServer(packed, k=3, n_first=packed.n_docs,
+                              route="bounded", routing=routing)
+        with pytest.raises(ValueError, match="routing"):
+            srv.swap_index(packed)
+        srv.swap_index(packed, routing=routing)   # fresh table: fine
+
+
+class TestPersistence:
+    def test_sidecar_roundtrip(self, tmp_path):
+        packed = _random_corpus(8)
+        routing = RoutingIndex.build(packed, n_centroids=3, seed=2)
+        d = str(tmp_path / "art")
+        index_io.save_index(d, packed)
+        assert not index_io.has_routing(d)
+        assert index_io.load_routing(d) is None
+        index_io.save_routing(d, routing)
+        assert index_io.has_routing(d)
+        back = index_io.load_routing(d)
+        assert back.meta() == routing.meta()
+        np.testing.assert_array_equal(np.asarray(back.centroids),
+                                      np.asarray(routing.centroids))
+        np.testing.assert_array_equal(np.asarray(back.cmask),
+                                      np.asarray(routing.cmask))
+        np.testing.assert_array_equal(np.asarray(back.radius),
+                                      np.asarray(routing.radius))
+        back.validate_for(index_io.load_index(d))
+
+    def test_compactor_rebuilds_sidecar(self, tmp_path):
+        """Epoch lifecycle: build + persist a table, mutate, compact.
+        The new epoch must carry a REBUILT table (same build params,
+        new epoch stamp) that validates against the new index, and the
+        old root-level sidecar must be swept as an orphan."""
+        packed = _random_corpus(9)
+        d = str(tmp_path / "art")
+        index_io.save_index(d, packed)
+        index_io.save_routing(
+            d, RoutingIndex.build(packed, n_centroids=3, seed=4))
+        mutation_lib.append_delete(d, [1, 2])
+        mutation_lib.Compactor(d).run()
+        new_index = index_io.load_index(d)
+        table = index_io.load_routing(d)
+        assert table is not None
+        assert table.epoch == new_index.epoch == packed.epoch + 1
+        assert table.n_centroids == 3 and table.seed == 4
+        table.validate_for(new_index)            # routed serving works
+        q, qm = _random_queries(9)
+        oi, ov = topk_search(new_index, q, k=3, q_masks=qm)
+        ri, rv = topk_search(new_index, q, k=3, q_masks=qm,
+                             route="bounded", routing=table)
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+        # finish_compact swept the superseded root-level sidecar: the
+        # artifact is clean and only the epoch_dir copy remains
+        assert index_io.list_orphans(d) == []
+        assert not os.path.exists(os.path.join(d, index_io.ROUTING))
+        live = index_io.live_epoch_dir(d)
+        assert live != d
+        assert os.path.exists(os.path.join(live, index_io.ROUTING))
+
+    def test_compactor_without_sidecar_stays_plain(self, tmp_path):
+        packed = _random_corpus(10)
+        d = str(tmp_path / "art")
+        index_io.save_index(d, packed)
+        mutation_lib.append_delete(d, [0])
+        mutation_lib.Compactor(d).run()
+        assert not index_io.has_routing(d)
+        assert index_io.load_routing(d) is None

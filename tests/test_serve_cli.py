@@ -51,6 +51,34 @@ class TestRejects:
         _rejects(["--upsert", "-3", "--index-dir", "x"], ">= 0")
         assert ">= 0" in capsys.readouterr().err
 
+    def test_routed_needs_index_dir(self, capsys):
+        # the routing table is an artifact sidecar; with no artifact
+        # there is nothing to route against
+        for route in ("bounded", "nprobe"):
+            _rejects(["--route", route], "--index-dir")
+            assert "--index-dir" in capsys.readouterr().err
+
+    def test_nprobe_rejects_below_one(self, capsys):
+        _rejects(["--nprobe", "0", "--index-dir", "x"], ">= 1")
+        assert ">= 1" in capsys.readouterr().err
+        _rejects(["--nprobe", "-2", "--route", "nprobe",
+                  "--index-dir", "x"], ">= 1")
+        assert ">= 1" in capsys.readouterr().err
+
+    def test_centroids_reject_below_one(self, capsys):
+        _rejects(["--centroids-per-bucket", "0", "--index-dir", "x"],
+                 ">= 1")
+        assert ">= 1" in capsys.readouterr().err
+
+    def test_unknown_route_rejected(self, capsys):
+        _rejects(["--route", "ivf", "--index-dir", "x"], "choice")
+        assert "invalid choice" in capsys.readouterr().err
+
+    def test_routed_mutation_rejected(self, capsys):
+        _rejects(["--route", "nprobe", "--index-dir", "x",
+                  "--upsert", "2"], "routing table")
+        assert "routing table" in capsys.readouterr().err
+
 
 class TestAccepts:
     def test_defaults(self):
@@ -77,6 +105,25 @@ class TestAccepts:
     def test_delete_trailing_comma_ok(self):
         args = serve.parse_args(["--index-dir", "x", "--delete", "4,"])
         assert args.delete == (4,)
+
+    def test_routed_defaults(self):
+        args = serve.parse_args([])
+        assert args.route == "exhaustive"
+        assert args.nprobe == 1 and args.centroids == 4
+
+    def test_routed_flags(self):
+        args = serve.parse_args(["--route", "nprobe", "--nprobe", "3",
+                                 "--centroids-per-bucket", "8",
+                                 "--index-dir", "/tmp/x"])
+        assert args.route == "nprobe" and args.nprobe == 3
+        assert args.centroids == 8
+
+    def test_bounded_with_grid_mesh_parses(self):
+        # routing composes with grid serving (the router picks the
+        # consulted host groups); no parse-time contradiction
+        args = serve.parse_args(["--route", "bounded", "--index-dir",
+                                 "x", "--mesh", "grid"])
+        assert args.route == "bounded" and args.mesh == "grid"
 
     def test_mutation_with_host_mesh_parses(self):
         # host mesh on one device is single-process; the runtime guard
